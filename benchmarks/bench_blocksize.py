@@ -1,0 +1,50 @@
+"""Paper Table 5: PDX block-size sweep.  Times the L2 scan as a lax.scan
+over (N/V, D, V) partitions for V in {16..1024} against the N-ary kernel.
+On TPU the analogous knob is the lane-tile width (kernels/ops.py v_tile);
+on CPU the sweet spot reflects register/cache pressure as in the paper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distance import nary_distance
+
+from .common import emit, timeit
+
+BLOCKS = [16, 32, 64, 128, 256, 512, 1024]
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _pdx_blocked(tiles: jax.Array, q: jax.Array) -> jax.Array:
+    def body(_, tile):
+        diff = tile - q[:, None]
+        return None, jnp.sum(diff * diff, axis=0)
+
+    _, out = jax.lax.scan(body, None, tiles)
+    return out.reshape(-1)
+
+
+def run(scale: str = "smoke"):
+    n = 16384 if scale == "smoke" else 131072
+    d = 128 if scale == "smoke" else 768
+    rng = np.random.default_rng(1)
+    X = rng.standard_normal((n, d)).astype(np.float32)
+    q = jnp.asarray(rng.standard_normal(d).astype(np.float32))
+    t_nary = timeit(nary_distance, jnp.asarray(X), q, "l2")
+    for V in BLOCKS:
+        tiles = jnp.asarray(
+            X.reshape(n // V, V, d).transpose(0, 2, 1)
+        )  # (P, D, V)
+        t = timeit(_pdx_blocked, tiles, q)
+        emit(
+            f"table5/block{V}", t * 1e6,
+            f"nary_us={t_nary*1e6:.2f};speedup={t_nary/t:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

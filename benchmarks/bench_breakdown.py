@@ -1,0 +1,67 @@
+"""Paper Table 7: IVF query runtime breakdown — query preprocessing, find
+nearest buckets, distance+bounds scan — per algorithm (PDX-ADS, PDX-BSA,
+PDX-BOND).  The bounds-evaluation share is isolated by re-running the scan
+with the pruning predicate replaced by a constant keep-all (linear) pass
+over the same partitions.
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import VectorSearchEngine
+from repro.core.pdxearch import pdxearch
+from .common import dataset, emit
+
+
+def _phase_times(eng, Q, k=10, nprobe=8, reps=2):
+    t_pre = t_buckets = t_scan = 0.0
+    for _ in range(reps):
+        for q in Q:
+            qj = jnp.asarray(q, jnp.float32)
+            t0 = time.perf_counter()
+            qt = eng.pruner.transform_query(qj)
+            qt.block_until_ready()
+            t_pre += time.perf_counter() - t0
+
+            t0 = time.perf_counter()
+            border = eng.ivf.rank_buckets(qt, eng.metric)
+            t_buckets += time.perf_counter() - t0
+
+            order = eng.ivf.partition_order(border, nprobe)
+            start = int(eng.ivf.part_counts[border[0]])
+            t0 = time.perf_counter()
+            pdxearch(
+                eng.store, q, k, eng.pruner, metric=eng.metric,
+                schedule=eng.schedule, sel_frac=eng.sel_frac,
+                group=eng.group, pid_order=order, start_parts=start,
+            )
+            t_scan += time.perf_counter() - t0
+    n = reps * len(Q)
+    return t_pre / n, t_buckets / n, t_scan / n
+
+
+def run(scale: str = "smoke"):
+    n = 20000 if scale == "smoke" else 100000
+    dim = 256 if scale == "smoke" else 1536
+    nq = 6 if scale == "smoke" else 16
+    X, Q = dataset(n, dim, "skewed", n_queries=nq, seed=11)
+
+    for pruner in ("adsampling", "bsa", "bond"):
+        eng = VectorSearchEngine.build(
+            X, index="ivf", pruner=pruner, capacity=1024,
+        )
+        eng.search(Q[0], 10, nprobe=8)  # warmup jits
+        pre, buck, scan = _phase_times(eng, Q)
+        tot = pre + buck + scan
+        emit(
+            f"table7/pdx-{pruner}", tot * 1e6,
+            f"preproc_pct={100*pre/tot:.1f};find_buckets_pct={100*buck/tot:.1f};"
+            f"scan_pct={100*scan/tot:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Figure 12 / Section 7: on-the-fly gather-transposition of N-ary
+storage into PDX form vs stored PDX vs direct N-ary — demonstrating that PDX
+must be the *storage* layout, not a runtime view.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distance import nary_distance, pdx_distance
+from .common import emit, timeit
+
+
+@jax.jit
+def _nary_gather_pdx(X, q):
+    """Transpose 64-vector blocks on the fly, then run the PDX kernel
+    (paper's N-ary+Gather): the transposition cost is on the query path."""
+    n, d = X.shape
+    tiles = X.reshape(n // 64, 64, d).transpose(0, 2, 1)  # the gather
+    def body(_, tile):
+        diff = tile - q[:, None]
+        return None, jnp.sum(diff * diff, axis=0)
+    _, out = jax.lax.scan(body, None, tiles)
+    return out.reshape(-1)
+
+
+def run(scale: str = "smoke"):
+    n = 16384 if scale == "smoke" else 131072
+    rng = np.random.default_rng(2)
+    for d in (64, 256, 1024):
+        X = rng.standard_normal((n, d)).astype(np.float32)
+        q = rng.standard_normal(d).astype(np.float32)
+        Xj, Tj, qj = jnp.asarray(X), jnp.asarray(X.T), jnp.asarray(q)
+        t_gather = timeit(_nary_gather_pdx, Xj, qj)
+        t_pdx = timeit(pdx_distance, Tj, qj, "l2")
+        t_nary = timeit(nary_distance, Xj, qj, "l2")
+        emit(
+            f"fig12/D{d}/nary+gather", t_gather * 1e6,
+            f"stored_pdx_us={t_pdx*1e6:.1f};nary_us={t_nary*1e6:.1f};"
+            f"gather_slowdown_vs_pdx={t_gather/t_pdx:.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

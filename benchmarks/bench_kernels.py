@@ -1,0 +1,50 @@
+"""Paper Table 4: PDX vs N-ary (horizontal) distance kernels across
+dimensionalities, L2/IP/L1.  Both are XLA-autovectorized jnp — the layout is
+the only variable, which is exactly the paper's claim (no intrinsics needed).
+Derived column: speedup of PDX over N-ary.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.distance import nary_distance, pdx_distance
+
+from .common import dataset, emit, timeit
+
+DIMS_FULL = [8, 16, 32, 64, 128, 192, 256, 384, 512, 768, 1024, 1536]
+DIMS_SMOKE = [8, 32, 128, 512, 1536]
+
+
+def run(scale: str = "smoke"):
+    dims = DIMS_SMOKE if scale == "smoke" else DIMS_FULL
+    n = 16384 if scale == "smoke" else 131072
+    rng = np.random.default_rng(0)
+    rows = {}
+    for metric in ("l2", "ip", "l1"):
+        for d in dims:
+            X = rng.standard_normal((n, d)).astype(np.float32)
+            q = rng.standard_normal(d).astype(np.float32)
+            Xj, Tj, qj = jnp.asarray(X), jnp.asarray(X.T), jnp.asarray(q)
+            t_nary = timeit(nary_distance, Xj, qj, metric)
+            t_pdx = timeit(pdx_distance, Tj, qj, metric)
+            sp = t_nary / t_pdx
+            rows[(metric, d)] = sp
+            emit(
+                f"table4/{metric}/D{d}/pdx", t_pdx * 1e6,
+                f"nary_us={t_nary*1e6:.2f};speedup={sp:.2f}",
+            )
+    for metric in ("l2", "ip", "l1"):
+        lo = [v for (m, d), v in rows.items() if m == metric and d <= 32]
+        hi = [v for (m, d), v in rows.items() if m == metric and d > 32]
+        alls = [v for (m, d), v in rows.items() if m == metric]
+        emit(
+            f"table4/{metric}/summary", 0.0,
+            f"geomean_speedup_D<=32={np.exp(np.mean(np.log(lo))):.2f};"
+            f"D>32={np.exp(np.mean(np.log(hi))):.2f};"
+            f"all={np.exp(np.mean(np.log(alls))):.2f}",
+        )
+
+
+if __name__ == "__main__":
+    run()

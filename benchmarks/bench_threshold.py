@@ -1,0 +1,44 @@
+"""Paper Figure 10: PRUNE-phase selectivity threshold sweep — speedup of
+PDX-ADS over the PDX linear scan as a function of sel_frac.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import VectorSearchEngine
+from .common import dataset, emit
+
+FRACS = [0.02, 0.05, 0.1, 0.2, 0.4, 0.6]
+
+
+def run(scale: str = "smoke"):
+    n = 20000 if scale == "smoke" else 100000
+    dim = 128 if scale == "smoke" else 768
+    nq = 8 if scale == "smoke" else 24
+    X, Q = dataset(n, dim, "skewed", n_queries=nq, seed=9)
+
+    lin = VectorSearchEngine.build(X, pruner="linear", capacity=1024)
+    lin.search(Q[0], 10)
+    t0 = time.perf_counter()
+    for q in Q:
+        lin.search(q, 10)
+    t_lin = (time.perf_counter() - t0) / len(Q)
+
+    for frac in FRACS:
+        eng = VectorSearchEngine.build(
+            X, pruner="adsampling", capacity=1024, sel_frac=frac,
+        )
+        for q in Q[: min(4, len(Q))]:  # warm capacity-bucket jit variants
+            eng.search(q, 10)
+        t0 = time.perf_counter()
+        for q in Q:
+            eng.search(q, 10)
+        t = (time.perf_counter() - t0) / len(Q)
+        emit(f"fig10/selfrac{frac}", t * 1e6,
+             f"speedup_vs_linear={t_lin/t:.2f}")
+
+
+if __name__ == "__main__":
+    run()

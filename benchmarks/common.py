@@ -1,0 +1,47 @@
+"""Shared benchmark utilities: timing, CSV emission, dataset cache."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+RESULTS: list[tuple[str, float, str]] = []
+
+
+def block(x):
+    for leaf in jax.tree.leaves(x):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+    return x
+
+
+def timeit(fn: Callable, *args, reps: int = 5, warmup: int = 2, **kw) -> float:
+    """Min wall seconds over reps (after warmup)."""
+    for _ in range(warmup):
+        block(fn(*args, **kw))
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        block(fn(*args, **kw))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    """Accumulate + print one CSV row: name,us_per_call,derived."""
+    RESULTS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+_DATASETS: dict = {}
+
+
+def dataset(n: int, dim: int, kind: str, n_queries: int = 16, seed: int = 0):
+    from repro.data.synthetic import make_dataset
+
+    key = (n, dim, kind, n_queries, seed)
+    if key not in _DATASETS:
+        _DATASETS[key] = make_dataset(n, dim, kind, n_queries=n_queries, seed=seed)
+    return _DATASETS[key]

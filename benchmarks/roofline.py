@@ -1,0 +1,135 @@
+"""Roofline analysis from the dry-run artifacts (harness deliverable (g)).
+
+Per (arch x shape x mesh) cell:
+    compute term    = HLO_FLOPs / (chips x 197 TF/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = wire bytes per chip / 50 GB/s/link ICI
+                      (all-reduce payloads x2 for the ring's reduce+broadcast
+                      halves; parsed from the partitioned HLO with while-loop
+                      trip multipliers — see repro.launch.analysis)
+FLOPs/bytes are the loop-aware jaxpr counts (global program); XLA's own
+cost_analysis is recorded alongside but undercounts scan bodies (visits
+while bodies once).  MODEL_FLOPS uses 6·N_active·D (train) / 2·N_active·D
+(inference) and the ratio flags remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+PEAK_FLOPS = 197e12       # bf16 / chip (TPU v5e)
+HBM_BW = 819e9            # B/s / chip
+ICI_BW = 50e9             # B/s / link
+
+AR_FACTOR = 2.0           # ring all-reduce moves ~2x payload per chip
+
+
+def load_records(dirname: str = "results/dryrun") -> list[dict]:
+    recs = []
+    for d, variant in [
+        (dirname, "baseline"),
+        (dirname + "_hints", "optimized"),
+        (dirname + "_pdx", "pdx"),
+    ]:
+        if not os.path.isdir(d):
+            continue
+        for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+            with open(f) as fh:
+                rec = json.load(fh)
+            rec["variant"] = variant
+            recs.append(rec)
+    return recs
+
+
+def roofline_terms(rec: dict) -> dict:
+    chips = rec["n_devices"]
+    jc = rec.get("jaxpr_cost", {})
+    flops = jc.get("flops", 0.0)
+    bytes_ = jc.get("bytes", 0.0)
+    coll = rec.get("collectives", {})
+    cb = coll.get("bytes", {})
+    wire = sum(
+        v * (AR_FACTOR if k == "all-reduce" else 1.0) for k, v in cb.items()
+    )
+    t_compute = flops / (chips * PEAK_FLOPS)
+    t_memory = bytes_ / (chips * HBM_BW)
+    t_coll = wire / ICI_BW  # per-chip program payload over per-chip links
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    # model flops
+    na = rec.get("params_active", 0.0)
+    tokens = rec.get("tokens", 0)
+    mult = 6.0 if rec.get("step") == "train" else 2.0
+    model_flops = mult * na * tokens
+    bound = max(terms.values()) or 1.0
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops": model_flops,
+        "hlo_flops": flops,
+        "useful_ratio": (model_flops / flops) if flops else 0.0,
+        "roofline_fraction": t_compute / bound,
+        "mfu_bound": model_flops / (chips * PEAK_FLOPS * bound) if bound else 0.0,
+        "peak_bytes_per_dev": rec.get("memory", {}).get("peak_memory_in_bytes"),
+    }
+
+
+SUGGEST = {
+    "compute": "compute-bound: raise MFU via larger per-chip tiles or fewer "
+               "remat recomputes",
+    "memory": "HBM-bound: fuse elementwise chains / cast activations to bf16 "
+              "/ shrink the working set per step",
+    "collective": "ICI-bound: overlap collectives with compute, shard to cut "
+                  "payloads (reduce-scatter grads), or compress gradients",
+}
+
+
+def run(scale: str = "smoke", dirname: str = "results/dryrun"):
+    from .common import emit
+
+    recs = load_records(dirname)
+    if not recs:
+        print("roofline: no dry-run records found (run scripts/run_dryruns.sh)")
+        return
+    rows = []
+    for rec in recs:
+        name = (f"roofline/{rec.get('variant','baseline')}/"
+                f"{rec['arch']}/{rec['shape']}/{rec['mesh']}")
+        if rec.get("status") == "skipped":
+            if rec.get("variant") == "baseline":
+                emit(name, 0.0, f"skipped:{rec.get('reason','')[:60]}")
+            continue
+        if rec.get("status") != "ok":
+            emit(name, 0.0, f"error:{rec.get('error','')[:60]}")
+            continue
+        t = roofline_terms(rec)
+        rows.append((rec, t))
+        emit(
+            name, t["compute_s"] * 1e6,
+            f"mem_s={t['memory_s']:.2e};coll_s={t['collective_s']:.2e};"
+            f"dominant={t['dominant']};useful={t['useful_ratio']:.2f};"
+            f"frac={t['roofline_fraction']:.2f}",
+        )
+    # write the markdown table for EXPERIMENTS.md
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline_table.md", "w") as f:
+        f.write("| arch | shape | mesh | variant | compute s | memory s "
+                "| collective s | dominant | MODEL/HLO | roofline frac "
+                "| next move |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|---|\n")
+        for rec, t in rows:
+            f.write(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+                f"| {rec.get('variant','baseline')} "
+                f"| {t['compute_s']:.3e} | {t['memory_s']:.3e} "
+                f"| {t['collective_s']:.3e} | {t['dominant']} "
+                f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.2f} "
+                f"| {SUGGEST[t['dominant']][:58]} |\n"
+            )
+    print("roofline: wrote results/roofline_table.md")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+    PYTHONPATH=src python -m benchmarks.run              # smoke scale
+    PYTHONPATH=src python -m benchmarks.run --scale paper
+    PYTHONPATH=src python -m benchmarks.run --only fig9,table4
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("table4", "benchmarks.bench_kernels"),
+    ("table5", "benchmarks.bench_blocksize"),
+    ("fig6", "benchmarks.bench_ivf_ads"),
+    ("fig7", "benchmarks.bench_adaptive"),
+    ("fig8+table2_6", "benchmarks.bench_bond"),
+    ("fig9", "benchmarks.bench_exact"),
+    ("fig10", "benchmarks.bench_threshold"),
+    ("table7", "benchmarks.bench_breakdown"),
+    ("fig12", "benchmarks.bench_gather"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact keys (e.g. fig9,table4)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key, modname in MODULES:
+        if only and not any(o in key for o in only):
+            continue
+        t0 = time.time()
+        print(f"# === {key} ({modname}) ===", flush=True)
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            mod.run(scale=args.scale)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# {key} FAILED:\n{traceback.format_exc()}", file=sys.stderr)
+        print(f"# === {key} done in {time.time()-t0:.1f}s ===", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

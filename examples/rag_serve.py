@@ -1,0 +1,44 @@
+"""Serve a small model with batched requests + PDX retrieval (the paper's
+technique as the retrieval substrate of an LLM pipeline).
+
+    PYTHONPATH=src python examples/rag_serve.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.lm import build_model
+from repro.serve.engine import GenerationEngine
+from repro.serve.rag import RagPipeline
+
+
+def main():
+    cfg = get_config("gemma-2b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = GenerationEngine(model=model, params=params, cache_len=128)
+
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, cfg.vocab, (128, 16)).astype(np.int32)
+    rag = RagPipeline.build(eng, docs, pruner="adsampling", retrieve_k=2)
+
+    # batched requests
+    batch = {"tokens": rng.integers(0, cfg.vocab, (8, 12)).astype(np.int32)}
+    t0 = time.perf_counter()
+    out, doc_ids = rag.answer(batch, max_new_tokens=12)
+    dt = time.perf_counter() - t0
+    print(f"answered 8 requests in {dt*1e3:.0f} ms "
+          f"({8*12/dt:.0f} tok/s incl. retrieval)")
+    print("retrieved:", doc_ids[:, 0].tolist())
+    print("generations shape:", out.shape)
+
+    # sanity: identical query retrieves its own doc
+    probe = {"tokens": docs[3:4, :12]}
+    ids = rag.retrieve(probe)
+    print("self-retrieval check:", "OK" if ids[0, 0] == 3 else f"got {ids[0]}")
+
+
+if __name__ == "__main__":
+    main()

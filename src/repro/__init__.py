@@ -1,0 +1,11 @@
+"""repro — production-grade JAX framework reproducing and extending
+
+   PDX: A Data Layout for Vector Similarity Search (SIGMOD 2025).
+
+Public API:
+    repro.core.engine.VectorSearchEngine   — exact/IVF search w/ dimension pruning
+    repro.configs                          — assigned architecture registry
+    repro.launch                           — mesh / dryrun / train / serve drivers
+"""
+
+__version__ = "1.0.0"

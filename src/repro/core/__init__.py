@@ -1,0 +1,15 @@
+"""The paper's primary contribution: the PDX layout + PDXearch + pruners.
+
+Public API: VectorSearchEngine (engine.py) wraps everything; the pieces
+(layout, distance kernels, pruning predicates, search phases) are importable
+individually for composition and testing.
+"""
+from .engine import SearchStats, VectorSearchEngine  # noqa: F401
+from .layout import PDXStore, build_bucketed_store, build_flat_store  # noqa: F401
+from .pdxearch import pdxearch, pdxearch_jit, search_batch_matmul  # noqa: F401
+from .pruners import (  # noqa: F401
+    make_adsampling,
+    make_bond,
+    make_bsa,
+    make_plain_pruner,
+)

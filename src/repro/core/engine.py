@@ -1,0 +1,169 @@
+"""VectorSearchEngine — the framework's public vector-search API.
+
+Combines layout + index + pruner + PDXearch into the object a service embeds
+(cf. the paper's open-source C++/Python PDX library).  NumPy in, NumPy out.
+
+    eng = VectorSearchEngine.build(X, index="ivf", pruner="adsampling")
+    ids, dists = eng.search(q, k=10, nprobe=16)
+    ids, dists = eng.search_batch(Q, k=10)          # MXU batched path
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..index.ivf import IVFIndex, build_ivf
+from .layout import PDXStore, build_flat_store
+from .pdxearch import (
+    SearchStats,
+    pdxearch,
+    pdxearch_jit,
+    search_batch_matmul,
+)
+from .pruners import (
+    Pruner,
+    make_adsampling,
+    make_bond,
+    make_bond_decreasing,
+    make_bsa,
+    make_plain_pruner,
+)
+
+__all__ = ["VectorSearchEngine", "SearchStats"]
+
+PRUNERS = ("linear", "adsampling", "bsa", "bond", "bond-decreasing")
+
+
+def _make_pruner(
+    name: str,
+    X: np.ndarray,
+    *,
+    eps0: float,
+    bsa_m: float,
+    zone_size: int,
+    seed: int,
+) -> Pruner:
+    if name == "linear":
+        return make_plain_pruner()
+    if name == "adsampling":
+        return make_adsampling(X.shape[1], eps0=eps0, seed=seed)
+    if name == "bsa":
+        sample = X[: min(len(X), 65536)]
+        return make_bsa(sample, m=bsa_m, seed=seed)
+    if name == "bond":
+        return make_bond(jnp.asarray(X.mean(axis=0)), zone_size=zone_size)
+    if name == "bond-decreasing":
+        return make_bond_decreasing(X.shape[1])
+    raise ValueError(f"pruner must be one of {PRUNERS}, got {name!r}")
+
+
+@dataclasses.dataclass
+class VectorSearchEngine:
+    store: PDXStore
+    pruner: Pruner
+    metric: str
+    ivf: Optional[IVFIndex] = None
+    schedule: str = "adaptive"
+    delta_d: int = 32
+    sel_frac: float = 0.2
+    group: int = 8
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        X: np.ndarray,
+        *,
+        metric: str = "l2",
+        index: str = "flat",
+        pruner: str = "adsampling",
+        capacity: int = 1024,
+        nlist: Optional[int] = None,
+        eps0: float = 2.1,
+        bsa_m: float = 3.0,
+        zone_size: int = 0,
+        schedule: str = "adaptive",
+        delta_d: int = 32,
+        sel_frac: float = 0.2,
+        group: int = 8,
+        kmeans_iters: int = 10,
+        seed: int = 0,
+        precomputed_ivf=None,
+    ) -> "VectorSearchEngine":
+        X = np.ascontiguousarray(np.asarray(X, np.float32))
+        pr = _make_pruner(
+            pruner, X, eps0=eps0, bsa_m=bsa_m, zone_size=zone_size, seed=seed
+        )
+        Xt = pr.preprocess(X) if pr.needs_preprocess else X
+        ivf = None
+        if index == "ivf":
+            nlist = nlist or max(int(np.sqrt(len(X))), 1)
+            ivf = build_ivf(
+                Xt, nlist, capacity=capacity, kmeans_iters=kmeans_iters,
+                seed=seed, precomputed=precomputed_ivf,
+            )
+            store = ivf.store
+        elif index == "flat":
+            store = build_flat_store(Xt, capacity=capacity)
+        else:
+            raise ValueError(f"index must be 'flat' or 'ivf', got {index!r}")
+        return cls(
+            store=store, pruner=pr, metric=metric, ivf=ivf,
+            schedule=schedule, delta_d=delta_d, sel_frac=sel_frac, group=group,
+        )
+
+    # ----------------------------------------------------------------- search
+    def search(
+        self,
+        q: np.ndarray,
+        k: int = 10,
+        *,
+        nprobe: int = 8,
+        stats: Optional[SearchStats] = None,
+    ) -> tuple[np.ndarray, np.ndarray]:
+        q = jnp.asarray(q, jnp.float32)
+        if self.ivf is not None:
+            res = self.ivf.search(
+                q, k, self.pruner, nprobe=nprobe, metric=self.metric,
+                schedule=self.schedule, delta_d=self.delta_d,
+                sel_frac=self.sel_frac, group=self.group, stats=stats,
+            )
+        else:
+            res = pdxearch(
+                self.store, q, k, self.pruner, metric=self.metric,
+                schedule=self.schedule, delta_d=self.delta_d,
+                sel_frac=self.sel_frac, group=self.group, stats=stats,
+            )
+        return np.asarray(res.ids), np.asarray(res.dists)
+
+    def search_jit(self, q: np.ndarray, k: int = 10):
+        """Shape-static masked variant (repro.dist uses this form)."""
+        res = pdxearch_jit(
+            self.store, jnp.asarray(q, jnp.float32), k, self.pruner,
+            metric=self.metric, schedule=self.schedule, delta_d=self.delta_d,
+        )
+        return np.asarray(res.ids), np.asarray(res.dists)
+
+    def search_batch(self, Q: np.ndarray, k: int = 10):
+        """Beyond-paper batched exact scan (MXU matmul form). Queries must be
+        pre-transformed only by isometries, so this uses raw coordinates when
+        the pruner is a projection (results are identical either way)."""
+        Qj = jnp.asarray(Q, jnp.float32)
+        if self.pruner.needs_preprocess:
+            Qj = jnp.stack([self.pruner.transform_query(r) for r in Qj])
+        res = search_batch_matmul(
+            self.store.data, self.store.ids, Qj, k, self.metric
+        )
+        return np.asarray(res.ids), np.asarray(res.dists)
+
+    # ------------------------------------------------------------------ util
+    @property
+    def num_vectors(self) -> int:
+        return self.store.num_vectors
+
+    @property
+    def dim(self) -> int:
+        return self.store.dim

@@ -1,0 +1,399 @@
+"""PDXearch — the paper's three-phase dimension-by-dimension pruned search.
+
+Execution modes:
+
+* ``pdxearch`` (adaptive, host-orchestrated):  faithful to the paper's
+  Section 4 algorithm — START linear-scans the first partition to seed the
+  top-k threshold; WARMUP streams dimension slices in exponentially growing
+  steps evaluating the pruning predicate branchlessly on *all* vectors; once
+  the surviving fraction drops below ``sel_frac`` (paper: 20%), PRUNE
+  compacts survivor columns (capacity rounded to a power of two to bound
+  recompilation) and finishes only those.  Real work reduction, measurable
+  on CPU; on TPU the compaction is a lane gather and skipped dimension
+  slices are skipped HBM→VMEM DMAs.
+
+* ``pdxearch_jit`` (fully jitted, masked): the same semantics with pruning
+  expressed as masks instead of compaction — the shape-static variant used
+  by the distributed search (shard_map) and the dry-run.  Identical results;
+  no data-dependent shapes.
+
+* ``search_batch_matmul``: beyond-paper batched-query path — the PDX tile is
+  already K-major, so the distance matrix is one MXU matmul per tile.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .distance import batched_distance_matmul, pdx_distance
+from .layout import PDXStore
+from .pruners import Pruner
+from .topk import TopK, topk_init, topk_merge, topk_threshold
+
+__all__ = [
+    "SearchStats",
+    "make_boundaries",
+    "pdxearch",
+    "pdxearch_jit",
+    "search_batch_matmul",
+]
+
+_INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass
+class SearchStats:
+    """Work accounting for the paper's pruning-power metric (Tables 2/6)."""
+
+    values_total: float = 0.0     # D * vectors visited
+    values_computed: float = 0.0  # dimension values actually used in DCOs
+    values_avoided: float = 0.0   # paper's pruning power numerator
+    partitions_visited: int = 0
+    prune_phase_entries: int = 0
+
+    @property
+    def pruning_power(self) -> float:
+        if self.values_total == 0:
+            return 0.0
+        return self.values_avoided / self.values_total
+
+    @property
+    def computed_fraction(self) -> float:
+        if self.values_total == 0:
+            return 1.0
+        return self.values_computed / self.values_total
+
+
+def make_boundaries(
+    dim: int, schedule: str = "adaptive", delta_d: int = 32, start: int = 2
+) -> tuple[int, ...]:
+    """Cumulative dimension boundaries at which the predicate is evaluated.
+
+    adaptive (paper's fix for Issue #1): 2, 6, 14, 30, 62, ... doubling steps.
+    fixed (ADSampling/BSA original): delta_d, 2*delta_d, ...
+    """
+    bounds: list[int] = []
+    if schedule == "adaptive":
+        b, step = 0, start
+        while b < dim:
+            b = min(b + step, dim)
+            bounds.append(b)
+            step *= 2
+    elif schedule == "fixed":
+        b = 0
+        while b < dim:
+            b = min(b + delta_d, dim)
+            bounds.append(b)
+    else:
+        raise ValueError(f"unknown schedule {schedule!r}")
+    return tuple(bounds)
+
+
+# --------------------------------------------------------------------------
+# Per-pruner jitted step functions (cached so jax.jit's shape cache is reused
+# across queries; the predicate closure is baked in).
+# --------------------------------------------------------------------------
+_EXEC_CACHE: dict[tuple[int, str], tuple] = {}
+
+
+def _accum_gdc(block: jax.Array, qd: jax.Array, metric: str) -> jax.Array:
+    """(G, d, C), (d,) -> (G, C) partial-distance contribution."""
+    if metric == "l2":
+        diff = block - qd[None, :, None]
+        return jnp.sum(diff * diff, axis=1)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(block - qd[None, :, None]), axis=1)
+    return -jnp.sum(block * qd[None, :, None], axis=1)
+
+
+def _accum_rows(block: jax.Array, qd: jax.Array, metric: str) -> jax.Array:
+    """(cap, d), (d,) -> (cap,)."""
+    if metric == "l2":
+        diff = block - qd[None, :]
+        return jnp.sum(diff * diff, axis=1)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(block - qd[None, :]), axis=1)
+    return -jnp.sum(block * qd[None, :], axis=1)
+
+
+def _get_exec(pruner: Pruner, metric: str):
+    key = (id(pruner), metric)
+    if key in _EXEC_CACHE:
+        return _EXEC_CACHE[key]
+
+    @jax.jit
+    def warmup_step(data, pids, dims, qdims, acc, alive, thr, b):
+        # Gather only the dimension rows of this step for the visited
+        # partitions: (G, d, C).  With a query-aware order (BOND) ``dims`` is
+        # a slice of the permutation; sequential pruners pass an iota.
+        block = data[pids[:, None], dims[None, :], :]
+        acc = acc + _accum_gdc(block, qdims, metric)
+        alive = alive & pruner.keep_mask(acc, b, thr)
+        return acc, alive, alive.sum()
+
+    @jax.jit
+    def prune_step(data, p_sel, c_sel, dims, qdims, acc, alive, thr, b):
+        # Compacted survivors: gather (cap, d) values, vector-major.
+        block = data[p_sel[:, None], dims[None, :], c_sel[:, None]]
+        acc = acc + _accum_rows(block, qdims, metric)
+        alive = alive & pruner.keep_mask(acc, b, thr)
+        return acc, alive
+
+    @functools.partial(jax.jit, static_argnames=("cap",))
+    def compact(alive, acc, gids, cap):
+        flat_alive = alive.reshape(-1)
+        idx = jnp.nonzero(flat_alive, size=cap, fill_value=flat_alive.shape[0])[0]
+        valid = idx < flat_alive.shape[0]
+        idx = jnp.minimum(idx, flat_alive.shape[0] - 1)
+        return (
+            idx,
+            valid,
+            acc.reshape(-1)[idx],
+            jnp.where(valid, gids.reshape(-1)[idx], -1),
+        )
+
+    fns = (warmup_step, prune_step, compact)
+    _EXEC_CACHE[key] = fns
+    return fns
+
+
+@jax.jit
+def _start_scan(data, pids, q):
+    """START phase: full linear scan of the seed partitions (L2-space of the
+    pruner's transformed coordinates; exact because transforms are isometries
+    or the identity)."""
+    tiles = data[pids]  # (S, D, C)
+    diff = tiles - q[None, :, None]
+    return jnp.sum(diff * diff, axis=1)  # (S, C)
+
+
+def _start_scan_metric(data, pids, q, metric):
+    if metric == "l2":
+        return _start_scan(data, pids, q)
+    tiles = data[pids]
+    return jax.vmap(lambda t: pdx_distance(t, q, metric))(tiles)
+
+
+def _pow2_at_least(x: int, lo: int = 64) -> int:
+    # 4x steps: few distinct capacities => few jit variants (compile-count
+    # bounded; a slightly larger compacted gather is cheaper than a recompile)
+    c = lo
+    while c < x:
+        c *= 4
+    return c
+
+
+# --------------------------------------------------------------------------
+# Mode B — adaptive host-orchestrated PDXearch (the paper's algorithm).
+# --------------------------------------------------------------------------
+def pdxearch(
+    store: PDXStore,
+    q: jax.Array,
+    k: int,
+    pruner: Pruner,
+    *,
+    metric: str = "l2",
+    schedule: str = "adaptive",
+    delta_d: int = 32,
+    sel_frac: float = 0.2,
+    group: int = 8,
+    pid_order: Optional[np.ndarray] = None,
+    start_parts: int = 1,
+    stats: Optional[SearchStats] = None,
+) -> TopK:
+    """Search ``store`` for the top-k nearest neighbours of ``q``.
+
+    ``pid_order`` — partition visit order (e.g. IVF bucket ranking); defaults
+    to sequential.  The first ``start_parts`` partitions form the START phase.
+    """
+    if metric == "ip" and not pruner.name == "linear":
+        raise ValueError("pruned PDXearch requires a monotone metric (l2/l1)")
+    D, C = store.dim, store.capacity
+    qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+    perm = pruner.dim_order(qt) if pruner.dim_order is not None else None
+    qp = qt[perm] if perm is not None else qt
+    bounds = make_boundaries(D, schedule, delta_d)
+    warmup_step, prune_step, compact = _get_exec(pruner, metric)
+
+    if pid_order is None:
+        pid_order = np.arange(store.num_partitions)
+    pid_order = np.asarray(pid_order)
+    counts = np.asarray(store.counts)
+
+    state = topk_init(k)
+
+    # -- PHASE 0: START -----------------------------------------------------
+    start_pids = jnp.asarray(pid_order[:start_parts])
+    d0 = _start_scan_metric(store.data, start_pids, qt, metric)
+    state = topk_merge(state, d0.reshape(-1), store.ids[start_pids].reshape(-1))
+    if stats is not None:
+        nvalid = float(counts[pid_order[:start_parts]].sum())
+        stats.values_total += nvalid * D
+        stats.values_computed += nvalid * D
+        stats.partitions_visited += start_parts
+
+    dims_all = perm if perm is not None else jnp.arange(D, dtype=jnp.int32)
+
+    # -- WARMUP / PRUNE over remaining partitions, in groups ----------------
+    rest = pid_order[start_parts:]
+    for lo in range(0, len(rest), group):
+        pids_np = rest[lo : lo + group]
+        pids = jnp.asarray(pids_np)
+        G = len(pids_np)
+        thr = topk_threshold(state)
+        acc = jnp.zeros((G, C), jnp.float32)
+        gids = store.ids[pids]
+        alive = gids >= 0
+        n_valid = float(counts[pids_np].sum())
+        if stats is not None:
+            stats.values_total += n_valid * D
+            stats.partitions_visited += G
+
+        prev = 0
+        cand_d = cand_i = None
+        prev_alive = int(np.asarray(alive.sum()))
+        for b in bounds:
+            dims = jax.lax.dynamic_slice_in_dim(dims_all, prev, b - prev)
+            qdims = jax.lax.dynamic_slice_in_dim(qp, prev, b - prev)
+            acc, alive, n_alive = warmup_step(
+                store.data, pids, dims, qdims, acc, alive,
+                thr, jnp.float32(b),
+            )
+            n_alive = int(n_alive)
+            if stats is not None:
+                stats.values_computed += prev_alive * (b - prev)
+                stats.values_avoided += (prev_alive - n_alive) * (D - b)
+            prev_alive = n_alive
+            prev = b
+            if b < D and n_alive <= sel_frac * max(n_valid, 1.0):
+                # ---- PHASE 2: PRUNE — compact survivors, finish them ------
+                cap = _pow2_at_least(max(n_alive, 1))
+                idx, valid, acc_c, ids_c = compact(alive, acc, gids, cap)
+                p_sel = pids[idx // C]
+                c_sel = idx % C
+                alive_c = valid
+                if stats is not None:
+                    stats.prune_phase_entries += 1
+                pa = n_alive
+                for b2 in bounds:
+                    if b2 <= prev:
+                        continue
+                    dims = jax.lax.dynamic_slice_in_dim(dims_all, prev, b2 - prev)
+                    qdims = jax.lax.dynamic_slice_in_dim(qp, prev, b2 - prev)
+                    acc_c, alive_c = prune_step(
+                        store.data, p_sel, c_sel, dims, qdims, acc_c,
+                        alive_c, thr, jnp.float32(b2),
+                    )
+                    if stats is not None:
+                        na = int(np.asarray(alive_c.sum()))
+                        stats.values_computed += pa * (b2 - prev)
+                        stats.values_avoided += (pa - na) * (D - b2)
+                        pa = na
+                    prev = b2
+                cand_d = jnp.where(alive_c, acc_c, _INF)
+                cand_i = ids_c
+                break
+        if cand_d is None:  # finished WARMUP without entering PRUNE
+            cand_d = jnp.where(alive, acc, _INF).reshape(-1)
+            cand_i = gids.reshape(-1)
+        state = topk_merge(state, cand_d, cand_i)
+    return state
+
+
+# --------------------------------------------------------------------------
+# Mode A — fully jitted masked PDXearch (shape-static; used by repro.dist).
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "bounds", "keep_mask_fn"),
+)
+def _pdxearch_jit_impl(data, ids, q, perm, k, metric, bounds, keep_mask_fn):
+    P, D, C = data.shape
+    dims_all = perm
+    steps = []
+    prev = 0
+    for b in bounds:
+        steps.append((prev, b))
+        prev = b
+
+    def scan_partition(state: TopK, inputs):
+        tile, tids = inputs  # (D, C), (C,)
+        thr = topk_threshold(state)
+        acc = jnp.zeros((C,), jnp.float32)
+        alive = tids >= 0
+        for (d0, d1) in steps:
+            dd = jax.lax.dynamic_slice_in_dim(dims_all, d0, d1 - d0)
+            block = tile[dd, :]  # (d, C)
+            qd = q[dd]
+            if metric == "l2":
+                diff = block - qd[:, None]
+                acc = acc + jnp.sum(diff * diff, axis=0)
+            elif metric == "l1":
+                acc = acc + jnp.sum(jnp.abs(block - qd[:, None]), axis=0)
+            else:
+                acc = acc - jnp.sum(block * qd[:, None], axis=0)
+            alive = alive & keep_mask_fn(acc, jnp.float32(d1), thr)
+        cand = jnp.where(alive, acc, _INF)
+        return topk_merge(state, cand, tids), None
+
+    # START: partition 0 unpruned
+    init = topk_merge(
+        topk_init(k),
+        pdx_distance(data[0], q, metric),
+        ids[0],
+    )
+    state, _ = jax.lax.scan(scan_partition, init, (data[1:], ids[1:]))
+    return state
+
+
+def pdxearch_jit(
+    store: PDXStore,
+    q: jax.Array,
+    k: int,
+    pruner: Pruner,
+    *,
+    metric: str = "l2",
+    schedule: str = "adaptive",
+    delta_d: int = 32,
+) -> TopK:
+    qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+    perm = (
+        pruner.dim_order(qt)
+        if pruner.dim_order is not None
+        else jnp.arange(store.dim, dtype=jnp.int32)
+    )
+    bounds = make_boundaries(store.dim, schedule, delta_d)
+    return _pdxearch_jit_impl(
+        store.data, store.ids, qt, perm, k, metric, bounds, pruner.keep_mask
+    )
+
+
+# --------------------------------------------------------------------------
+# Batched-query MXU path (beyond-paper).
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def search_batch_matmul(
+    data: jax.Array, ids: jax.Array, Q: jax.Array, k: int, metric: str = "l2"
+) -> TopK:
+    """Exact linear scan for a (B, D) query batch over (P, D, C) PDX tiles.
+
+    Each tile is K-major for the (B,D)x(D,C) matmul — the PDX layout *is* the
+    MXU operand layout, no transposition needed (cf. paper Section 7 on the
+    cost of on-the-fly transposition for horizontal storage).
+    """
+    B = Q.shape[0]
+
+    def body(state: TopK, inputs):
+        tile, tids = inputs
+        dmat = batched_distance_matmul(tile, Q, metric)  # (B, C)
+        state = jax.vmap(topk_merge, (0, 0, None))(state, dmat, tids)
+        return state, None
+
+    init = jax.vmap(lambda _: topk_init(k))(jnp.arange(B))
+    state, _ = jax.lax.scan(body, init, (data, ids))
+    return state

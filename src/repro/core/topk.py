@@ -1,0 +1,48 @@
+"""Streaming top-k candidate set — the jit-friendly analogue of the paper's
+max-heap.  State is a fixed-size (k,) pair of (distances, ids), merged with
+candidate batches via lax.top_k; the running threshold (paper: "current best
+k-th exact distance") is ``heap_dists[-1]`` since we keep it sorted ascending.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["TopK", "topk_init", "topk_merge", "topk_threshold"]
+
+INF = jnp.float32(jnp.inf)
+
+
+class TopK(NamedTuple):
+    dists: jax.Array  # (k,) ascending
+    ids: jax.Array    # (k,) int32, -1 = empty slot
+
+
+def topk_init(k: int) -> TopK:
+    return TopK(dists=jnp.full((k,), INF), ids=jnp.full((k,), -1, jnp.int32))
+
+
+@jax.jit
+def topk_merge(state: TopK, cand_dists: jax.Array, cand_ids: jax.Array) -> TopK:
+    """Merge a (m,) candidate batch into the (k,) state. Padded candidates
+    must carry dist=+inf (or id=-1 with huge dist) and are never selected."""
+    k = state.dists.shape[0]
+    # Guard: candidates with id == -1 are padding slots from partial tiles.
+    cand_dists = jnp.where(cand_ids < 0, INF, cand_dists)
+    all_d = jnp.concatenate([state.dists, cand_dists])
+    all_i = jnp.concatenate([state.ids, cand_ids])
+    neg_top, idx = jax.lax.top_k(-all_d, k)
+    return TopK(dists=-neg_top, ids=all_i[idx])
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def topk_from_batch(cand_dists: jax.Array, cand_ids: jax.Array, k: int) -> TopK:
+    return topk_merge(topk_init(k), cand_dists, cand_ids)
+
+
+def topk_threshold(state: TopK) -> jax.Array:
+    """Pruning threshold: worst distance currently in the candidate set."""
+    return state.dists[-1]

@@ -1,0 +1,114 @@
+"""IVF index over PDX-resident buckets (paper Figure 2: buckets ≡ blocks).
+
+Centroids themselves are stored in PDX layout so the find-nearest-buckets
+phase uses the same dimension-major kernels (paper Table 7 note: "centroids
+are also stored with PDX").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.distance import pdx_distance
+from ..core.layout import PDXStore, build_bucketed_store, build_flat_store
+from ..core.pdxearch import SearchStats, pdxearch
+from ..core.pruners import Pruner
+from ..core.topk import TopK
+from .kmeans import kmeans
+
+__all__ = ["IVFIndex", "build_ivf"]
+
+
+@dataclasses.dataclass
+class IVFIndex:
+    store: PDXStore                 # bucket-contiguous PDX partitions
+    centroid_store: PDXStore        # centroids, PDX layout (for bucket ranking)
+    centroids: jax.Array            # (K, D) horizontal copy (k-means updates)
+    part_offsets: np.ndarray        # (K,) first partition id of each bucket
+    part_counts: np.ndarray         # (K,) partitions per bucket
+    nlist: int
+
+    def rank_buckets(self, q: jax.Array, metric: str = "l2") -> np.ndarray:
+        """Distance of q to every centroid -> bucket ids sorted ascending."""
+        dists = []
+        for p in range(self.centroid_store.num_partitions):
+            dists.append(pdx_distance(self.centroid_store.data[p], q, metric))
+        d = jnp.concatenate(dists)[: self.nlist]
+        return np.asarray(jnp.argsort(d))
+
+    def partition_order(self, bucket_order: np.ndarray, nprobe: int) -> np.ndarray:
+        sel = bucket_order[:nprobe]
+        parts = [
+            np.arange(
+                self.part_offsets[b], self.part_offsets[b] + self.part_counts[b]
+            )
+            for b in sel
+        ]
+        return np.concatenate(parts)
+
+    def search(
+        self,
+        q: jax.Array,
+        k: int,
+        pruner: Pruner,
+        *,
+        nprobe: int = 8,
+        metric: str = "l2",
+        schedule: str = "adaptive",
+        delta_d: int = 32,
+        sel_frac: float = 0.2,
+        group: int = 8,
+        stats: Optional[SearchStats] = None,
+    ) -> TopK:
+        qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+        border = self.rank_buckets(qt, metric)
+        order = self.partition_order(border, nprobe)
+        # START = every partition of the nearest bucket (linear scan).
+        start_parts = int(self.part_counts[border[0]])
+        return pdxearch(
+            self.store,
+            q,
+            k,
+            pruner,
+            metric=metric,
+            schedule=schedule,
+            delta_d=delta_d,
+            sel_frac=sel_frac,
+            group=group,
+            pid_order=order,
+            start_parts=start_parts,
+            stats=stats,
+        )
+
+
+def build_ivf(
+    X: np.ndarray,
+    nlist: int,
+    *,
+    capacity: int = 1024,
+    kmeans_iters: int = 10,
+    seed: int = 0,
+    precomputed: Optional[tuple[np.ndarray, np.ndarray]] = None,
+) -> IVFIndex:
+    """Train k-means (or take precomputed (centroids, assignments) so
+    competitors share identical buckets, as the paper does) and pack buckets
+    into PDX partitions."""
+    X = np.asarray(X, np.float32)
+    if precomputed is not None:
+        centroids, assignments = precomputed
+    else:
+        centroids, assignments = kmeans(X, nlist, iters=kmeans_iters, seed=seed)
+    store, offsets, nparts = build_bucketed_store(X, assignments, nlist, capacity)
+    cstore = build_flat_store(centroids, capacity=min(1024, max(64, nlist)))
+    return IVFIndex(
+        store=store,
+        centroid_store=cstore,
+        centroids=jnp.asarray(centroids),
+        part_offsets=offsets,
+        part_counts=nparts,
+        nlist=nlist,
+    )

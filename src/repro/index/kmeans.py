@@ -1,0 +1,72 @@
+"""Lloyd's k-means in JAX — the IVF trainer (paper Section 2.1: FAISS uses a
+non-optimized Lloyd's; we match that contract).  Chunked assignment keeps the
+(N, K) distance matrix out of memory for large N.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["kmeans", "assign"]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _assign_chunked(X: jax.Array, centroids: jax.Array, chunk: int = 16384):
+    n = X.shape[0]
+    cn = jnp.sum(centroids * centroids, axis=1)  # (K,)
+
+    def body(lo, out):
+        xc = jax.lax.dynamic_slice_in_dim(X, lo, chunk)
+        d = (
+            jnp.sum(xc * xc, axis=1, keepdims=True)
+            - 2.0 * (xc @ centroids.T)
+            + cn[None, :]
+        )
+        return jax.lax.dynamic_update_slice_in_dim(out, jnp.argmin(d, 1), lo, 0)
+
+    npad = ((n + chunk - 1) // chunk) * chunk
+    Xp = jnp.pad(X, ((0, npad - n), (0, 0)))
+    out = jnp.zeros((npad,), jnp.int32)
+    out = jax.lax.fori_loop(
+        0, npad // chunk, lambda i, o: body(i * chunk, o), out
+    )
+    return out[:n]
+
+
+def assign(X, centroids, chunk: int = 16384) -> jax.Array:
+    """Nearest-centroid assignment, (N,) int32."""
+    n = X.shape[0]
+    chunk = min(chunk, max(n, 1))
+    return _assign_chunked(jnp.asarray(X), jnp.asarray(centroids), chunk)
+
+
+@jax.jit
+def _update(X: jax.Array, a: jax.Array, centroids: jax.Array):
+    k = centroids.shape[0]
+    sums = jax.ops.segment_sum(X, a, num_segments=k)
+    cnts = jax.ops.segment_sum(jnp.ones((X.shape[0],)), a, num_segments=k)
+    new = sums / jnp.maximum(cnts, 1.0)[:, None]
+    # Empty clusters keep their previous centroid (FAISS behaviour).
+    return jnp.where((cnts > 0)[:, None], new, centroids), cnts
+
+
+def kmeans(
+    X: np.ndarray, k: int, iters: int = 10, seed: int = 0, chunk: int = 16384
+) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (centroids (K, D) float32, assignments (N,) int32)."""
+    X = jnp.asarray(X, jnp.float32)
+    n = X.shape[0]
+    if k > n:
+        raise ValueError(f"k={k} > n={n}")
+    rng = np.random.default_rng(seed)
+    init = jnp.asarray(X[np.sort(rng.choice(n, size=k, replace=False))])
+    centroids = init
+    a = None
+    for _ in range(iters):
+        a = assign(X, centroids, chunk)
+        centroids, _ = _update(X, a, centroids)
+    a = assign(X, centroids, chunk)
+    return np.asarray(centroids), np.asarray(a)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the distance scan.
+
+<name>.py hold pl.pallas_call kernels with explicit BlockSpec VMEM tiling;
+ops.py are the jit'd public wrappers (padding, tile selection); ref.py are
+the pure-jnp oracles every kernel is tested against (interpret=True on CPU).
+"""
+from .ops import (  # noqa: F401
+    batched_distance_op,
+    nary_distance_op,
+    pdx_distance_op,
+    pdx_prune_scan_op,
+)

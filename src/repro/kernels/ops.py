@@ -1,0 +1,86 @@
+"""Jitted public wrappers for the Pallas kernels: shape padding, dtype policy,
+tile-size selection.  Callers use these; the raw kernels stay minimal.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .batched_matmul import batched_distance_pallas
+from .nary_scan import nary_distance_pallas
+from .pdx_scan import pdx_distance_pallas, pdx_prune_scan_pallas
+
+__all__ = [
+    "pdx_distance_op",
+    "nary_distance_op",
+    "batched_distance_op",
+    "pdx_prune_scan_op",
+]
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick(size: int, pref: int, align: int) -> int:
+    """Largest aligned tile <= pref covering `size` if small."""
+    if size <= pref:
+        return max(((size + align - 1) // align) * align, align)
+    return pref
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def pdx_distance_op(T: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
+    """(D, V), (D,) -> (V,); handles non-aligned shapes by zero-padding
+    (zero dims contribute 0 to every metric)."""
+    D, V = T.shape
+    dt = _pick(D, 256, 8)
+    vt = _pick(V, 1024, 128)
+    Tp = _pad_to(_pad_to(T, 0, dt), 1, vt)
+    qp = _pad_to(q, 0, dt)
+    return pdx_distance_pallas(Tp, qp, metric, dt, vt)[:V]
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def nary_distance_op(X: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
+    N, D = X.shape
+    nt = _pick(N, 256, 8)
+    dt = _pick(D, 512, 128)
+    Xp = _pad_to(_pad_to(X, 0, nt), 1, dt)
+    qp = _pad_to(q, 0, dt)
+    return nary_distance_pallas(Xp, qp, metric, nt, dt)[:N]
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def batched_distance_op(T: jax.Array, Q: jax.Array, metric: str = "l2") -> jax.Array:
+    D, V = T.shape
+    B = Q.shape[0]
+    bt = _pick(B, 128, 8)
+    dt = _pick(D, 256, 128)
+    vt = _pick(V, 512, 128)
+    Tp = _pad_to(_pad_to(T, 0, dt), 1, vt)
+    Qp = _pad_to(_pad_to(Q, 1, dt), 0, bt)
+    return batched_distance_pallas(Tp, Qp, metric, bt, dt, vt)[:B, :V]
+
+
+@functools.partial(jax.jit, static_argnames=("eps0", "d_tile"))
+def pdx_prune_scan_op(
+    T: jax.Array, q: jax.Array, thr: jax.Array, eps0: float = 2.1, d_tile: int = 64
+) -> tuple[jax.Array, jax.Array]:
+    """Fused PDXearch/ADSampling partition scan.  Zero-pads both axes; the
+    hypothesis test keeps counting in logical (un-padded) dimensions."""
+    D, V = T.shape
+    vt = _pick(V, 1024, 128)
+    dt = min(d_tile, D)
+    Tp = _pad_to(_pad_to(T, 0, dt), 1, vt)
+    qp = _pad_to(q, 0, dt)
+    dists, alive = pdx_prune_scan_pallas(Tp, qp, thr, eps0, dt, vt, logical_dim=D)
+    return dists[:V], alive[:V]

@@ -1,0 +1,164 @@
+"""Pallas TPU kernels for PDX dimension-major distance scans.
+
+TPU adaptation of the paper's Algorithm 1: the partition tile ``(D, V)`` puts
+vectors on the 128-wide lane axis and dimensions on sublanes, so the running
+``distances`` array is one (or a few) vector registers / a VMEM accumulator —
+exactly the paper's "distances array fits into the available SIMD registers",
+scaled to TPU widths.  There is no horizontal reduction and no dependency
+between lanes (paper Figure 3).
+
+Kernels:
+  * ``pdx_distance_pallas``  — plain distance scan (L2/L1/IP).
+  * ``pdx_prune_scan_pallas`` — fused PDXearch step: distance accumulation +
+    ADSampling hypothesis test per dimension tile, with whole-tile compute
+    skip once every lane is pruned (the PRUNE phase at tile granularity —
+    VPU work is skipped; the HBM→VMEM fetch of later tiles is the remaining
+    cost, hoistable with manual DMA, see DESIGN.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["pdx_distance_pallas", "pdx_prune_scan_pallas"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------------------------
+# Plain PDX distance scan.
+# --------------------------------------------------------------------------
+def _pdx_dist_kernel(q_ref, x_ref, o_ref, *, metric: str, nd: int):
+    i = pl.program_id(1)  # dimension-tile index (innermost => accumulation)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (dt, vt)
+    q = q_ref[...].astype(jnp.float32)  # (dt, 1)
+    if metric == "l2":
+        d = x - q
+        o_ref[...] += jnp.sum(d * d, axis=0, keepdims=True)
+    elif metric == "l1":
+        o_ref[...] += jnp.sum(jnp.abs(x - q), axis=0, keepdims=True)
+    else:  # ip (negated)
+        o_ref[...] += -jnp.sum(x * q, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "d_tile", "v_tile"))
+def pdx_distance_pallas(
+    T: jax.Array,
+    q: jax.Array,
+    metric: str = "l2",
+    d_tile: int = 256,
+    v_tile: int = 1024,
+) -> jax.Array:
+    """(D, V), (D,) -> (V,) float32. Inputs f32 or bf16."""
+    D, V = T.shape
+    d_tile = min(d_tile, D)
+    v_tile = min(v_tile, V)
+    nd = pl.cdiv(D, d_tile)
+    nv = pl.cdiv(V, v_tile)
+    q2 = q.reshape(D, 1)
+    grid = (nv, nd)  # d innermost: each out block accumulates over all d-tiles
+    out = pl.pallas_call(
+        functools.partial(_pdx_dist_kernel, metric=metric, nd=nd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_tile, 1), lambda j, i: (i, 0)),
+            pl.BlockSpec((d_tile, v_tile), lambda j, i: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, v_tile), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, V), jnp.float32),
+        interpret=_interpret(),
+    )(q2, T)
+    return out[0]
+
+
+# --------------------------------------------------------------------------
+# Fused PDXearch + ADSampling partition scan.
+# --------------------------------------------------------------------------
+def _prune_scan_kernel(
+    q_ref, x_ref, thr_ref, o_ref, alive_ref, *, dim: int, d_tile: int, eps0: float
+):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        alive_ref[...] = jnp.ones_like(alive_ref)
+
+    alive = alive_ref[...]
+    any_alive = jnp.sum(alive) > 0.0
+
+    # PRUNE at tile granularity: once every lane in this partition is pruned
+    # the remaining dimension tiles contribute no VPU work at all.
+    @pl.when(any_alive)
+    def _compute():
+        x = x_ref[...].astype(jnp.float32)
+        q = q_ref[...].astype(jnp.float32)
+        d = x - q
+        contrib = jnp.sum(d * d, axis=0, keepdims=True)
+        acc = o_ref[...] + contrib * alive_ref[...]
+        o_ref[...] = acc
+        # ADSampling hypothesis test at d = (i+1)*d_tile dims seen (clipped).
+        d_seen = jnp.minimum((i + 1) * d_tile, dim).astype(jnp.float32)
+        bound = thr_ref[0, 0] * (1.0 + eps0 / jnp.sqrt(d_seen)) ** 2
+        keep = (acc * (dim / d_seen) <= bound).astype(jnp.float32)
+        alive_ref[...] = alive_ref[...] * keep
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps0", "d_tile", "v_tile", "logical_dim")
+)
+def pdx_prune_scan_pallas(
+    T: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    v_tile: int = 1024,
+    logical_dim: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused distance+prune over one partition.
+
+    (D, V), (D,), scalar-thr -> (dists (V,) f32, alive (V,) f32 mask).
+    L2 metric (ADSampling's domain).  ``logical_dim`` is the un-padded D used
+    by the hypothesis test's dims-seen counter (padded dims contribute zero
+    distance but must not inflate the estimator's sample count).
+    """
+    D, V = T.shape
+    d_tile = min(d_tile, D)
+    v_tile = min(v_tile, V)
+    nd = pl.cdiv(D, d_tile)
+    dim_for_test = logical_dim if logical_dim is not None else D
+    q2 = q.reshape(D, 1)
+    thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    grid = (nd,)
+    dists, alive = pl.pallas_call(
+        functools.partial(
+            _prune_scan_kernel, dim=dim_for_test, d_tile=d_tile, eps0=eps0
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((d_tile, V), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, V), lambda i: (0, 0)),
+            pl.BlockSpec((1, V), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1, V), jnp.float32),
+            jax.ShapeDtypeStruct((1, V), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(q2, T, thr2)
+    return dists[0], alive[0]

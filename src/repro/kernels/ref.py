@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` mirrors one kernel's contract exactly (shapes, dtypes,
+accumulation order up to float-reassociation).  Kernel tests sweep shapes and
+dtypes and assert allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "pdx_distance_ref",
+    "nary_distance_ref",
+    "batched_distance_ref",
+    "pdx_prune_scan_ref",
+]
+
+
+def pdx_distance_ref(T: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
+    """(D, V), (D,) -> (V,) float32 accumulation regardless of input dtype."""
+    T32 = T.astype(jnp.float32)
+    q32 = q.astype(jnp.float32)
+    if metric == "l2":
+        d = T32 - q32[:, None]
+        return jnp.sum(d * d, axis=0)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(T32 - q32[:, None]), axis=0)
+    return -jnp.sum(T32 * q32[:, None], axis=0)
+
+
+def nary_distance_ref(X: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
+    """(N, D), (D,) -> (N,)."""
+    X32 = X.astype(jnp.float32)
+    q32 = q.astype(jnp.float32)
+    if metric == "l2":
+        d = X32 - q32[None, :]
+        return jnp.sum(d * d, axis=1)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(X32 - q32[None, :]), axis=1)
+    return -jnp.sum(X32 * q32[None, :], axis=1)
+
+
+def batched_distance_ref(T: jax.Array, Q: jax.Array, metric: str = "l2") -> jax.Array:
+    """(D, V), (B, D) -> (B, V); l2 or ip (matmul family)."""
+    T32 = T.astype(jnp.float32)
+    Q32 = Q.astype(jnp.float32)
+    cross = Q32 @ T32
+    if metric == "ip":
+        return -cross
+    qn = jnp.sum(Q32 * Q32, axis=1, keepdims=True)
+    xn = jnp.sum(T32 * T32, axis=0, keepdims=True)
+    return qn - 2.0 * cross + xn
+
+
+def pdx_prune_scan_ref(
+    T: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    *,
+    d_tile: int,
+    eps0: float,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused PDXearch-ADSampling partition kernel.
+
+    Walks dimension tiles of size ``d_tile``; after each tile evaluates the
+    ADSampling hypothesis test and freezes pruned vectors' accumulators
+    (paper: once pruned, a vector's remaining dims are never visited).
+    Returns (dists (V,), alive (V,) f32 mask); pruned vectors report their
+    partial distance at pruning time.
+    """
+    D, V = T.shape
+    T32 = T.astype(jnp.float32)
+    q32 = q.astype(jnp.float32)
+    acc = jnp.zeros((V,), jnp.float32)
+    alive = jnp.ones((V,), jnp.float32)
+    d_seen = 0
+    while d_seen < D:
+        hi = min(d_seen + d_tile, D)
+        blk = T32[d_seen:hi] - q32[d_seen:hi, None]
+        contrib = jnp.sum(blk * blk, axis=0)
+        acc = acc + contrib * alive  # frozen lanes stay frozen
+        d_seen = hi
+        d = jnp.float32(d_seen)
+        bound = thr * (1.0 + eps0 / jnp.sqrt(d)) ** 2
+        keep = acc * (D / d) <= bound
+        alive = alive * keep.astype(jnp.float32)
+    return acc, alive

@@ -1,0 +1,279 @@
+"""Cost extraction for the roofline analysis.
+
+XLA's HloCostAnalysis visits while-loop bodies ONCE — with scan-over-layers
+models that undercounts FLOPs by ~n_layers.  Two fixes, both exact w.r.t.
+loop structure:
+
+* ``jaxpr_cost``  — walks the step function's jaxpr, counting dot FLOPs and
+  operand/result bytes, multiplying scan bodies by their trip count
+  (recursing through pjit/remat/cond/while).  This is the corrected
+  HLO_FLOPs used in EXPERIMENTS.md §Roofline (XLA barely changes dot counts;
+  remat recompute appears explicitly in the differentiated jaxpr, so the
+  "useful-compute ratio" catches it as intended).
+
+* ``collective_bytes_hlo`` — parses the *partitioned* HLO text, builds the
+  computation call graph, extracts while trip counts from their condition
+  computations, and multiplies collective payload bytes accordingly (an FSDP
+  all-gather inside the layer scan counts n_layers times).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["jaxpr_cost", "collective_bytes_hlo"]
+
+
+# ==========================================================================
+# jaxpr walking
+# ==========================================================================
+def _aval_bytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape) * aval.dtype.itemsize)
+    except Exception:
+        return 0.0
+
+
+def _dot_flops(eqn) -> float:
+    (contract, batch) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    out = eqn.outvars[0].aval
+    k = 1.0
+    for d in contract[0]:
+        k *= lhs.shape[d]
+    return 2.0 * float(np.prod(out.shape)) * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    return 2.0 * float(np.prod(out.shape)) * float(np.prod(rhs.shape[1:]))
+
+
+_ELEMENTWISE = {
+    "add", "sub", "mul", "div", "max", "min", "exp", "log", "tanh",
+    "logistic", "rsqrt", "sqrt", "abs", "neg", "sign", "floor", "pow",
+    "integer_pow", "select_n", "and", "or", "not", "xor", "erf",
+    "cos", "sin",
+}
+
+
+def jaxpr_cost(jaxpr) -> dict[str, float]:
+    """closed jaxpr -> {'flops', 'dot_flops', 'ew_flops', 'bytes'} (global)."""
+
+    def walk(jx, mult: float) -> dict[str, float]:
+        acc = defaultdict(float)
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            if prim == "dot_general":
+                acc["dot_flops"] += mult * _dot_flops(eqn)
+                acc["bytes"] += mult * (
+                    sum(_aval_bytes(v.aval) for v in eqn.invars)
+                    + sum(_aval_bytes(v.aval) for v in eqn.outvars)
+                )
+            elif prim == "conv_general_dilated":
+                acc["dot_flops"] += mult * _conv_flops(eqn)
+            elif prim == "scan":
+                inner = walk(eqn.params["jaxpr"].jaxpr, mult * eqn.params["length"])
+                for k, v in inner.items():
+                    acc[k] += v
+            elif prim == "while":
+                # trip count unknowable in general; bound via cond constants
+                inner = walk(eqn.params["body_jaxpr"].jaxpr, mult)
+                for k, v in inner.items():
+                    acc[k] += v
+                acc["unbounded_while"] += 1
+            elif prim == "cond":
+                branches = [walk(b.jaxpr, mult) for b in eqn.params["branches"]]
+                for k in set().union(*[set(b) for b in branches]):
+                    acc[k] += max(b.get(k, 0.0) for b in branches)
+            elif prim == "shard_map":
+                # body shapes are per-shard: scale to global by the number
+                # of participating devices
+                mesh = eqn.params.get("mesh")
+                manual = eqn.params.get("manual_axes", ())
+                ndev = 1.0
+                if mesh is not None:
+                    for a in manual:
+                        try:
+                            ndev *= mesh.shape[a]
+                        except Exception:
+                            pass
+                sub = eqn.params.get("jaxpr")
+                if sub is not None:
+                    inner = walk(getattr(sub, "jaxpr", sub), mult * ndev)
+                    for k, v in inner.items():
+                        acc[k] += v
+            elif prim in ("pjit", "jit", "closed_call", "core_call",
+                          "remat_call", "remat", "remat2", "custom_jvp_call",
+                          "custom_vjp_call", "custom_vjp_call_jaxpr",
+                          "checkpoint"):
+                sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+                if sub is not None:
+                    inner = walk(getattr(sub, "jaxpr", sub), mult)
+                    for k, v in inner.items():
+                        acc[k] += v
+            elif prim in _ELEMENTWISE:
+                acc["ew_flops"] += mult * float(
+                    np.prod(eqn.outvars[0].aval.shape)
+                )
+                acc["bytes"] += mult * (
+                    sum(_aval_bytes(v.aval) for v in eqn.invars)
+                    + sum(_aval_bytes(v.aval) for v in eqn.outvars)
+                )
+            elif prim in ("gather", "scatter", "scatter-add", "scatter_add",
+                          "dynamic_slice", "dynamic_update_slice", "take",
+                          "reduce_sum", "reduce_max", "reduce_min", "argmax",
+                          "cumsum", "cumlogsumexp", "sort", "top_k",
+                          "broadcast_in_dim", "concatenate", "transpose",
+                          "reshape", "convert_element_type", "rev", "pad",
+                          "squeeze", "slice", "iota", "select_and_scatter"):
+                acc["bytes"] += mult * (
+                    sum(_aval_bytes(v.aval) for v in eqn.invars)
+                    + sum(_aval_bytes(v.aval) for v in eqn.outvars)
+                )
+                if prim in ("reduce_sum", "reduce_max", "reduce_min",
+                            "cumsum", "argmax"):
+                    acc["ew_flops"] += mult * float(
+                        np.prod(eqn.invars[0].aval.shape)
+                    )
+        return acc
+
+    out = walk(jaxpr.jaxpr, 1.0)
+    out["flops"] = out.get("dot_flops", 0.0) + out.get("ew_flops", 0.0)
+    return dict(out)
+
+
+# ==========================================================================
+# Partitioned-HLO collective accounting with loop multipliers.
+# ==========================================================================
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\([^)]*\)\s*->", re.M)
+_SHAPE = re.compile(r"(f32|f16|bf16|s32|u32|s8|u8|pred|s64|f64|c64)\[([\d,]*)\]")
+_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1,
+          "u8": 1, "pred": 1, "s64": 8, "f64": 8, "c64": 8}
+_COLL = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:\S+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+_CALLSITE = re.compile(
+    r"(?:condition|body|to_apply|calls|branch_computations)="
+    r"(?:\{([^}]*)\}|%?([\w.\-]+))"
+)
+_WHILE = re.compile(r"\bwhile\(.*?condition=%?([\w.\-]+),?\s*body=%?([\w.\-]+)|"
+                    r"\bwhile\(.*?body=%?([\w.\-]+),?\s*condition=%?([\w.\-]+)")
+_CONST_CMP = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(text: str) -> dict[str, str]:
+    """computation name -> body text.  A computation header is a top-level
+    line '[ENTRY] %name (args...) -> result {' (args may nest parens)."""
+    comps = {}
+    cur_name = None
+    cur_body: list[str] = []
+    for line in text.splitlines():
+        stripped = line.strip()
+        is_header = (
+            not line.startswith(" ")
+            and stripped.endswith("{")
+            and "->" in stripped
+            and (stripped.startswith("%") or stripped.startswith("ENTRY"))
+        )
+        if is_header:
+            if cur_name is not None:
+                comps[cur_name] = "\n".join(cur_body)
+            tok = stripped.split()[1] if stripped.startswith("ENTRY") else stripped.split()[0]
+            cur_name = tok.lstrip("%")
+            cur_body = [line]
+        elif cur_name is not None:
+            cur_body.append(line)
+            if stripped == "}":
+                comps[cur_name] = "\n".join(cur_body)
+                cur_name, cur_body = None, []
+    if cur_name is not None:
+        comps[cur_name] = "\n".join(cur_body)
+    return comps
+
+
+def _shape_bytes(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes_hlo(text: str) -> dict[str, Any]:
+    """Partitioned HLO -> per-kind collective bytes with while multipliers."""
+    comps = _split_computations(text)
+    # local collective bytes per computation
+    local: dict[str, dict[str, float]] = {}
+    counts: dict[str, dict[str, int]] = {}
+    for name, body in comps.items():
+        d: dict[str, float] = defaultdict(float)
+        c: dict[str, int] = defaultdict(int)
+        for m in _COLL.finditer(body):
+            d[m.group(2)] += _shape_bytes(m.group(1))
+            c[m.group(2)] += 1
+        local[name] = dict(d)
+        counts[name] = dict(c)
+
+    # call graph with multipliers
+    trip_re = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+    edges: dict[str, list[tuple[str, float]]] = defaultdict(list)
+    for name, body in comps.items():
+        for line in body.splitlines():
+            if re.search(r"=\s*(?:\([^=]*\)\s+)?while\(", line) or " while(" in line:
+                trip = 1.0
+                tm = trip_re.search(line)
+                if tm:
+                    trip = float(tm.group(1))
+                cond_m = re.search(r"condition=%?([\w.\-]+)", line)
+                body_m = re.search(r"body=%?([\w.\-]+)", line)
+                if tm is None and cond_m and cond_m.group(1) in comps:
+                    consts = _CONST_CMP.findall(comps[cond_m.group(1)])
+                    if consts:
+                        trip = float(max(int(x) for x in consts))
+                if cond_m and cond_m.group(1) in comps:
+                    edges[name].append((cond_m.group(1), trip))
+                if body_m and body_m.group(1) in comps:
+                    edges[name].append((body_m.group(1), trip))
+            else:
+                for cm in _CALLSITE.finditer(line):
+                    targets = cm.group(1) or cm.group(2)
+                    for t in re.split(r"[,\s]+", targets):
+                        t = t.strip().lstrip("%")
+                        if t and t in comps:
+                            edges[name].append((t, 1.0))
+
+    roots = [n for n in comps if n.startswith("main") or "ENTRY" in comps[n].splitlines()[0]]
+    if not roots:
+        roots = list(comps)[:1]
+
+    total: dict[str, float] = defaultdict(float)
+    total_counts: dict[str, float] = defaultdict(float)
+
+    def dfs(name: str, mult: float, depth: int = 0):
+        if depth > 32:
+            return
+        for kind, b in local.get(name, {}).items():
+            total[kind] += mult * b
+            total_counts[kind] += mult * counts[name].get(kind, 0)
+        for child, m in edges.get(name, []):
+            dfs(child, mult * m, depth + 1)
+
+    for r in roots:
+        dfs(r, 1.0)
+    return {
+        "bytes": dict(total),
+        "count": {k: int(v) for k, v in total_counts.items()},
+        "total": float(sum(total.values())),
+    }

@@ -1,0 +1,301 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell on the production mesh with ShapeDtypeStruct inputs (no
+allocation), print memory_analysis / cost_analysis, and extract the roofline
+terms (FLOPs, bytes, per-collective bytes) into a JSON record.
+
+The two lines above MUST stay the first statements in this module: jax locks
+the device count at first backend init, and the 512 placeholder CPU devices
+exist only in dry-run processes (tests and benches see 1 device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b \
+        --shape train_4k --mesh single_pod --out results/dryrun
+    PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config, list_configs, shape_is_applicable
+from ..dist import hints
+from ..dist.sharding import (
+    batch_shardings,
+    cache_pspecs,
+    data_axes,
+    param_shardings,
+)
+from ..models.lm import build_model
+from ..train.optimizer import OptConfig, opt_init
+from ..train.trainer import TrainConfig, make_train_step
+from .analysis import collective_bytes_hlo, jaxpr_cost
+from .mesh import make_production_mesh
+from .specs import input_specs
+
+# Per-arch training policy (production choices; see DESIGN.md + EXPERIMENTS.md)
+OPT_KIND = {"deepseek-v3-671b": "adafactor"}
+
+
+def count_params(params_abs, path_prefix=()) -> tuple[float, float]:
+    """(total, active) parameter counts; routed-expert tensors (stacked
+    (L, E, d, f)) contribute top_k/E of themselves to 'active'."""
+    total = active = 0.0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params_abs)[0]:
+        n = float(np.prod(leaf.shape))
+        total += n
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        if name in ("w_gate", "w_up", "w_down") and len(leaf.shape) == 4 \
+                and "shared" not in keys:
+            active += 0.0  # filled in by caller with top_k/E fraction
+        else:
+            active += n
+    return total, active
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree,
+    )
+
+
+def build_cell(
+    arch: str, shape_name: str, mesh, dtype=jnp.bfloat16,
+    kv_dtype=None, remat=True, infer_params: bool = False,
+):
+    """Returns (fn, args, in_shardings) for jit lowering.
+
+    ``kv_dtype``: decode-cache storage dtype (perf lever: f8 quantized KV).
+    ``remat``: activation checkpointing in the train step (perf lever).
+    ``infer_params``: weight-stationary serving — params TP-sharded only,
+    replicated over the data axes (no per-step FSDP gathers).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    batch_abs = input_specs(cfg, shape, dtype=dtype)
+    bsh = batch_shardings(batch_abs, mesh)
+
+    params_abs = jax.eval_shape(
+        lambda: model.init(jax.random.key(0), dtype=dtype)
+    )
+    psh = param_shardings(params_abs, mesh, cfg)
+    if infer_params and shape.step != "train":
+        from ..dist.sharding import data_axes as _daxes, strip_axes
+
+        psh = strip_axes(psh, _daxes(mesh) )
+
+    if shape.step == "train":
+        oc = OptConfig(kind=OPT_KIND.get(arch, "adamw"))
+        opt_abs = jax.eval_shape(lambda p: opt_init(p, oc), params_abs)
+        osh = jax.tree.map(
+            lambda leaf: NamedSharding(mesh, P()), opt_abs
+        )
+        # moment trees mirror the param shardings where shapes match
+        if "mu" in opt_abs:
+            osh["mu"], osh["nu"] = psh, psh
+        else:  # adafactor: factored accumulators — replicate small leaves
+            pass
+        step_fn = make_train_step(model, TrainConfig(opt=oc, remat=remat))
+        # steady-state out shardings: updated params/opt land exactly where
+        # they came from => XLA can reduce-scatter gradients instead of
+        # all-reducing the full tensors (perf lever, see EXPERIMENTS §Perf)
+        metric_sh = {
+            "grad_norm": NamedSharding(mesh, P()),
+            "lr": NamedSharding(mesh, P()),
+            "loss": NamedSharding(mesh, P()),
+        }
+        return (
+            step_fn,
+            (params_abs, opt_abs, batch_abs),
+            (psh, osh, bsh),
+            (psh, osh, metric_sh),
+        )
+
+    if shape.step == "prefill":
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, cache_len=shape.seq_len)
+
+        return prefill_fn, (params_abs, batch_abs), (psh, bsh), None
+
+    # decode: one new token against a seq_len cache
+    caches_abs = jax.eval_shape(
+        lambda: model.init_caches(
+            shape.global_batch, shape.seq_len, dtype, kv_dtype=kv_dtype
+        )
+    )
+    csh = cache_pspecs(caches_abs, mesh, cfg)
+    pos = shape.seq_len - 1
+
+    def decode_fn(params, caches, tokens):
+        return model.decode_step(params, tokens["tokens"], caches, pos)
+
+    return (
+        decode_fn,
+        (params_abs, caches_abs, batch_abs),
+        (psh, csh, bsh),
+        None,
+    )
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_name: str, out_dir: str,
+    kv_dtype=None, remat=True, tag: str = "", use_hints: bool = False,
+    infer_params: bool = False, out_shardings: bool = False,
+) -> dict:
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    cfg = get_config(arch)
+    ok, why = shape_is_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            fname = f"{arch}__{shape_name}__{mesh_name}{tag}.json".replace("/", "_")
+            with open(os.path.join(out_dir, fname), "w") as f:
+                json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multi_pod"))
+    try:
+        t0 = time.time()
+        fn, args, shardings, out_sh = build_cell(
+            arch, shape_name, mesh, kv_dtype=kv_dtype, remat=remat,
+            infer_params=infer_params,
+        )
+        if not out_shardings:
+            out_sh = None
+        # exact loop-aware global cost from the jaxpr (see analysis.py)
+        jx = jax.make_jaxpr(fn)(*args)
+        jcost = jaxpr_cost(jx)
+        params_abs = args[0]
+        p_total, p_nonexpert = count_params(params_abs)
+        expert_params = p_total - p_nonexpert
+        frac = (cfg.top_k / cfg.n_experts) if cfg.moe else 0.0
+        p_active = p_nonexpert + expert_params * frac
+        import contextlib
+
+        hint_ctx = (
+            hints.activation_sharding(mesh, data_axes(mesh))
+            if use_hints
+            else contextlib.nullcontext()
+        )
+        with mesh, hint_ctx:
+            if out_sh is not None:
+                jitted = jax.jit(fn, in_shardings=shardings, out_shardings=out_sh)
+            else:
+                jitted = jax.jit(fn, in_shardings=shardings)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            t0 = time.time()
+            compiled = lowered.compile()
+            t_compile = time.time() - t0
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = collective_bytes_hlo(hlo)
+
+        mem_rec = {}
+        if mem is not None:
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+                "peak_memory_in_bytes",
+            ):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    mem_rec[k] = int(v)
+        cost_rec = {}
+        if cost:
+            for k in ("flops", "bytes accessed", "transcendentals"):
+                if k in cost:
+                    cost_rec[k] = float(cost[k])
+        shape = SHAPES[shape_name]
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=mem_rec,
+            cost=cost_rec,
+            jaxpr_cost=jcost,
+            collectives=coll,
+            n_devices=int(mesh.devices.size),
+            params_total=p_total,
+            params_active=p_active,
+            tokens=(
+                shape.global_batch * shape.seq_len
+                if shape.step in ("train", "prefill")
+                else shape.global_batch
+            ),
+            step=shape.step,
+        )
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"jaxpr_flops={jcost.get('flops', 0):.3e} "
+              f"coll={coll['total']:.3e}B)")
+        print(f"  memory_analysis: {mem_rec}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-3000:])
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: FAIL {e}")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{arch}__{shape_name}__{mesh_name}{tag}.json".replace("/", "_")
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single_pod",
+                    choices=["single_pod", "multi_pod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--kv-dtype", default=None, choices=[None, "bf16", "f8"],
+                    help="decode-cache dtype (perf lever)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing (perf lever)")
+    ap.add_argument("--hints", action="store_true",
+                    help="anchor activation shardings (perf lever)")
+    ap.add_argument("--infer-params", action="store_true",
+                    help="weight-stationary serving sharding (perf lever)")
+    ap.add_argument("--out-shardings", action="store_true",
+                    help="steady-state train out-shardings (perf lever)")
+    ap.add_argument("--tag", default="", help="suffix for the result file")
+    args = ap.parse_args()
+
+    kv_dtype = {None: None, "bf16": jnp.bfloat16,
+                "f8": jnp.float8_e4m3fn}[args.kv_dtype]
+    archs = list_configs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = (
+        ["single_pod", "multi_pod"] if args.mesh == "both" else [args.mesh]
+    )
+    n_fail = 0
+    for mesh_name in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                rec = run_cell(
+                    arch, shape_name, mesh_name, args.out,
+                    kv_dtype=kv_dtype, remat=not args.no_remat, tag=args.tag,
+                    use_hints=args.hints, infer_params=args.infer_params,
+                    out_shardings=args.out_shardings,
+                )
+                n_fail += rec["status"] == "error"
+    print(f"[dryrun] done, {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

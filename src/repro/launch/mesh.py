@@ -1,0 +1,20 @@
+"""Production mesh construction.  A FUNCTION (not a module constant) so that
+importing this module never touches jax device state — the 512-device
+environment exists only inside dryrun.py's process.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "MESH_SHAPES"]
+
+MESH_SHAPES = {
+    "single_pod": ((16, 16), ("data", "model")),
+    "multi_pod": ((2, 16, 16), ("pod", "data", "model")),
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

@@ -1,0 +1,83 @@
+"""Input specs per (architecture x shape): ShapeDtypeStruct stand-ins for the
+dry-run (no allocation) and concrete tiny batches for smoke tests.
+
+Modality frontends are stubs per the assignment: [vlm] provides precomputed
+patch embeddings, [audio] provides precomputed conv-frontend frames.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+
+__all__ = ["input_specs", "make_concrete_batch", "text_len"]
+
+
+def text_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Token-stream length so that the model's total sequence == seq_len."""
+    if cfg.vlm:
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def input_specs(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    *,
+    dtype=jnp.bfloat16,
+) -> dict[str, Any]:
+    """ShapeDtypeStructs for the *batch* argument of the given step."""
+    B = shape.global_batch
+    if shape.step == "train":
+        S = text_len(cfg, shape.seq_len)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    elif shape.step == "prefill":
+        S = text_len(cfg, shape.seq_len)
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:  # decode: one new token; the seq_len lives in the KV cache
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if cfg.vlm and shape.step != "decode":
+        specs["vision_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.n_patches, cfg.d_model), dtype
+        )
+    if cfg.encdec and shape.step != "decode":
+        specs["enc_frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), dtype
+        )
+    return specs
+
+
+def make_concrete_batch(
+    cfg: ArchConfig, seq_len: int, batch: int, step: str, seed: int = 0,
+    dtype=jnp.float32,
+) -> dict[str, jax.Array]:
+    """Tiny concrete batch for CPU smoke tests."""
+    rng = np.random.default_rng(seed)
+    S = text_len(cfg, seq_len)
+    out: dict[str, jax.Array] = {}
+    if step == "decode":
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, 1)), jnp.int32
+        )
+        return out
+    out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (batch, S)), jnp.int32)
+    if step == "train":
+        out["labels"] = jnp.asarray(
+            rng.integers(0, cfg.vocab, (batch, S)), jnp.int32
+        )
+    if cfg.vlm:
+        out["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.n_patches, cfg.d_model)), dtype
+        )
+    if cfg.encdec:
+        out["enc_frames"] = jnp.asarray(
+            rng.standard_normal((batch, cfg.enc_seq, cfg.d_model)), dtype
+        )
+    return out

@@ -1,0 +1,251 @@
+"""Attention variants: GQA/MQA (optionally biased QKV) and MLA (DeepSeek-V3
+multi-head latent attention with compressed-KV decode via weight absorption).
+
+Each variant exposes:
+    init(key, cfg, dtype)                       -> params
+    forward_train(p, x, cfg, positions)         -> y                (causal)
+    forward_prefill(p, x, cfg, positions)       -> y, cache
+    forward_decode(p, x, cfg, cache, pos)       -> y, cache         (Sq == 1)
+
+Caches are dicts of arrays sized to the target context length; ``pos`` is the
+current fill level.  GQA caches (k, v); MLA caches the *compressed* latent
+(c_kv, k_rope) — its decode attention runs in latent space (absorbed W_uk /
+W_uv), which is the production MLA memory saving.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import hints
+from .common import (
+    apply_rope,
+    chunked_attention,
+    decode_attention,
+    dense_init,
+    rms_norm,
+    rope_sin_cos,
+)
+
+__all__ = ["gqa", "mla"]
+
+
+# ==========================================================================
+# GQA
+# ==========================================================================
+class gqa:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32) -> dict:
+        d, H, Hkv = cfg.d_model, cfg.n_heads, cfg.n_kv_heads
+        hd = cfg.resolved_head_dim
+        ks = jax.random.split(key, 4)
+        p = {
+            "wq": dense_init(ks[0], (d, H * hd), dtype),
+            "wk": dense_init(ks[1], (d, Hkv * hd), dtype),
+            "wv": dense_init(ks[2], (d, Hkv * hd), dtype),
+            "wo": dense_init(ks[3], (H * hd, d), dtype),
+        }
+        if cfg.qkv_bias:
+            p["bq"] = jnp.zeros((H * hd,), dtype)
+            p["bk"] = jnp.zeros((Hkv * hd,), dtype)
+            p["bv"] = jnp.zeros((Hkv * hd,), dtype)
+        return p
+
+    @staticmethod
+    def _qkv(p, x, cfg, positions):
+        B, S, d = x.shape
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        q = x @ p["wq"]
+        k = x @ p["wk"]
+        v = x @ p["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        q = hints.heads(q.reshape(B, S, H, hd))
+        k = hints.heads(k.reshape(B, S, Hkv, hd))
+        v = hints.heads(v.reshape(B, S, Hkv, hd))
+        sin, cos = rope_sin_cos(positions, hd, cfg.rope_theta)
+        return apply_rope(q, sin, cos), apply_rope(k, sin, cos), v
+
+    @staticmethod
+    def forward_train(p, x, cfg, positions, causal: bool = True):
+        q, k, v = gqa._qkv(p, x, cfg, positions)
+        y = chunked_attention(q, k, v, causal=causal)
+        B, S = x.shape[:2]
+        return y.reshape(B, S, -1) @ p["wo"]
+
+    @staticmethod
+    def forward_prefill(p, x, cfg, positions, cache_len: int):
+        B, S, _ = x.shape
+        q, k, v = gqa._qkv(p, x, cfg, positions)
+        y = chunked_attention(q, k, v, causal=True)
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        k_cache = jnp.zeros((B, cache_len, Hkv, hd), x.dtype)
+        v_cache = jnp.zeros((B, cache_len, Hkv, hd), x.dtype)
+        cache = {
+            "k": jax.lax.dynamic_update_slice(k_cache, k, (0, 0, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(v_cache, v, (0, 0, 0, 0)),
+        }
+        return y.reshape(B, S, -1) @ p["wo"], cache
+
+    @staticmethod
+    def forward_decode(p, x, cfg, cache, pos):
+        B = x.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k, v = gqa._qkv(p, x, cfg, positions)
+        cd = cache["k"].dtype  # cache may be narrower (f8 KV quantization)
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cd), (0, pos, 0, 0)
+        )
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cd), (0, pos, 0, 0)
+        )
+        y = decode_attention(q, kc, vc, pos + 1)
+        return y.reshape(B, 1, -1) @ p["wo"], {"k": kc, "v": vc}
+
+    # -- cross attention (whisper decoder) ---------------------------------
+    @staticmethod
+    def forward_cross(p, x, kv_src, cfg):
+        """x (B, Sq, d) attends over kv_src (B, Sk, d); no RoPE, no causal."""
+        B, Sq, d = x.shape
+        H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+        q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+        k = (kv_src @ p["wk"]).reshape(B, -1, Hkv, hd)
+        v = (kv_src @ p["wv"]).reshape(B, -1, Hkv, hd)
+        y = chunked_attention(q, k, v, causal=False)
+        return y.reshape(B, Sq, -1) @ p["wo"]
+
+    @staticmethod
+    def cross_kv(p, kv_src, cfg):
+        """Precompute cross-attention K/V once per request (decode path)."""
+        B = kv_src.shape[0]
+        Hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        k = (kv_src @ p["wk"]).reshape(B, -1, Hkv, hd)
+        v = (kv_src @ p["wv"]).reshape(B, -1, Hkv, hd)
+        return k, v
+
+    @staticmethod
+    def forward_cross_cached(p, x, k, v, cfg):
+        B, Sq, _ = x.shape
+        H, hd = cfg.n_heads, cfg.resolved_head_dim
+        q = (x @ p["wq"]).reshape(B, Sq, H, hd)
+        y = decode_attention(q, k, v, jnp.int32(k.shape[1]))
+        return y.reshape(B, Sq, -1) @ p["wo"]
+
+
+# ==========================================================================
+# MLA — multi-head latent attention (DeepSeek-V2/V3).
+# ==========================================================================
+class mla:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32) -> dict:
+        d, H = cfg.d_model, cfg.n_heads
+        dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+        rq, rkv = cfg.q_lora_rank, cfg.kv_lora_rank
+        ks = jax.random.split(key, 8)
+        p = {
+            "w_dkv": dense_init(ks[0], (d, rkv), dtype),
+            "kv_norm": jnp.ones((rkv,), dtype),
+            "w_uk": dense_init(ks[1], (rkv, H, dn), dtype),
+            "w_uv": dense_init(ks[2], (rkv, H, dv), dtype),
+            "w_kr": dense_init(ks[3], (d, dr), dtype),
+            "wo": dense_init(ks[4], (H * dv, d), dtype),
+        }
+        if rq:
+            p["w_dq"] = dense_init(ks[5], (d, rq), dtype)
+            p["q_norm"] = jnp.ones((rq,), dtype)
+            p["w_uq"] = dense_init(ks[6], (rq, H, dn + dr), dtype)
+        else:
+            p["w_q"] = dense_init(ks[6], (d, H, dn + dr), dtype)
+        return p
+
+    @staticmethod
+    def _q(p, x, cfg, positions):
+        B, S, _ = x.shape
+        dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+        if cfg.q_lora_rank:
+            cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.rms_eps)
+            q = jnp.einsum("bsr,rhd->bshd", cq, p["w_uq"])
+        else:
+            q = jnp.einsum("bsd,dhe->bshe", x, p["w_q"])
+        q_nope, q_rope = q[..., :dn], q[..., dn:]
+        sin, cos = rope_sin_cos(positions, dr, cfg.rope_theta)
+        return q_nope, apply_rope(q_rope, sin, cos)
+
+    @staticmethod
+    def _latent(p, x, cfg, positions):
+        c_kv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.rms_eps)  # (B,S,rkv)
+        k_rope = (x @ p["w_kr"])[:, :, None, :]                     # (B,S,1,dr)
+        sin, cos = rope_sin_cos(positions, cfg.qk_rope_head_dim, cfg.rope_theta)
+        return c_kv, apply_rope(k_rope, sin, cos)[:, :, 0, :]       # (B,S,dr)
+
+    @staticmethod
+    def forward_train(p, x, cfg, positions, causal: bool = True):
+        """Materialized form (cheaper when Sq is long)."""
+        B, S, _ = x.shape
+        dn, dv = cfg.qk_nope_head_dim, cfg.v_head_dim
+        q_nope, q_rope = mla._q(p, x, cfg, positions)
+        c_kv, k_rope = mla._latent(p, x, cfg, positions)
+        k_nope = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uk"])
+        v = jnp.einsum("bsr,rhd->bshd", c_kv, p["w_uv"])
+        H = cfg.n_heads
+        k_rope_h = jnp.broadcast_to(
+            k_rope[:, :, None, :], (B, S, H, cfg.qk_rope_head_dim)
+        )
+        q = jnp.concatenate([q_nope, q_rope], -1)
+        k = jnp.concatenate([k_nope, k_rope_h], -1)
+        y = chunked_attention(q, k, v, causal=causal)
+        return y.reshape(B, S, -1) @ p["wo"]
+
+    @staticmethod
+    def forward_prefill(p, x, cfg, positions, cache_len: int):
+        B, S, _ = x.shape
+        y = mla.forward_train(p, x, cfg, positions, causal=True)
+        c_kv, k_rope = mla._latent(p, x, cfg, positions)
+        ckv_cache = jnp.zeros((B, cache_len, cfg.kv_lora_rank), x.dtype)
+        kr_cache = jnp.zeros((B, cache_len, cfg.qk_rope_head_dim), x.dtype)
+        cache = {
+            "c_kv": jax.lax.dynamic_update_slice(ckv_cache, c_kv, (0, 0, 0)),
+            "k_rope": jax.lax.dynamic_update_slice(kr_cache, k_rope, (0, 0, 0)),
+        }
+        return y, cache
+
+    @staticmethod
+    def forward_decode(p, x, cfg, cache, pos):
+        """Absorbed-latent decode: scores and values computed against the
+        compressed cache; per-token cost O(S * (r_kv + d_rope)) per head."""
+        B = x.shape[0]
+        positions = jnp.full((B, 1), pos, jnp.int32)
+        q_nope, q_rope = mla._q(p, x, cfg, positions)       # (B,1,H,dn/dr)
+        c_kv_new, k_rope_new = mla._latent(p, x, cfg, positions)
+        cd = cache["c_kv"].dtype
+        ckv_store = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv_new.astype(cd), (0, pos, 0)
+        )
+        kr_store = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope_new.astype(cd), (0, pos, 0)
+        )
+        ckv = ckv_store.astype(x.dtype)
+        kr = kr_store.astype(x.dtype)
+        # absorb W_uk into the query: q_lat (B,1,H,rkv)
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope, p["w_uk"])
+        s_lat = jnp.einsum(
+            "bqhr,bsr->bhqs", q_lat, ckv, preferred_element_type=jnp.float32
+        )
+        s_rope = jnp.einsum(
+            "bqhd,bsd->bhqs", q_rope, kr, preferred_element_type=jnp.float32
+        )
+        dh = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        s = (s_lat + s_rope) / jnp.sqrt(jnp.float32(dh))
+        S = ckv.shape[1]
+        valid = jnp.arange(S)[None, None, None, :] < (pos + 1)
+        s = jnp.where(valid, s, jnp.float32(-1e30))
+        w = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum(
+            "bhqs,bsr->bqhr", w.astype(ckv.dtype), ckv,
+            preferred_element_type=jnp.float32,
+        )
+        y = jnp.einsum("bqhr,rhd->bqhd", ctx_lat.astype(x.dtype), p["w_uv"])
+        y = y.reshape(B, 1, -1) @ p["wo"]
+        return y, {"c_kv": ckv_store, "k_rope": kr_store}

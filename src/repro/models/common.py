@@ -1,0 +1,203 @@
+"""Shared model building blocks: norms, RoPE, activations, memory-efficient
+attention.  Pure functions over explicit param pytrees (dict-of-arrays);
+no framework dependency beyond jax.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Param",
+    "dense_init",
+    "rms_norm",
+    "act_fn",
+    "rope_sin_cos",
+    "apply_rope",
+    "chunked_attention",
+    "decode_attention",
+]
+
+DEFAULT_INIT_STD = 0.02
+
+
+def dense_init(key, shape, dtype=jnp.float32, std: float = DEFAULT_INIT_STD):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * w.astype(jnp.float32)).astype(dt)
+
+
+def act_fn(name: str, x: jax.Array) -> jax.Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings.
+# --------------------------------------------------------------------------
+def rope_sin_cos(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> sin/cos (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (B, S, H, D); sin/cos (B?, S, D/2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if sin.ndim == 2:  # (S, half) -> broadcast batch + heads
+        sin = sin[None, :, None, :]
+        cos = cos[None, :, None, :]
+    else:  # (B, S, half)
+        sin = sin[:, :, None, :]
+        cos = cos[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dt)
+
+
+# --------------------------------------------------------------------------
+# Memory-efficient (flash-style) attention in pure JAX.
+#
+# Never materializes the full (S, S) score matrix: scans KV chunks with a
+# running (max, denom, acc) triple; queries are processed in chunks via an
+# outer map.  This is the XLA-lowerable form used by every dry-run config —
+# a Pallas flash kernel would only change constants, not the roofline FLOPs.
+# --------------------------------------------------------------------------
+NEG_INF = jnp.float32(-1e30)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_chunk", "kv_chunk", "q_offset_static"),
+)
+def chunked_attention(
+    q: jax.Array,        # (B, Sq, H, Dh)
+    k: jax.Array,        # (B, Sk, Hkv, Dh)
+    v: jax.Array,        # (B, Sk, Hkv, Dv)
+    *,
+    causal: bool = True,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    q_offset: Optional[jax.Array] = None,
+    q_offset_static: int = 0,
+    kv_valid_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Grouped-query flash-style attention.  Returns (B, Sq, H, Dv).
+
+    q_offset: position of q[0] within the kv sequence (for cached prefill);
+    kv_valid_len: mask out kv positions >= this (ragged caches).
+    """
+    B, Sq, H, Dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    if Sq % q_chunk:   # non-divisible (e.g. whisper's 1500 frames): one block
+        q_chunk = Sq
+    if Sk % kv_chunk:
+        kv_chunk = Sk
+    nq, nk = Sq // q_chunk, Sk // kv_chunk
+    qoff = (
+        q_offset.astype(jnp.int32)
+        if q_offset is not None
+        else jnp.int32(q_offset_static)
+    )
+
+    # fold head-groups: q (B, H, Sq, Dh) with H = Hkv * rep
+    qh = q.transpose(0, 2, 1, 3).reshape(B, Hkv, rep, Sq, Dh)
+    kh = k.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, Dh)
+    vh = v.transpose(0, 2, 1, 3)  # (B, Hkv, Sk, Dv)
+    Dv = vh.shape[-1]
+
+    def q_block(qi, qc):  # qc: (B, Hkv, rep, qchunk, Dh)
+        q_pos = qoff + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, ki):
+            m, l, acc = carry
+            kc = jax.lax.dynamic_slice_in_dim(kh, ki * kv_chunk, kv_chunk, 2)
+            vc = jax.lax.dynamic_slice_in_dim(vh, ki * kv_chunk, kv_chunk, 2)
+            s = jnp.einsum(
+                "bgrqd,bgkd->bgrqk", qc, kc,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            if kv_valid_len is not None:
+                mask = mask & (k_pos[None, :] < kv_valid_len)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bgrqk,bgkd->bgrqd", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32,
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Hkv, rep, q_chunk), NEG_INF)
+        l0 = jnp.zeros((B, Hkv, rep, q_chunk))
+        a0 = jnp.zeros((B, Hkv, rep, q_chunk, Dv))
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    if nq == 1:
+        out = q_block(0, qh)
+    else:
+        qh_blocks = qh.reshape(B, Hkv, rep, nq, q_chunk, Dh).transpose(
+            3, 0, 1, 2, 4, 5
+        )
+        out = jax.lax.map(lambda t: q_block(t[0], t[1]),
+                          (jnp.arange(nq), qh_blocks))
+        out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, rep, Sq, Dv)
+    return out.reshape(B, H, Sq, Dv).transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+@jax.jit
+def decode_attention(
+    q: jax.Array,          # (B, 1, H, Dh)
+    k_cache: jax.Array,    # (B, S, Hkv, Dh)
+    v_cache: jax.Array,    # (B, S, Hkv, Dv)
+    pos: jax.Array,        # scalar int — number of valid cache entries
+) -> jax.Array:
+    """Single-token attention against a (possibly partially filled) cache.
+    Caches may be stored in a narrower dtype (e.g. f8 KV quantization — the
+    decode-cell memory-roofline lever); compute runs in q's dtype."""
+    B, S, Hkv, Dh = k_cache.shape
+    k_cache = k_cache.astype(q.dtype)
+    v_cache = v_cache.astype(q.dtype)
+    H = q.shape[2]
+    rep = H // Hkv
+    scale = 1.0 / jnp.sqrt(jnp.float32(Dh))
+    qh = q.reshape(B, Hkv, rep, Dh)
+    s = jnp.einsum(
+        "bgrd,bsgd->bgrs", qh, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    valid = jnp.arange(S)[None, None, None, :] < pos
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bgrs,bsgd->bgrd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, -1).astype(q.dtype)

@@ -1,0 +1,419 @@
+"""Language-model assembly: layer specs -> scanned stacks -> full models.
+
+A model is a sequence of *stacks*; each stack scans ``count`` identical
+*units*; a unit is an ordered list of sub-blocks (pre-norm residual each):
+
+    dense LM            : 1 stack,  unit = [attn, ffn]           x n_layers
+    deepseek-v3         : 2 stacks, [mla, ffn] x 3 ; [mla, moe] x 58
+    jamba               : 1 stack,  unit = 8 sub-layer pairs (1 attn : 7
+                          mamba, MoE every 2nd)                  x 4
+    mamba2              : 1 stack,  unit = [mamba]                x 48
+    whisper (enc-dec)   : encoder stack + decoder stack (w/ cross-attn)
+    internvl2 (vlm)     : dense LM consuming [patch embeds ; token embeds]
+
+Caches are per-stack pytrees with a leading unit axis, scanned alongside the
+stacked params in decode.  Training scans with jax.checkpoint (remat).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..dist import hints
+from .attention import gqa, mla
+from .common import dense_init, rms_norm
+from .mamba import mamba2
+from .moe import dense_ffn, moe_ffn
+
+__all__ = ["LayerSpec", "LMModel", "build_model", "chunked_ce_loss"]
+
+# A sub-block: (kind, options). kinds: gqa | mla | mamba | ffn | moe | cross
+LayerSpec = tuple[tuple[str, dict], ...]
+
+
+# --------------------------------------------------------------------------
+# Unit init / apply.
+# --------------------------------------------------------------------------
+def _init_sub(key, kind: str, opt: dict, cfg: ArchConfig, dtype):
+    norm = jnp.ones((cfg.d_model,), dtype)
+    if kind in ("gqa", "cross"):
+        return {"norm": norm, **gqa.init(key, cfg, dtype)}
+    if kind == "mla":
+        return {"norm": norm, **mla.init(key, cfg, dtype)}
+    if kind == "mamba":
+        return {"norm": norm, **mamba2.init(key, cfg, cfg.d_model, dtype)}
+    if kind == "ffn":
+        d_ff = opt.get("d_ff", cfg.d_ff)
+        return {"norm": norm, **dense_ffn.init(key, cfg.d_model, d_ff, dtype)}
+    if kind == "moe":
+        return {"norm": norm, **moe_ffn.init(key, cfg, dtype)}
+    raise ValueError(kind)
+
+
+def init_unit(key, spec: LayerSpec, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, len(spec))
+    return {
+        f"sub{i}": _init_sub(ks[i], kind, opt, cfg, dtype)
+        for i, (kind, opt) in enumerate(spec)
+    }
+
+
+def _empty_cache():
+    return {}
+
+
+def init_unit_cache(
+    spec: LayerSpec, cfg: ArchConfig, batch: int, cache_len: int, dtype,
+    kv_dtype=None,
+) -> dict:
+    kv_dtype = kv_dtype or dtype  # attention caches may be narrower (f8 KV)
+    out = {}
+    for i, (kind, opt) in enumerate(spec):
+        if kind == "gqa":
+            hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+            out[f"sub{i}"] = {
+                "k": jnp.zeros((batch, cache_len, hkv, hd), kv_dtype),
+                "v": jnp.zeros((batch, cache_len, hkv, hd), kv_dtype),
+            }
+        elif kind == "mla":
+            out[f"sub{i}"] = {
+                "c_kv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), kv_dtype),
+                "k_rope": jnp.zeros(
+                    (batch, cache_len, cfg.qk_rope_head_dim), kv_dtype
+                ),
+            }
+        elif kind == "mamba":
+            out[f"sub{i}"] = mamba2.init_cache(cfg, cfg.d_model, batch, dtype)
+        elif kind == "cross":
+            hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+            out[f"sub{i}"] = {
+                "ck": jnp.zeros((batch, cfg.enc_seq, hkv, hd), dtype),
+                "cv": jnp.zeros((batch, cfg.enc_seq, hkv, hd), dtype),
+            }
+        else:
+            out[f"sub{i}"] = _empty_cache()
+    return out
+
+
+def apply_unit(
+    params: dict,
+    x: jax.Array,
+    spec: LayerSpec,
+    cfg: ArchConfig,
+    mode: str,                      # train | prefill | decode
+    positions: Optional[jax.Array],
+    cache: Optional[dict] = None,
+    pos: Any = 0,
+    cache_len: int = 0,
+    enc_out: Optional[jax.Array] = None,
+    causal: bool = True,
+):
+    new_cache = {}
+    for i, (kind, opt) in enumerate(spec):
+        p = params[f"sub{i}"]
+        h = rms_norm(x, p["norm"], cfg.rms_eps)
+        c = cache[f"sub{i}"] if cache is not None else None
+        if kind == "gqa":
+            if mode == "train":
+                y = gqa.forward_train(p, h, cfg, positions, causal=causal)
+                nc = _empty_cache()
+            elif mode == "prefill":
+                y, nc = gqa.forward_prefill(p, h, cfg, positions, cache_len)
+            else:
+                y, nc = gqa.forward_decode(p, h, cfg, c, pos)
+        elif kind == "mla":
+            if mode == "train":
+                y = mla.forward_train(p, h, cfg, positions)
+                nc = _empty_cache()
+            elif mode == "prefill":
+                y, nc = mla.forward_prefill(p, h, cfg, positions, cache_len)
+            else:
+                y, nc = mla.forward_decode(p, h, cfg, c, pos)
+        elif kind == "mamba":
+            if mode == "train":
+                y = mamba2.forward_train(p, h, cfg, cfg.d_model)
+                nc = _empty_cache()
+            elif mode == "prefill":
+                y, nc = mamba2.forward_train(
+                    p, h, cfg, cfg.d_model, return_state=True
+                )
+            else:
+                y, nc = mamba2.forward_decode(p, h, cfg, c, cfg.d_model)
+        elif kind == "cross":
+            if mode == "train":
+                y = gqa.forward_cross(p, h, enc_out, cfg)
+                nc = _empty_cache()
+            elif mode == "prefill":
+                ck, cv = gqa.cross_kv(p, enc_out, cfg)
+                y = gqa.forward_cross(p, h, enc_out, cfg)
+                nc = {"ck": ck, "cv": cv}
+            else:
+                y = gqa.forward_cross_cached(p, h, c["ck"], c["cv"], cfg)
+                nc = c
+        elif kind == "ffn":
+            y = dense_ffn.forward(p, h, cfg.act)
+            nc = _empty_cache()
+        elif kind == "moe":
+            y = moe_ffn.forward(p, h, cfg)
+            nc = _empty_cache()
+        else:
+            raise ValueError(kind)
+        x = hints.act(x + y)  # re-anchor the residual stream's sharding
+        new_cache[f"sub{i}"] = nc
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# Loss (sequence-chunked CE: never materializes (B, S, V) logits).
+# --------------------------------------------------------------------------
+def chunked_ce_loss(
+    h: jax.Array, labels: jax.Array, w_head: jax.Array, chunk: int = 512
+) -> jax.Array:
+    """h (B, S, d), labels (B, S) -> mean next-token CE (logits from w_head)."""
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor of S at most the requested chunk
+        chunk -= 1
+    hs = h.reshape(B, S // chunk, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, S // chunk, chunk).transpose(1, 0, 2)
+
+    def step(tot, inp):
+        hc, lc = inp
+        logits = (hc @ w_head).astype(jnp.float32)  # (B, chunk, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(step, jnp.float32(0.0), (hs, ls))
+    return tot / (B * S)
+
+
+# --------------------------------------------------------------------------
+# Model.
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StackDef:
+    count: int
+    spec: LayerSpec
+    role: str = "decoder"  # decoder | encoder
+
+
+@dataclasses.dataclass(frozen=True)
+class LMModel:
+    cfg: ArchConfig
+    stacks: tuple[StackDef, ...]
+
+    # ------------------------------------------------------------- params
+    def init(self, key, dtype=jnp.float32) -> dict:
+        cfg = self.cfg
+        keys = jax.random.split(key, len(self.stacks) + 4)
+        params: dict = {
+            "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), dtype),
+            "final_norm": jnp.ones((cfg.d_model,), dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = dense_init(
+                keys[1], (cfg.d_model, cfg.vocab), dtype
+            )
+        if cfg.encdec:
+            params["enc_final_norm"] = jnp.ones((cfg.d_model,), dtype)
+        for si, sd in enumerate(self.stacks):
+            uks = jax.random.split(keys[2 + si], sd.count)
+            units = [init_unit(uk, sd.spec, cfg, dtype) for uk in uks]
+            params[f"stack{si}"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs), *units
+            )
+        return params
+
+    def _head(self, params):
+        return (
+            params["embed"].T
+            if self.cfg.tie_embeddings
+            else params["lm_head"]
+        )
+
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        if self.cfg.scale_embed:
+            x = x * jnp.sqrt(jnp.float32(self.cfg.d_model)).astype(x.dtype)
+        return x
+
+    # --------------------------------------------------------------- runs
+    def _run_stacks(
+        self, params, x, mode, positions, caches=None, pos=0,
+        cache_len=0, enc_out=None, role="decoder", remat=True, causal=True,
+    ):
+        new_caches = []
+        for si, sd in enumerate(self.stacks):
+            if sd.role != role:
+                new_caches.append(caches[si] if caches else None)
+                continue
+            stack_p = params[f"stack{si}"]
+
+            if mode == "train":
+                def body(h, unit_p, _sd=sd):
+                    h2, _ = apply_unit(
+                        unit_p, h, _sd.spec, self.cfg, "train", positions,
+                        enc_out=enc_out, causal=causal,
+                    )
+                    return h2, None
+
+                if remat:
+                    body = jax.checkpoint(
+                        body,
+                        policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+                    )
+                x, _ = jax.lax.scan(body, x, stack_p)
+                new_caches.append(None)
+            elif mode == "prefill":
+                def body_p(h, unit_p, _sd=sd):
+                    h2, nc = apply_unit(
+                        unit_p, h, _sd.spec, self.cfg, "prefill", positions,
+                        cache_len=cache_len, enc_out=enc_out,
+                    )
+                    return h2, nc
+
+                x, ncs = jax.lax.scan(body_p, x, stack_p)
+                new_caches.append(ncs)
+            else:  # decode
+                def body_d(h, xs, _sd=sd):
+                    unit_p, unit_c = xs
+                    h2, nc = apply_unit(
+                        unit_p, h, _sd.spec, self.cfg, "decode", None,
+                        cache=unit_c, pos=pos, enc_out=enc_out,
+                    )
+                    return h2, nc
+
+                x, ncs = jax.lax.scan(body_d, x, (stack_p, caches[si]))
+                new_caches.append(ncs)
+        return x, new_caches
+
+    def _encode(self, params, enc_frames, remat=True):
+        """Whisper encoder over stubbed conv-frontend frames (B, Se, d)."""
+        cfg = self.cfg
+        Se = enc_frames.shape[1]
+        pos = jnp.arange(Se)
+        half = cfg.d_model // 2
+        freqs = jnp.exp(
+            -jnp.arange(half, dtype=jnp.float32) * (9.21 / max(half - 1, 1))
+        )
+        ang = pos[:, None].astype(jnp.float32) * freqs[None, :]
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1)
+        x = enc_frames + pe[None].astype(enc_frames.dtype)
+        x, _ = self._run_stacks(
+            params, x, "train", pos, role="encoder", remat=remat, causal=False
+        )
+        return rms_norm(x, params["enc_final_norm"], cfg.rms_eps)
+
+    def _inputs_to_x(self, params, batch):
+        """Merge modality inputs -> (x, positions, enc_out)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        enc_out = None
+        if cfg.vlm:
+            x = jnp.concatenate(
+                [batch["vision_embeds"].astype(x.dtype), x], axis=1
+            )
+        if cfg.encdec:
+            enc_out = self._encode(params, batch["enc_frames"])
+        S = x.shape[1]
+        positions = jnp.arange(S)
+        return x, positions, enc_out
+
+    # --------------------------------------------------------------- API
+    def forward_train(self, params, batch, remat: bool = True) -> jax.Array:
+        """-> final hidden states (B, S, d)."""
+        x, positions, enc_out = self._inputs_to_x(params, batch)
+        x, _ = self._run_stacks(
+            params, x, "train", positions, enc_out=enc_out, remat=remat
+        )
+        return rms_norm(x, params["final_norm"], self.cfg.rms_eps)
+
+    def loss(self, params, batch, remat: bool = True) -> jax.Array:
+        h = self.forward_train(params, batch, remat=remat)
+        labels = batch["labels"]
+        if self.cfg.vlm:  # loss only over the text positions
+            h = h[:, self.cfg.n_patches :, :]
+        return chunked_ce_loss(h, labels, self._head(params))
+
+    def prefill(self, params, batch, cache_len: int):
+        """-> (last-token logits (B, V), caches)."""
+        x, positions, enc_out = self._inputs_to_x(params, batch)
+        x, caches = self._run_stacks(
+            params, x, "prefill", positions, cache_len=cache_len,
+            enc_out=enc_out,
+        )
+        h = rms_norm(x[:, -1, :], params["final_norm"], self.cfg.rms_eps)
+        return h @ self._head(params), caches
+
+    def init_caches(
+        self, batch: int, cache_len: int, dtype=jnp.float32, kv_dtype=None
+    ):
+        out = []
+        for sd in self.stacks:
+            if sd.role != "decoder":
+                out.append(None)
+                continue
+            one = init_unit_cache(
+                sd.spec, self.cfg, batch, cache_len, dtype, kv_dtype
+            )
+            out.append(
+                jax.tree.map(
+                    lambda x: jnp.broadcast_to(
+                        x[None], (sd.count,) + x.shape
+                    ),
+                    one,
+                )
+            )
+        return out
+
+    def decode_step(self, params, tokens, caches, pos):
+        """tokens (B, 1) -> (logits (B, V), new caches)."""
+        x = self._embed(params, tokens)
+        x, new_caches = self._run_stacks(
+            params, x, "decode", None, caches=caches, pos=pos
+        )
+        h = rms_norm(x[:, -1, :], params["final_norm"], self.cfg.rms_eps)
+        return h @ self._head(params), new_caches
+
+
+# --------------------------------------------------------------------------
+# Spec construction from ArchConfig.
+# --------------------------------------------------------------------------
+def build_model(cfg: ArchConfig) -> LMModel:
+    attn_kind = "mla" if cfg.mla else "gqa"
+    stacks: list[StackDef] = []
+
+    if cfg.encdec:
+        enc_spec: LayerSpec = (("gqa", {}), ("ffn", {}))
+        dec_spec: LayerSpec = (("gqa", {}), ("cross", {}), ("ffn", {}))
+        stacks.append(StackDef(cfg.n_enc_layers, enc_spec, role="encoder"))
+        stacks.append(StackDef(cfg.n_layers, dec_spec, role="decoder"))
+    elif cfg.hybrid_period:
+        sub: list[tuple[str, dict]] = []
+        for i in range(cfg.hybrid_period):
+            mixer = "gqa" if i in cfg.attn_positions else "mamba"
+            ff = "moe" if (cfg.moe and i % cfg.moe_period == 1) else "ffn"
+            sub.append((mixer, {}))
+            sub.append((ff, {}))
+        stacks.append(StackDef(cfg.n_layers // cfg.hybrid_period, tuple(sub)))
+    elif cfg.ssm:
+        stacks.append(StackDef(cfg.n_layers, (("mamba", {}),)))
+    elif cfg.moe:
+        if cfg.n_dense_layers:
+            dspec: LayerSpec = (
+                (attn_kind, {}),
+                ("ffn", {"d_ff": cfg.d_ff_dense or cfg.d_ff}),
+            )
+            stacks.append(StackDef(cfg.n_dense_layers, dspec))
+        mspec: LayerSpec = ((attn_kind, {}), ("moe", {}))
+        stacks.append(StackDef(cfg.n_layers - cfg.n_dense_layers, mspec))
+    else:
+        stacks.append(StackDef(cfg.n_layers, ((attn_kind, {}), ("ffn", {}))))
+    return LMModel(cfg=cfg, stacks=tuple(stacks))

@@ -1,0 +1,175 @@
+"""Mamba2 (SSD — state-space duality) block, chunked matmul form.
+
+The quadratic-within-chunk / recurrent-across-chunk factorization keeps all
+heavy ops as batched matmuls (MXU-friendly) while the cross-chunk state
+recurrence is a short lax.scan.  Decode is the O(1)-per-token recurrence on
+an (H, N, P) state — this is what makes the SSM archs runnable at the
+long_500k cell (no KV growth).
+
+Shapes: d_inner = expand*d_model, H heads of head_dim P, state N, groups G.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+__all__ = ["mamba2"]
+
+
+def _dims(cfg, d_model: int):
+    di = cfg.ssm_expand * d_model
+    P = cfg.ssm_head_dim
+    H = di // P
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    return di, H, P, G, N
+
+
+class mamba2:
+    @staticmethod
+    def init(key, cfg, d_model: int, dtype=jnp.float32) -> dict:
+        di, H, P, G, N = _dims(cfg, d_model)
+        K = cfg.conv_kernel
+        conv_dim = di + 2 * G * N
+        ks = jax.random.split(key, 4)
+        return {
+            "in_proj": dense_init(
+                ks[0], (d_model, 2 * di + 2 * G * N + H), dtype
+            ),
+            "conv_w": dense_init(ks[1], (K, conv_dim), dtype, std=0.1),
+            "conv_b": jnp.zeros((conv_dim,), dtype),
+            "A_log": jnp.zeros((H,), jnp.float32),
+            "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+            "D": jnp.ones((H,), jnp.float32),
+            "norm_w": jnp.ones((di,), dtype),
+            "out_proj": dense_init(ks[2], (di, d_model), dtype),
+        }
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _split(p, x, cfg, d_model):
+        di, H, P, G, N = _dims(cfg, d_model)
+        proj = x @ p["in_proj"]  # (B,S,2di+2GN+H)
+        z, xs, Bc, Cc, dt = jnp.split(
+            proj, [di, 2 * di, 2 * di + G * N, 2 * di + 2 * G * N], axis=-1
+        )
+        return z, xs, Bc, Cc, dt
+
+    @staticmethod
+    def _conv_train(p, u, K):
+        """Causal depthwise conv along time: u (B,S,C)."""
+        pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+        out = sum(
+            pad[:, i : i + u.shape[1], :] * p["conv_w"][i][None, None, :]
+            for i in range(K)
+        )
+        return jax.nn.silu(out + p["conv_b"])
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def forward_train(p, x, cfg, d_model: int, return_state: bool = False):
+        B, S, _ = x.shape
+        di, H, P, G, N = _dims(cfg, d_model)
+        Q = min(cfg.ssm_chunk, S)
+        assert S % Q == 0, f"seq {S} must divide chunk {Q}"
+        nc = S // Q
+        K = cfg.conv_kernel
+
+        z, xs, Bc, Cc, dt = mamba2._split(p, x, cfg, d_model)
+        conv_in = jnp.concatenate([xs, Bc, Cc], axis=-1)
+        conv_out = mamba2._conv_train(p, conv_in, K)
+        xs, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+        A = -jnp.exp(p["A_log"])                                       # (H,)
+        a = dt * A[None, None, :]                                      # (B,S,H) <= 0
+
+        # Scan over chunks: one (B, Q, ...) working set at a time (bounds the
+        # per-device transient at long S), carrying the (B, H, N, P) state.
+        rep = H // G
+        xh = xs.reshape(B, nc, Q, H, P).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+        Bh = Bc.reshape(B, nc, Q, G, N).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+        Ch = Cc.reshape(B, nc, Q, G, N).astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+        ac = a.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+        dtc = dt.reshape(B, nc, Q, H).transpose(1, 0, 2, 3)
+        mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+        def chunk_step(h, inp):
+            xc, bc, cc, a_c, dt_c = inp          # (B,Q,H,P) (B,Q,G,N) ... (B,Q,H)
+            xbar = xc * dt_c[..., None]
+            cum = jnp.cumsum(a_c, axis=1)        # (B,Q,H)
+            li = cum[:, :, None, :] - cum[:, None, :, :]      # (B,Q,Q,H)
+            Lm = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+            scores = jnp.einsum("bqgn,bsgn->bqsg", cc, bc)    # (B,Q,Q,G)
+            att = jnp.repeat(scores, rep, axis=-1) * Lm
+            y_intra = jnp.einsum("bqsh,bshp->bqhp", att, xbar)
+            # inter-chunk contribution from the carried state
+            cc_h = jnp.repeat(cc, rep, axis=2)                # (B,Q,H,N)
+            y_inter = jnp.einsum(
+                "bqh,bqhn,bhnp->bqhp", jnp.exp(cum), cc_h, h
+            )
+            # state update
+            decay_to_end = jnp.exp(cum[:, -1:, :] - cum)      # (B,Q,H)
+            bc_h = jnp.repeat(bc, rep, axis=2)
+            s_c = jnp.einsum("bqh,bqhn,bqhp->bhnp", decay_to_end, bc_h, xbar)
+            h_new = h * jnp.exp(cum[:, -1, :])[:, :, None, None] + s_c
+            return h_new, y_intra + y_inter
+
+        h0 = jnp.zeros((B, H, N, P), jnp.float32)
+        h_last, ys = jax.lax.scan(chunk_step, h0, (xh, Bh, Ch, ac, dtc))
+        y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+        y = y + p["D"][None, None, :, None] * xs.reshape(B, S, H, P).astype(
+            jnp.float32
+        )
+        y = y.reshape(B, S, di).astype(x.dtype)
+        y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.rms_eps)
+        out = y @ p["out_proj"]
+        if not return_state:
+            return out
+        conv_tail = conv_in[:, -(K - 1) :, :] if K > 1 else conv_in[:, :0, :]
+        return out, {"ssm": h_last, "conv": conv_tail.astype(x.dtype)}
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def init_cache(cfg, d_model: int, batch: int, dtype=jnp.float32) -> dict:
+        di, H, P, G, N = _dims(cfg, d_model)
+        K = cfg.conv_kernel
+        return {
+            "ssm": jnp.zeros((batch, H, N, P), jnp.float32),
+            "conv": jnp.zeros((batch, K - 1, di + 2 * G * N), dtype),
+        }
+
+    @staticmethod
+    def forward_decode(p, x, cfg, cache, d_model: int):
+        """x (B, 1, d); O(1) state recurrence."""
+        B = x.shape[0]
+        di, H, P, G, N = _dims(cfg, d_model)
+        K = cfg.conv_kernel
+
+        z, xs, Bc, Cc, dt = mamba2._split(p, x, cfg, d_model)
+        u = jnp.concatenate([xs, Bc, Cc], axis=-1)                     # (B,1,C)
+        window = jnp.concatenate([cache["conv"], u], axis=1)           # (B,K,C)
+        conv_out = jax.nn.silu(
+            jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        )[:, None, :]
+        xs, Bc, Cc = jnp.split(conv_out, [di, di + G * N], axis=-1)
+
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])[:, 0]  # (B,H)
+        A = -jnp.exp(p["A_log"])
+        dec = jnp.exp(dt * A[None, :])                                  # (B,H)
+        xh = xs.reshape(B, H, P).astype(jnp.float32)
+        rep = H // G
+        Bh = jnp.repeat(Bc.reshape(B, G, N), rep, axis=1)               # (B,H,N)
+        Ch = jnp.repeat(Cc.reshape(B, G, N), rep, axis=1)
+        xbar = xh * dt[..., None]
+        h = cache["ssm"] * dec[:, :, None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", Bh, xbar
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, h) + p["D"][None, :, None] * xh
+        y = y.reshape(B, 1, di).astype(x.dtype)
+        y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.rms_eps)
+        return y @ p["out_proj"], {
+            "ssm": h,
+            "conv": window[:, 1:, :].astype(x.dtype),
+        }

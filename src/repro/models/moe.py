@@ -1,0 +1,131 @@
+"""FFN blocks: dense GLU and routed Mixture-of-Experts.
+
+The MoE uses grouped sort-based dispatch (MegaBlocks-style, no (T,E,C)
+one-hot): tokens are grouped (group axis shards over the data mesh axis),
+each group's routed tokens are sorted by expert and scattered into an
+(E, C, d) buffer (expert axis shards over the model mesh axis — this is the
+EP boundary; GSPMD emits the all-to-all), batched expert GEMMs run at
+capacity, and outputs are combined with router weights.  Shared experts
+(DeepSeek-style) run densely.  Aux-free balancing bias (DeepSeek-V3) is a
+router parameter added to the selection logits only.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist import hints
+from .common import act_fn, dense_init
+
+__all__ = ["dense_ffn", "moe_ffn", "pick_group_count"]
+
+
+# --------------------------------------------------------------------------
+# Dense GLU FFN (SwiGLU / GeGLU).
+# --------------------------------------------------------------------------
+class dense_ffn:
+    @staticmethod
+    def init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+        ks = jax.random.split(key, 3)
+        return {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+
+    @staticmethod
+    def forward(p, x, act: str = "silu"):
+        h = act_fn(act, x @ p["w_gate"]) * (x @ p["w_up"])
+        return hints.ffn_hidden(h) @ p["w_down"]
+
+
+# --------------------------------------------------------------------------
+# Routed MoE.
+# --------------------------------------------------------------------------
+def pick_group_count(n_tokens: int, n_experts: int, top_k: int) -> int:
+    """Groups sized so per-group expert capacity lands >= ~8 slots (avoids
+    rounding waste at decode shapes while keeping the dispatch buffer
+    shardable at train shapes)."""
+    g = max(1, n_tokens * top_k // (n_experts * 8))
+    # round down to a power of two for even mesh divisibility
+    p = 1
+    while p * 2 <= g:
+        p *= 2
+    return p
+
+
+class moe_ffn:
+    @staticmethod
+    def init(key, cfg, dtype=jnp.float32) -> dict:
+        d, E, fe = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+        ks = jax.random.split(key, 6)
+        p = {
+            "router": dense_init(ks[0], (d, E), dtype, std=0.006),
+            "w_gate": dense_init(ks[1], (E, d, fe), dtype),
+            "w_up": dense_init(ks[2], (E, d, fe), dtype),
+            "w_down": dense_init(ks[3], (E, fe, d), dtype),
+        }
+        if cfg.router_aux_free:
+            p["router_bias"] = jnp.zeros((E,), jnp.float32)
+        if cfg.n_shared:
+            p["shared"] = dense_ffn.init(
+                ks[4], d, cfg.d_ff_expert * cfg.n_shared, dtype
+            )
+        return p
+
+    @staticmethod
+    def forward(p, x, cfg):
+        """x (B, S, d) -> (B, S, d)."""
+        B, S, d = x.shape
+        E, k = cfg.n_experts, cfg.top_k
+        T = B * S
+        G = pick_group_count(T, E, k)
+        Sg = T // G
+        assert G * Sg == T, f"tokens {T} not divisible into {G} groups"
+        xt = x.reshape(G, Sg, d)
+
+        logits = jnp.einsum("gsd,de->gse", xt, p["router"]).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        select = logits + p["router_bias"] if cfg.router_aux_free else logits
+        _, top_idx = jax.lax.top_k(select, k)                   # (G, Sg, k)
+        top_w = jnp.take_along_axis(probs, top_idx, axis=-1)
+        top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+        C = int(Sg * k * cfg.capacity_factor / E) + 1
+        C = max(8, ((C + 7) // 8) * 8)  # lane-friendly capacity
+        C = min(C, Sg * k)
+
+        def dispatch_group(xg, idx_g, w_g):
+            # xg (Sg, d); idx/w (Sg, k)
+            fe_ = idx_g.reshape(-1)                              # (Sg*k,)
+            order = jnp.argsort(fe_)
+            se = fe_[order]
+            tok = order // k
+            pos = jnp.arange(se.shape[0]) - jnp.searchsorted(se, se, side="left")
+            keep = pos < C
+            slot = jnp.where(keep, se * C + pos, E * C)          # E*C = drop bin
+            buf = jnp.zeros((E * C + 1, d), xg.dtype)
+            buf = buf.at[slot].set(xg[tok] * keep[:, None].astype(xg.dtype))
+            return buf[:-1].reshape(E, C, d), slot, tok, order, keep
+
+        buf, slot, tok, order, keep = jax.vmap(dispatch_group)(xt, top_idx, top_w)
+
+        # batched expert GEMMs (g e c d) x (e d f) — EP along e
+        h_gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"])
+        h_up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"])
+        h = act_fn(cfg.act, h_gate) * h_up
+        out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+
+        def combine_group(out_g, slot_g, tok_g, order_g, keep_g, w_g):
+            flat = out_g.reshape(E * C, d)
+            vals = flat[jnp.minimum(slot_g, E * C - 1)]         # (Sg*k, d)
+            vals = vals * keep_g[:, None].astype(vals.dtype)
+            w_flat = w_g.reshape(-1)[order_g]
+            y = jnp.zeros((Sg, d), out_g.dtype)
+            return y.at[tok_g].add(vals * w_flat[:, None].astype(vals.dtype))
+
+        y = jax.vmap(combine_group)(out_buf, slot, tok, order, keep, top_w)
+        y = y.reshape(B, S, d)
+        if cfg.n_shared:
+            y = y + dense_ffn.forward(p["shared"], x, cfg.act)
+        return y

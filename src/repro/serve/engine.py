@@ -1,0 +1,67 @@
+"""Batched serving engine: prefill + jitted greedy/temperature decode loop.
+
+The serve-side counterpart of the dry-run's ``prefill``/``decode`` steps; on
+a real mesh the same functions run under jit with the sharding rules from
+repro.dist.sharding (decode caches batch- or sequence-sharded).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..launch.specs import text_len
+from ..models.lm import LMModel
+
+__all__ = ["GenerationEngine"]
+
+
+@dataclasses.dataclass
+class GenerationEngine:
+    model: LMModel
+    params: dict
+    cache_len: int
+
+    def __post_init__(self):
+        self._prefill = jax.jit(
+            lambda p, b: self.model.prefill(p, b, self.cache_len)
+        )
+        self._decode = jax.jit(self.model.decode_step)
+
+    def generate(
+        self,
+        batch: dict,
+        max_new_tokens: int = 16,
+        temperature: float = 0.0,
+        seed: int = 0,
+    ) -> np.ndarray:
+        """batch: {'tokens': (B, S), ...modality extras}. Returns (B, new)."""
+        cfg = self.model.cfg
+        B, S = batch["tokens"].shape
+        pos0 = S + (cfg.n_patches if cfg.vlm else 0)
+        assert pos0 + max_new_tokens <= self.cache_len, "cache too small"
+        logits, caches = self._prefill(self.params, batch)
+        key = jax.random.key(seed)
+        out = []
+        tok = None
+        for t in range(max_new_tokens):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits / temperature, axis=-1)
+            else:
+                tok = jnp.argmax(logits, axis=-1)
+            out.append(np.asarray(tok))
+            if t == max_new_tokens - 1:
+                break
+            logits, caches = self._decode(
+                self.params, tok[:, None].astype(jnp.int32), caches, pos0 + t
+            )
+        return np.stack(out, axis=1)
+
+    def embed(self, batch: dict) -> np.ndarray:
+        """Mean-pooled final hidden state — the RAG query/corpus embedding."""
+        h = self.model.forward_train(self.params, batch, remat=False)
+        return np.asarray(jnp.mean(h.astype(jnp.float32), axis=1))

@@ -1,0 +1,81 @@
+"""Retrieval-augmented serving: the paper's technique as the retrieval
+substrate of an LLM pipeline (paper §1: "LLM pipelines ... at the throughput
+needed by LLMs").
+
+Pipeline per request batch:
+  1. embed queries with the LM (mean-pooled hidden states),
+  2. PDX search (ADSampling / BOND / linear) over the document store,
+  3. prepend retrieved document tokens to the prompt,
+  4. generate.
+
+The document store is a ``VectorSearchEngine`` — exact or IVF, any pruner —
+so every assigned architecture gets the paper's technique in its serving
+path without touching transformer internals (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.engine import VectorSearchEngine
+from .engine import GenerationEngine
+
+__all__ = ["RagPipeline"]
+
+
+@dataclasses.dataclass
+class RagPipeline:
+    engine: GenerationEngine
+    store: VectorSearchEngine
+    doc_tokens: np.ndarray        # (n_docs, doc_len) int32
+    retrieve_k: int = 1
+
+    @classmethod
+    def build(
+        cls,
+        engine: GenerationEngine,
+        doc_tokens: np.ndarray,
+        *,
+        pruner: str = "adsampling",
+        index: str = "flat",
+        capacity: int = 256,
+        retrieve_k: int = 1,
+    ) -> "RagPipeline":
+        """Embed every document with the LM and build the PDX store."""
+        embeds = []
+        for lo in range(0, len(doc_tokens), 32):
+            embeds.append(
+                engine.embed({"tokens": jnp.asarray(doc_tokens[lo : lo + 32])})
+            )
+        X = np.concatenate(embeds, axis=0)
+        store = VectorSearchEngine.build(
+            X, pruner=pruner, index=index, capacity=capacity
+        )
+        return cls(
+            engine=engine, store=store, doc_tokens=doc_tokens,
+            retrieve_k=retrieve_k,
+        )
+
+    def retrieve(self, query_batch: dict) -> np.ndarray:
+        """-> (B, retrieve_k) document ids."""
+        q_emb = self.engine.embed(query_batch)
+        out = []
+        for q in q_emb:
+            ids, _ = self.store.search(q, k=self.retrieve_k)
+            out.append(ids)
+        return np.stack(out)
+
+    def answer(
+        self, query_batch: dict, max_new_tokens: int = 16
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """-> (generated tokens (B, new), retrieved doc ids (B, k))."""
+        doc_ids = self.retrieve(query_batch)
+        ctx = self.doc_tokens[doc_ids[:, 0]]          # (B, doc_len)
+        tokens = np.concatenate(
+            [ctx, np.asarray(query_batch["tokens"])], axis=1
+        ).astype(np.int32)
+        batch = dict(query_batch)
+        batch["tokens"] = jnp.asarray(tokens)
+        return self.engine.generate(batch, max_new_tokens), doc_ids

@@ -1,0 +1,15 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device forcing here — tests must see
+the single real CPU device (the 512-device mesh is dryrun.py-only).  Tests
+that need multiple devices spawn subprocesses (see tests/test_dist.py).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,60 @@
+"""Distance kernels: PDX vs N-ary layouts must agree; matmul form vs direct."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.distance import (
+    METRICS,
+    batched_distance_matmul,
+    nary_distance,
+    pdx_accumulate,
+    pdx_distance,
+)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n,dim", [(64, 8), (100, 33), (17, 128)])
+def test_pdx_equals_nary(metric, n, dim, rng):
+    X = rng.standard_normal((n, dim)).astype(np.float32)
+    q = rng.standard_normal(dim).astype(np.float32)
+    d_nary = nary_distance(jnp.asarray(X), jnp.asarray(q), metric)
+    d_pdx = pdx_distance(jnp.asarray(X.T), jnp.asarray(q), metric)
+    np.testing.assert_allclose(np.asarray(d_nary), np.asarray(d_pdx), rtol=2e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_accumulate_partial_sums_to_full(metric, rng):
+    n, dim = 40, 24
+    T = rng.standard_normal((dim, n)).astype(np.float32)
+    q = rng.standard_normal(dim).astype(np.float32)
+    acc = jnp.zeros((n,), jnp.float32)
+    for lo, hi in [(0, 2), (2, 6), (6, 14), (14, 24)]:
+        acc = pdx_accumulate(jnp.asarray(T[lo:hi]), jnp.asarray(q[lo:hi]), acc, metric)
+    full = pdx_distance(jnp.asarray(T), jnp.asarray(q), metric)
+    np.testing.assert_allclose(np.asarray(acc), np.asarray(full), rtol=2e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_batched_matmul_form(metric, rng):
+    n, dim, b = 96, 48, 5
+    T = rng.standard_normal((dim, n)).astype(np.float32)
+    Q = rng.standard_normal((b, dim)).astype(np.float32)
+    got = batched_distance_matmul(jnp.asarray(T), jnp.asarray(Q), metric)
+    want = np.stack(
+        [np.asarray(pdx_distance(jnp.asarray(T), jnp.asarray(q), metric)) for q in Q]
+    )
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=1e-3)
+
+
+def test_l2_partial_is_monotone(rng):
+    """Monotonicity underpins BOND's exact pruning bound."""
+    dim, n = 64, 32
+    T = rng.standard_normal((dim, n)).astype(np.float32)
+    q = rng.standard_normal(dim).astype(np.float32)
+    acc = jnp.zeros((n,), jnp.float32)
+    prev = np.zeros(n)
+    for lo in range(0, dim, 8):
+        acc = pdx_accumulate(jnp.asarray(T[lo : lo + 8]), jnp.asarray(q[lo : lo + 8]), acc, "l2")
+        cur = np.asarray(acc)
+        assert (cur >= prev - 1e-6).all()
+        prev = cur

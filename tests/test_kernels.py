@@ -1,0 +1,86 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import (
+    batched_distance_op,
+    nary_distance_op,
+    pdx_distance_op,
+    pdx_prune_scan_op,
+)
+
+SHAPES = [(8, 64), (96, 128), (128, 1000), (384, 96), (33, 130)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-1) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "l1"])
+@pytest.mark.parametrize("D,V", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_pdx_distance_kernel(metric, D, V, dtype, rng):
+    T = jnp.asarray(rng.standard_normal((D, V)), dtype)
+    q = jnp.asarray(rng.standard_normal(D), dtype)
+    got = pdx_distance_op(T, q, metric)
+    want = ref.pdx_distance_ref(T, q, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "l1"])
+@pytest.mark.parametrize("N,D", [(64, 8), (1000, 128), (130, 33)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_nary_distance_kernel(metric, N, D, dtype, rng):
+    X = jnp.asarray(rng.standard_normal((N, D)), dtype)
+    q = jnp.asarray(rng.standard_normal(D), dtype)
+    got = nary_distance_op(X, q, metric)
+    want = ref.nary_distance_ref(X, q, metric)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dtype))
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+@pytest.mark.parametrize("B,D,V", [(4, 32, 64), (16, 128, 256), (3, 50, 130)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_batched_distance_kernel(metric, B, D, V, dtype, rng):
+    T = jnp.asarray(rng.standard_normal((D, V)), dtype)
+    Q = jnp.asarray(rng.standard_normal((B, D)), dtype)
+    got = batched_distance_op(T, Q, metric)
+    want = ref.batched_distance_ref(T, Q, metric)
+    tol = dict(rtol=3e-2, atol=5e-1) if dtype == jnp.bfloat16 else dict(rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **tol)
+
+
+@pytest.mark.parametrize("D,V", [(64, 128), (128, 256), (96, 1000)])
+@pytest.mark.parametrize("d_tile", [16, 32, 64])
+def test_prune_scan_kernel_matches_ref(D, V, d_tile, rng):
+    T = jnp.asarray(rng.standard_normal((D, V)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    # threshold near the 10th smallest distance so pruning actually happens
+    full = np.asarray(ref.pdx_distance_ref(T, q))
+    thr = jnp.float32(np.partition(full, 10)[10])
+    got_d, got_a = pdx_prune_scan_op(T, q, thr, eps0=2.1, d_tile=d_tile)
+    want_d, want_a = ref.pdx_prune_scan_ref(T, q, thr, d_tile=d_tile, eps0=2.1)
+    np.testing.assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a))
+
+
+def test_prune_scan_never_prunes_nearest(rng):
+    """Survivors must include the true nearest neighbour at sane eps0."""
+    D, V = 128, 512
+    T = jnp.asarray(rng.standard_normal((D, V)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal(D), jnp.float32)
+    full = np.asarray(ref.pdx_distance_ref(T, q))
+    thr = jnp.float32(np.partition(full, 10)[10])
+    _, alive = pdx_prune_scan_op(T, q, thr, eps0=2.1)
+    assert np.asarray(alive)[int(np.argmin(full))] == 1.0
+
+
+def test_prune_scan_all_pruned_when_thr_zero(rng):
+    D, V = 64, 256
+    T = jnp.asarray(rng.standard_normal((D, V)) + 10.0, jnp.float32)
+    q = jnp.asarray(np.zeros(D), jnp.float32)
+    _, alive = pdx_prune_scan_op(T, q, jnp.float32(1e-3))
+    assert np.asarray(alive).sum() == 0.0

@@ -1,0 +1,65 @@
+"""PDX layout: transposition round-trips, padding, bucketed packing."""
+import numpy as np
+import pytest
+
+from repro.core.layout import (
+    PAD_VALUE,
+    build_bucketed_store,
+    build_flat_store,
+    pdx_to_nary,
+)
+
+
+@pytest.mark.parametrize("n,dim,cap", [(100, 16, 32), (257, 7, 64), (64, 128, 64)])
+def test_flat_roundtrip(n, dim, cap, rng):
+    X = rng.standard_normal((n, dim)).astype(np.float32)
+    store = build_flat_store(X, capacity=cap)
+    assert store.dim == dim
+    assert store.capacity == cap
+    assert store.num_vectors == n
+    np.testing.assert_array_equal(pdx_to_nary(store), X)
+
+
+def test_flat_padding_is_sentinel(rng):
+    X = rng.standard_normal((10, 4)).astype(np.float32)
+    store = build_flat_store(X, capacity=8)
+    data = np.asarray(store.data)
+    ids = np.asarray(store.ids)
+    # second partition holds 2 vectors + 6 pads
+    assert int(store.counts[1]) == 2
+    assert (ids[1, 2:] == -1).all()
+    assert (data[1, :, 2:] == PAD_VALUE).all()
+
+
+def test_bucketed_layout_groups_by_bucket(rng):
+    X = rng.standard_normal((200, 8)).astype(np.float32)
+    assign = rng.integers(0, 5, size=200)
+    store, offsets, nparts = build_bucketed_store(X, assign, 5, capacity=32)
+    # every bucket's vectors appear exactly in its partitions
+    ids = np.asarray(store.ids)
+    for b in range(5):
+        mine = set(np.nonzero(assign == b)[0].tolist())
+        got = set()
+        for p in range(offsets[b], offsets[b] + nparts[b]):
+            got |= set(i for i in ids[p].tolist() if i >= 0)
+        assert got == mine
+    np.testing.assert_allclose(
+        np.sort(pdx_to_nary(store), axis=0), np.sort(X, axis=0)
+    )
+
+
+def test_empty_bucket_gets_placeholder_partition(rng):
+    X = rng.standard_normal((50, 4)).astype(np.float32)
+    assign = np.zeros(50, dtype=np.int64)  # bucket 1 and 2 empty
+    store, offsets, nparts = build_bucketed_store(X, assign, 3, capacity=64)
+    assert nparts[1] == 1 and nparts[2] == 1
+    assert int(store.counts[offsets[1]]) == 0
+
+
+def test_metadata_matches_collection(rng):
+    X = rng.standard_normal((500, 12)).astype(np.float32) * 3 + 1
+    store = build_flat_store(X, capacity=128)
+    np.testing.assert_allclose(np.asarray(store.dim_means), X.mean(0), rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(store.dim_vars), X.var(0), rtol=1e-4, atol=1e-5
+    )

@@ -1,0 +1,135 @@
+"""Unit tests for model sub-blocks against naive references: chunked
+(flash-style) attention, Mamba2 SSD vs step recurrence, MoE dispatch."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.common import chunked_attention, decode_attention
+from repro.models.mamba import mamba2
+from repro.models.moe import dense_ffn, moe_ffn, pick_group_count
+
+
+# --------------------------------------------------------------------------
+# chunked attention vs naive softmax
+# --------------------------------------------------------------------------
+def _naive_attention(q, k, v, causal=True):
+    B, Sq, H, Dh = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    k = np.repeat(np.asarray(k), rep, axis=2)
+    v = np.repeat(np.asarray(v), rep, axis=2)
+    q, k, v = map(np.asarray, (q, k, v))
+    s = np.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(Dh)
+    if causal:
+        Sk = k.shape[1]
+        mask = np.arange(Sk)[None, :] <= np.arange(Sq)[:, None]
+        s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    return np.einsum("bhqk,bkhd->bqhd", p, v)
+
+
+@pytest.mark.parametrize("H,Hkv", [(4, 4), (4, 2), (8, 1)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_chunked_attention_matches_naive(H, Hkv, causal, rng):
+    B, S, Dh = 2, 64, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
+    got = chunked_attention(q, k, v, causal=causal, q_chunk=16, kv_chunk=16)
+    want = _naive_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-5)
+
+
+def test_decode_attention_masks_unfilled_cache(rng):
+    B, S, Hkv, Dh, H = 1, 32, 2, 8, 4
+    q = jnp.asarray(rng.standard_normal((B, 1, H, Dh)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, Hkv, Dh)), jnp.float32)
+    out_full = decode_attention(q, k, v, jnp.int32(8))
+    # garbage beyond position 8 must not matter
+    k2 = k.at[:, 8:].set(1e6)
+    v2 = v.at[:, 8:].set(-1e6)
+    out_masked = decode_attention(q, k2, v2, jnp.int32(8))
+    np.testing.assert_allclose(
+        np.asarray(out_full), np.asarray(out_masked), rtol=1e-5
+    )
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD (chunked matmul form) vs naive per-token recurrence
+# --------------------------------------------------------------------------
+def test_ssd_matches_naive_recurrence(rng):
+    cfg = get_config("mamba2-370m").reduced()
+    d_model = 32
+    p = mamba2.init(jax.random.key(0), cfg, d_model)
+    B, S = 2, 32
+    x = jnp.asarray(rng.standard_normal((B, S, d_model)) * 0.5, jnp.float32)
+
+    y_par, state_par = mamba2.forward_train(
+        p, x, cfg, d_model, return_state=True
+    )
+    # naive: run the decode recurrence token by token
+    cache = mamba2.init_cache(cfg, d_model, B)
+    ys = []
+    for t in range(S):
+        y_t, cache = mamba2.forward_decode(p, x[:, t : t + 1], cfg, cache, d_model)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(y_par), np.asarray(y_seq), rtol=2e-3, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        np.asarray(state_par["ssm"]), np.asarray(cache["ssm"]),
+        rtol=2e-3, atol=2e-4,
+    )
+
+
+# --------------------------------------------------------------------------
+# MoE dispatch
+# --------------------------------------------------------------------------
+def _moe_cfg(**kw):
+    base = get_config("deepseek-moe-16b").reduced()
+    return dataclasses.replace(base, **kw)
+
+
+def test_moe_single_expert_equals_dense(rng):
+    cfg = _moe_cfg(n_experts=1, top_k=1, n_shared=0, capacity_factor=2.0)
+    key = jax.random.key(1)
+    p = moe_ffn.init(key, cfg, jnp.float32)
+    B, S = 2, 8
+    x = jnp.asarray(rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    got = moe_ffn.forward(p, x, cfg)
+    dense_p = {
+        "w_gate": p["w_gate"][0], "w_up": p["w_up"][0], "w_down": p["w_down"][0]
+    }
+    want = dense_ffn.forward(dense_p, x, cfg.act)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+def test_moe_output_finite_and_shaped(rng):
+    cfg = _moe_cfg()
+    p = moe_ffn.init(jax.random.key(2), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((2, 16, cfg.d_model)), jnp.float32)
+    y = moe_ffn.forward(p, x, cfg)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+
+
+def test_moe_grads_flow_to_experts_and_router(rng):
+    cfg = _moe_cfg()
+    p = moe_ffn.init(jax.random.key(3), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((1, 16, cfg.d_model)), jnp.float32)
+    g = jax.grad(lambda pp: jnp.sum(moe_ffn.forward(pp, x, cfg) ** 2))(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+    assert float(jnp.abs(g["w_down"]).sum()) > 0
+
+
+def test_pick_group_count():
+    assert pick_group_count(128, 256, 8) == 1          # decode batch
+    g = pick_group_count(4096 * 256, 256, 8)
+    assert g >= 256 and (g & (g - 1)) == 0             # train: many pow2 groups

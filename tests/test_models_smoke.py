@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward /
+train-grad step + prefill + decode on CPU; output shapes + finite values.
+The FULL configs are exercised only via the dry-run (no allocation).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_configs
+from repro.launch.specs import make_concrete_batch, text_len
+from repro.models.lm import build_model
+
+ARCHS = [
+    "internvl2-1b",
+    "llama3.2-3b",
+    "gemma-2b",
+    "qwen2-72b",
+    "granite-3-8b",
+    "deepseek-v3-671b",
+    "deepseek-moe-16b",
+    "jamba-v0.1-52b",
+    "mamba2-370m",
+    "whisper-small",
+]
+
+SEQ, BATCH = 32, 2
+
+
+def _finite(tree):
+    return all(
+        bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(tree)
+    )
+
+
+def test_registry_has_all_assigned():
+    assert set(ARCHS) <= set(list_configs())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    batch = make_concrete_batch(cfg, SEQ, BATCH, "train")
+    loss, grads = jax.jit(jax.value_and_grad(model.loss))(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert _finite(grads), f"non-finite grads for {arch}"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_then_decode_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(1))
+    cache_len = SEQ + 8
+    batch = make_concrete_batch(cfg, SEQ, BATCH, "prefill")
+    logits, caches = jax.jit(
+        lambda p, b: model.prefill(p, b, cache_len)
+    )(params, batch)
+    assert logits.shape == (BATCH, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+
+    # decode two tokens from the prefill cache
+    pos = text_len(cfg, SEQ) + (cfg.n_patches if cfg.vlm else 0)
+    step = jax.jit(model.decode_step)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    for t in range(2):
+        logits2, caches = step(params, tok, caches, pos + t)
+        assert logits2.shape == (BATCH, cfg.vocab)
+        assert np.isfinite(np.asarray(logits2)).all()
+        tok = jnp.argmax(logits2, -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "mamba2-370m"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill+decode must agree with the parallel (train-mode) forward."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(2))
+    S = 16
+    batch = make_concrete_batch(cfg, S, 1, "train")
+    h = model.forward_train(params, batch, remat=False)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits_par = np.asarray(h[:, -1, :] @ head)
+
+    pre = {"tokens": batch["tokens"][:, : S - 1]}
+    if cfg.vlm:
+        pre["vision_embeds"] = batch["vision_embeds"]
+    _, caches = model.prefill(params, pre, S + 4)
+    logits_dec, _ = model.decode_step(
+        params, batch["tokens"][:, S - 1 :], caches, S - 1
+    )
+    np.testing.assert_allclose(
+        logits_par, np.asarray(logits_dec), rtol=2e-2, atol=2e-3
+    )
+
+
+def test_full_configs_have_exact_assigned_dims():
+    spec = {
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "gemma-2b": (18, 2048, 8, 1, 16384, 256000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 2048, 129280),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "mamba2-370m": (48, 1024, 0, 0, 0, 50280),
+        "whisper-small": (12, 768, 12, 12, 3072, 51865),
+    }
+    for name, (L, d, H, Hkv, ff, V) in spec.items():
+        c = get_config(name)
+        assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == (
+            L, d, H, Hkv, ff, V,
+        ), name
+    assert get_config("deepseek-v3-671b").n_experts == 256
+    assert get_config("deepseek-v3-671b").top_k == 8
+    assert get_config("deepseek-moe-16b").n_experts == 64
+    assert get_config("deepseek-moe-16b").top_k == 6
+    assert get_config("jamba-v0.1-52b").n_experts == 16
+    assert get_config("mamba2-370m").ssm_state == 128

@@ -1,0 +1,120 @@
+"""PDXearch framework: exactness of exact pruners, recall of probabilistic
+pruners, agreement between host-adaptive and jitted modes, stats accounting."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import VectorSearchEngine
+from repro.core.layout import build_flat_store
+from repro.core.pdxearch import (
+    SearchStats,
+    make_boundaries,
+    pdxearch,
+    pdxearch_jit,
+    search_batch_matmul,
+)
+from repro.core.pruners import make_adsampling, make_bond, make_plain_pruner
+from repro.data.synthetic import ground_truth, make_dataset, recall_at_k
+
+
+def test_boundaries_adaptive():
+    assert make_boundaries(30) == (2, 6, 14, 30)
+    assert make_boundaries(100) == (2, 6, 14, 30, 62, 100)
+    assert make_boundaries(64, "fixed", 32) == (32, 64)
+    assert make_boundaries(70, "fixed", 32) == (32, 64, 70)
+
+
+@pytest.mark.parametrize("pruner_name", ["linear", "bond", "bond-decreasing"])
+@pytest.mark.parametrize("kind", ["normal", "skewed"])
+def test_exact_pruners_match_bruteforce(pruner_name, kind):
+    X, Q = make_dataset(2000, 32, kind, n_queries=4, seed=7)
+    gt_ids, gt_d = ground_truth(X, Q, k=10)
+    eng = VectorSearchEngine.build(X, pruner=pruner_name, capacity=256)
+    for qi, q in enumerate(Q):
+        ids, dists = eng.search(q, k=10)
+        np.testing.assert_allclose(
+            np.sort(dists), np.sort(gt_d[qi]), rtol=1e-4, atol=1e-4
+        )
+        assert recall_at_k(ids[None], gt_ids[qi][None]) == 1.0
+
+
+def test_adsampling_high_recall_normal_data():
+    X, Q = make_dataset(4000, 64, "normal", n_queries=8, seed=3)
+    gt_ids, _ = ground_truth(X, Q, k=10)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=512, eps0=2.1)
+    recs = []
+    for qi, q in enumerate(Q):
+        ids, _ = eng.search(q, k=10)
+        recs.append(recall_at_k(ids[None], gt_ids[qi][None]))
+    assert np.mean(recs) >= 0.95, np.mean(recs)
+
+
+def test_bsa_high_recall():
+    X, Q = make_dataset(4000, 48, "clustered", n_queries=8, seed=4)
+    gt_ids, _ = ground_truth(X, Q, k=10)
+    eng = VectorSearchEngine.build(X, pruner="bsa", capacity=512, bsa_m=4.0)
+    recs = []
+    for qi, q in enumerate(Q):
+        ids, _ = eng.search(q, k=10)
+        recs.append(recall_at_k(ids[None], gt_ids[qi][None]))
+    assert np.mean(recs) >= 0.9, np.mean(recs)
+
+
+def test_jit_mode_matches_adaptive_mode_exact():
+    X, Q = make_dataset(1500, 24, "skewed", n_queries=3, seed=9)
+    store = build_flat_store(X, capacity=256)
+    pruner = make_bond(store.dim_means)
+    for q in Q:
+        a = pdxearch(store, q, 5, pruner)
+        b = pdxearch_jit(store, jnp.asarray(q), 5, pruner)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(a.dists)), np.sort(np.asarray(b.dists)), rtol=1e-4
+        )
+        assert set(np.asarray(a.ids).tolist()) == set(np.asarray(b.ids).tolist())
+
+
+def test_batched_matmul_search_exact():
+    X, Q = make_dataset(3000, 40, "normal", n_queries=6, seed=2)
+    gt_ids, gt_d = ground_truth(X, Q, k=10)
+    store = build_flat_store(X, capacity=512)
+    res = search_batch_matmul(store.data, store.ids, jnp.asarray(Q), 10)
+    for qi in range(len(Q)):
+        np.testing.assert_allclose(
+            np.sort(np.asarray(res.dists[qi])), np.sort(gt_d[qi]), rtol=1e-3, atol=1e-2
+        )
+
+
+def test_stats_pruning_power_skewed_exceeds_zero():
+    X, Q = make_dataset(4000, 64, "skewed", n_queries=2, seed=5)
+    eng = VectorSearchEngine.build(X, pruner="bond", capacity=512)
+    stats = SearchStats()
+    eng.search(Q[0], k=10, stats=stats)
+    assert 0.0 < stats.pruning_power <= 1.0
+    assert stats.values_computed <= stats.values_total
+    # accounting identity: computed + avoided <= total (untouched survivors'
+    # remaining dims are both computed... avoided only counts pruned vectors)
+    assert stats.values_avoided <= stats.values_total
+
+
+def test_ivf_search_recall():
+    X, Q = make_dataset(6000, 32, "clustered", n_queries=6, seed=11)
+    gt_ids, _ = ground_truth(X, Q, k=10)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="adsampling", capacity=128, nlist=32
+    )
+    recs = []
+    for qi, q in enumerate(Q):
+        ids, _ = eng.search(q, k=10, nprobe=16)
+        recs.append(recall_at_k(ids[None], gt_ids[qi][None]))
+    assert np.mean(recs) >= 0.9, np.mean(recs)
+
+
+def test_ivf_full_probe_linear_is_exact():
+    X, Q = make_dataset(2000, 16, "clustered", n_queries=3, seed=13)
+    gt_ids, gt_d = ground_truth(X, Q, k=5)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="linear", capacity=128, nlist=8
+    )
+    for qi, q in enumerate(Q):
+        ids, dists = eng.search(q, k=5, nprobe=8)
+        np.testing.assert_allclose(np.sort(dists), np.sort(gt_d[qi]), rtol=1e-4)

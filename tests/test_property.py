@@ -1,0 +1,114 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distance import nary_distance, pdx_distance
+from repro.core.layout import build_flat_store, pdx_to_nary
+from repro.core.pdxearch import make_boundaries
+from repro.core.pruners import make_adsampling, make_bond, random_orthogonal
+from repro.core.topk import topk_init, topk_merge
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@SETTINGS
+@given(
+    n=st.integers(1, 200),
+    dim=st.integers(1, 64),
+    cap=st.sampled_from([16, 64, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layout_roundtrip_property(n, dim, cap, seed):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, dim)).astype(np.float32)
+    np.testing.assert_array_equal(pdx_to_nary(build_flat_store(X, capacity=cap)), X)
+
+
+@SETTINGS
+@given(
+    n=st.integers(2, 100),
+    dim=st.integers(2, 48),
+    seed=st.integers(0, 2**31 - 1),
+    metric=st.sampled_from(["l2", "l1", "ip"]),
+)
+def test_layout_invariance_of_distance(n, dim, seed, metric):
+    """Distance must not depend on the storage layout."""
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, dim)).astype(np.float32)
+    q = rng.standard_normal(dim).astype(np.float32)
+    a = np.asarray(nary_distance(jnp.asarray(X), jnp.asarray(q), metric))
+    b = np.asarray(pdx_distance(jnp.asarray(X.T), jnp.asarray(q), metric))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@SETTINGS
+@given(dim=st.integers(2, 96), seed=st.integers(0, 10_000))
+def test_random_orthogonal_is_isometry(dim, seed):
+    P = random_orthogonal(dim, seed)
+    np.testing.assert_allclose(P @ P.T, np.eye(dim), atol=1e-4)
+    rng = np.random.default_rng(seed)
+    x, y = rng.standard_normal((2, dim)).astype(np.float32)
+    d0 = ((x - y) ** 2).sum()
+    d1 = ((P @ x - P @ y) ** 2).sum()
+    np.testing.assert_allclose(d0, d1, rtol=1e-3)
+
+
+@SETTINGS
+@given(dim=st.integers(1, 4096))
+def test_boundaries_cover_every_dim_once(dim):
+    for sched, dd in [("adaptive", 32), ("fixed", 32), ("fixed", 7)]:
+        b = make_boundaries(dim, sched, dd)
+        assert b[-1] == dim
+        assert all(x < y for x, y in zip(b, b[1:]))  # strictly increasing
+
+
+@SETTINGS
+@given(
+    k=st.integers(1, 16),
+    m=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_topk_merge_equals_global_topk(k, m, seed):
+    rng = np.random.default_rng(seed)
+    d1 = rng.standard_normal(m).astype(np.float32) ** 2
+    d2 = rng.standard_normal(m).astype(np.float32) ** 2
+    i1 = np.arange(m, dtype=np.int32)
+    i2 = np.arange(m, 2 * m, dtype=np.int32)
+    s = topk_init(k)
+    s = topk_merge(s, jnp.asarray(d1), jnp.asarray(i1))
+    s = topk_merge(s, jnp.asarray(d2), jnp.asarray(i2))
+    alld = np.concatenate([d1, d2])
+    want = np.sort(alld)[: min(k, 2 * m)]
+    got = np.asarray(s.dists)[: min(k, 2 * m)]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@SETTINGS
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    thr_scale=st.floats(0.1, 10.0),
+    d_seen=st.integers(1, 64),
+)
+def test_adsampling_keep_mask_monotone_in_threshold(seed, thr_scale, d_seen):
+    """A vector kept at threshold t must be kept at any t' > t."""
+    dim = 64
+    pr = make_adsampling(dim, eps0=2.1, seed=0)
+    rng = np.random.default_rng(seed)
+    partial = jnp.asarray(rng.uniform(0, 100, size=32).astype(np.float32))
+    t = jnp.float32(thr_scale * 10)
+    keep_lo = np.asarray(pr.keep_mask(partial, jnp.float32(d_seen), t))
+    keep_hi = np.asarray(pr.keep_mask(partial, jnp.float32(d_seen), t * 2))
+    assert np.all(keep_hi >= keep_lo)
+
+
+@SETTINGS
+@given(seed=st.integers(0, 2**31 - 1), dim=st.integers(4, 64))
+def test_bond_zone_order_is_permutation(seed, dim):
+    rng = np.random.default_rng(seed)
+    means = jnp.asarray(rng.standard_normal(dim).astype(np.float32))
+    for zone in (0, 2, 3):
+        pr = make_bond(means, zone_size=zone)
+        q = jnp.asarray(rng.standard_normal(dim).astype(np.float32))
+        perm = np.asarray(pr.dim_order(q))
+        assert sorted(perm.tolist()) == list(range(dim))

@@ -1,0 +1,95 @@
+"""Unit tests for the declarative sharding rules (repro.dist.sharding)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.dist.sharding import (
+    _divisible,
+    batch_pspec,
+    param_pspec,
+    param_shardings,
+    strip_axes,
+)
+from repro.models.lm import build_model
+
+
+class FakeMesh:
+    """Duck-typed mesh with .shape mapping (no device init needed)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_column_row_pairing():
+    cfg = get_config("llama3.2-3b")
+    # stacked layer params carry a leading unit axis (L, d_in, d_out)
+    wq = jax.ShapeDtypeStruct((28, 3072, 3072), jnp.bfloat16)
+    wo = jax.ShapeDtypeStruct((28, 3072, 3072), jnp.bfloat16)
+
+    class K:  # fake DictKey
+        def __init__(s, k):
+            s.key = k
+
+    assert param_pspec((K("stack0"), K("sub0"), K("wq")), wq, cfg) == P(
+        None, "data", "model"
+    )
+    assert param_pspec((K("stack0"), K("sub0"), K("wo")), wo, cfg) == P(
+        None, "model", "data"
+    )
+    # unstacked embeddings: vocab over model, d over data
+    emb = jax.ShapeDtypeStruct((128256, 3072), jnp.bfloat16)
+    assert param_pspec((K("embed"),), emb, cfg) == P("model", "data")
+
+
+def test_divisibility_guard_drops_axes():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 14 heads * 64 = 896 not divisible by 16 -> model axis dropped
+    spec = _divisible(P("data", "model"), (896, 896), mesh)
+    assert spec == P("data", "model")  # 896 % 16 == 0 actually divisible
+    spec = _divisible(P("data", "model"), (896, 14), mesh)
+    assert spec == P("data", None)
+    spec = _divisible(P(("data", "model"), None), (100, 4), mesh)
+    assert spec == P(None, None)  # 100 % 256 != 0
+
+
+def test_batch_pspec_prefers_all_data_axes():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_pspec(mesh, 256) == P(("pod", "data"))
+    assert batch_pspec(mesh, 16) == P("data")
+    assert batch_pspec(mesh, 1) == P()
+
+
+def test_strip_axes_removes_data_everywhere():
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    from jax.sharding import Mesh, NamedSharding
+
+    mesh = Mesh(devs, ("data", "model"))
+    sh = {
+        "w": NamedSharding(mesh, P("data", "model")),
+        "b": NamedSharding(mesh, P(("data", "model"))),
+    }
+    out = strip_axes(sh, ("data",))
+    assert out["w"].spec == P(None, "model")
+    assert out["b"].spec == P(("model",))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "deepseek-moe-16b", "mamba2-370m"])
+def test_param_shardings_cover_full_tree(arch):
+    """Every param leaf gets a NamedSharding whose spec fits its rank."""
+    from jax.sharding import Mesh
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda: model.init(jax.random.key(0)))
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    mesh = Mesh(devs, ("data", "model"))
+    sh = param_shardings(params, mesh, cfg)
+    leaves_p = jax.tree.leaves(params)
+    leaves_s = jax.tree.leaves(sh, is_leaf=lambda x: hasattr(x, "spec"))
+    assert len(leaves_p) == len(leaves_s)
+    for p, s in zip(leaves_p, leaves_s):
+        assert len(s.spec) <= len(p.shape)

@@ -1,0 +1,103 @@
+"""End-to-end behaviour tests for the full system: train -> checkpoint ->
+resume -> serve -> retrieval-augmented answer, through the public drivers."""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.train import train_loop
+from repro.models.lm import build_model
+from repro.serve.engine import GenerationEngine
+from repro.serve.rag import RagPipeline
+
+
+def test_train_checkpoint_resume_serve_rag(tmp_path):
+    ckpt_dir = str(tmp_path / "ck")
+
+    # 1) train a reduced llama a few steps with checkpointing
+    out1 = train_loop(
+        "llama3.2-3b", reduced=True, steps=12, batch=2, seq=32,
+        lr=5e-3, ckpt_dir=ckpt_dir, ckpt_every=6, log_every=100,
+    )
+    assert np.isfinite(out1["final_loss"])
+
+    # 2) resume from the checkpoint and keep training — loss stays finite
+    #    and the driver picks up at the saved step
+    out2 = train_loop(
+        "llama3.2-3b", reduced=True, steps=16, batch=2, seq=32,
+        lr=5e-3, ckpt_dir=ckpt_dir, ckpt_every=100, log_every=100,
+    )
+    assert len(out2["history"]) == 4  # 16 - 12 resumed steps
+    assert np.isfinite(out2["final_loss"])
+
+    # 3) serve the trained weights with the paper's retrieval in front
+    cfg = get_config("llama3.2-3b").reduced()
+    model = build_model(cfg)
+    from repro.train import checkpoint as ckpt
+    from repro.train.optimizer import OptConfig, opt_init
+
+    params = model.init(jax.random.key(0))
+    _, tree = ckpt.restore(
+        ckpt_dir, {"params": params, "opt": opt_init(params, OptConfig())}
+    )
+    eng = GenerationEngine(model=model, params=tree["params"], cache_len=96)
+    rng = np.random.default_rng(0)
+    docs = rng.integers(0, cfg.vocab, (12, 10)).astype(np.int32)
+    rag = RagPipeline.build(eng, docs, pruner="bond")
+    q = {"tokens": rng.integers(0, cfg.vocab, (2, 8)).astype(np.int32)}
+    answer, doc_ids = rag.answer(q, max_new_tokens=4)
+    assert answer.shape == (2, 4)
+    assert (doc_ids >= 0).all()
+
+
+def _overfit_one_batch(arch, tc, steps=25, lr_seed=0):
+    """Fresh random tokens have an irreducible ln(vocab) loss floor, so
+    convergence is asserted by overfitting one fixed batch."""
+    import jax.numpy as jnp
+
+    from repro.data.pipeline import TokenStream
+    from repro.train.optimizer import opt_init
+    from repro.train.trainer import make_train_step
+
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.key(lr_seed))
+    state = opt_init(params, tc.opt)
+    step_fn = jax.jit(make_train_step(model, tc))
+    b = {
+        k: jnp.asarray(v)
+        for k, v in TokenStream(cfg, 16, 2, seed=4).batch_at(0).items()
+    }
+    losses = []
+    extra = ()
+    if tc.compress_grads:
+        from repro.train.compression import ef_init
+
+        extra = (ef_init(params),)
+    for _ in range(steps):
+        out = step_fn(params, state, b, *extra)
+        params, state, metrics = out[:3]
+        extra = out[3:]
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def test_gradient_compression_training_converges():
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainer import TrainConfig
+
+    tc = TrainConfig(
+        opt=OptConfig(lr=1e-2, warmup_steps=0), compress_grads=True
+    )
+    losses = _overfit_one_batch("gemma-2b", tc)
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_adafactor_training_converges():
+    from repro.train.optimizer import OptConfig
+    from repro.train.trainer import TrainConfig
+
+    tc = TrainConfig(
+        opt=OptConfig(lr=2e-2, warmup_steps=0, kind="adafactor")
+    )
+    losses = _overfit_one_batch("deepseek-moe-16b", tc)
+    assert losses[-1] < losses[0] - 0.5, losses
