@@ -1,0 +1,95 @@
+"""Distributed PDXearch throughput: ``search_block_sharded`` on an 8-fake-
+CPU-device ``data`` mesh vs single-device ``pdxearch_jit``, same store, same
+queries.  Emits CSV rows plus a ``BENCH_dist.json`` record.
+
+Standalone only (NOT in run.py's MODULES): the XLA device-count flag is
+process-global and must be set before jax initializes, which would leak into
+the other benchmarks' processes.
+
+    PYTHONPATH=src python -m benchmarks.bench_dist [--scale paper]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.layout import build_flat_store
+from repro.core.pdxearch import pdxearch_jit
+from repro.core.pruners import make_plain_pruner
+from repro.data.synthetic import ground_truth
+from repro.dist.pdx_sharded import search_block_sharded
+
+from .common import dataset, emit, timeit, write_json
+
+
+def run(scale: str = "smoke"):
+    n, dim, cap = (16384, 64, 256) if scale == "smoke" else (131072, 128, 1024)
+    k = 10
+    X, Q = dataset(n, dim, "normal", n_queries=4, seed=0)
+    n_dev = jax.device_count()
+    # both paths search the same vectors: truncate to a shardable tile count
+    parts = max(n // cap // n_dev, 1) * n_dev
+    X = X[: parts * cap]
+    store = build_flat_store(X, capacity=cap)
+    data, ids = store.data, store.ids
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    pruner = make_plain_pruner()
+
+    sharded = jax.jit(
+        lambda d, i, q: search_block_sharded(mesh, d, i, q, k, pruner=pruner),
+        static_argnames=(),
+    )
+    single = lambda q: pdxearch_jit(store, q, k, pruner)
+
+    qj = jnp.asarray(Q[0])
+    # correctness gate before timing: exact pruner => exact top-k distances
+    gt_ids, gt_d = ground_truth(X, Q[:1], k=k)
+    res = sharded(data, ids, qj)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(res.dists)), np.sort(gt_d[0]), rtol=1e-4
+    )
+
+    t_sharded = timeit(sharded, data, ids, qj)
+    t_single = timeit(single, qj)
+    speedup = t_single / t_sharded
+    emit(
+        f"dist/block_sharded/n{n}/D{dim}/dev{n_dev}", t_sharded * 1e6,
+        f"single_us={t_single*1e6:.2f};speedup={speedup:.2f};"
+        f"qps={1.0/t_sharded:.1f}",
+    )
+    write_json(
+        "BENCH_dist.json",
+        {
+            "bench": "dist_block_sharded_vs_single",
+            "scale": scale,
+            "n_vectors": parts * cap,
+            "dim": dim,
+            "capacity": cap,
+            "k": k,
+            "n_devices": n_dev,
+            "t_single_us": t_single * 1e6,
+            "t_block_sharded_us": t_sharded * 1e6,
+            "speedup": speedup,
+            "queries_per_s_sharded": 1.0 / t_sharded,
+            "queries_per_s_single": 1.0 / t_single,
+        },
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

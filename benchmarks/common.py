@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: timing, CSV emission, dataset cache."""
+"""Shared benchmark utilities: timing, CSV/JSON emission, dataset cache."""
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable
 
@@ -33,6 +35,15 @@ def emit(name: str, us_per_call: float, derived: str = ""):
     """Accumulate + print one CSV row: name,us_per_call,derived."""
     RESULTS.append((name, us_per_call, derived))
     print(f"{name},{us_per_call:.2f},{derived}", flush=True)
+
+
+def write_json(filename: str, record: dict, out_dir: str = ".") -> str:
+    """Write one benchmark record as a BENCH_*.json artifact; returns path."""
+    path = os.path.join(out_dir, filename)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+    return path
 
 
 _DATASETS: dict = {}

@@ -1,0 +1,52 @@
+"""repro.dist — the distributed substrate: sharding rules, activation
+hints, sharded PDXearch, and pipeline parallelism.
+
+Architecture
+============
+
+Mesh axes (see ``repro.launch.mesh``):
+
+  * ``pod``   — outermost data parallelism across pods; gradients cross this
+    axis through the int8-compressed all-reduce (``repro.train.compression``).
+  * ``data``  — FSDP + batch data parallelism within a pod.  Batches shard
+    their leading dim over ``("pod", "data")`` (largest divisible suffix —
+    outermost axes drop first, see ``sharding.batch_pspec``); PDX
+    partitions ("blocks") shard over
+    ``data`` in ``pdx_sharded.search_block_sharded``.
+  * ``model`` — tensor parallelism (Megatron-style column/row pairing) and
+    expert parallelism for MoE; PDX *dimension* slices shard over ``model``
+    in ``pdx_sharded.search_dim_sharded`` — the same axis split, because the
+    PDX tile is dimension-major (paper Fig. 1) a dimension shard is a
+    contiguous row slab of every tile.
+  * ``stage`` — pipeline parallelism (``pipeline.pipeline_apply``): each
+    device owns one stage's weights; microbatches flow through ``ppermute``.
+
+Which sharding rule fires for which param family (``sharding.param_pspec``):
+
+  family                          example leaves              spec (body)
+  ------------------------------- --------------------------- ----------------
+  column-parallel projections     wq wk wv w_gate w_up        ("data","model")
+                                  w_dkv w_kr w_dq in_proj
+                                  router
+  row-parallel projections        wo w_down out_proj          ("model","data")
+  head-stacked MLA tensors        w_uk w_uv w_uq w_q          ("data","model",None)
+  routed-expert tensors (E,d,f)   w_gate w_up [w_down]        ("model","data",None)
+  token embedding (V,d)           embed                       ("model","data")
+  output head (d,V)               lm_head                     ("data","model")
+  biases (last-dim features)      bq bk bv router_bias conv_b (...,"model")
+  norms / scalars / ssm decay     *norm* A_log D              replicated
+
+Stacked layer params (under a ``stack{i}`` key) carry a leading unit axis
+that is never sharded: the body spec above is prefixed with ``None``.  Every
+spec passes through the ``_divisible`` guard, which drops mesh axes whose
+size does not divide the corresponding dim (and axes absent from the mesh),
+so the same rules serve the (16,16) production pod, the (2,4) test mesh, and
+a single CPU device.
+
+Activation hints (``hints``) are ``with_sharding_constraint`` anchors inside
+an ``activation_sharding(mesh, batch_axes)`` context and exact identities
+outside it — model code calls them unconditionally and stays mesh-agnostic.
+"""
+from . import hints, pdx_sharded, pipeline, sharding
+
+__all__ = ["hints", "pdx_sharded", "pipeline", "sharding"]

@@ -1,0 +1,71 @@
+"""Activation-sharding hints: ``with_sharding_constraint`` anchors that are
+exact identities outside an ``activation_sharding`` context.
+
+Model code calls these unconditionally (residual stream, attention heads,
+FFN hidden) and stays mesh-agnostic: off-mesh — single CPU device, unit
+tests, eager eval — every hint returns its input unchanged.  Inside the
+context the hint re-anchors the activation's layout so GSPMD keeps the
+Megatron pattern (batch over the data axes, heads / FFN hidden over model,
+residual stream replicated over model) instead of resharding mid-layer.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from .sharding import _batch_entry, _divisible, data_axes
+
+__all__ = ["act", "activation_sharding", "ffn_hidden", "heads"]
+
+# Stack of (mesh, batch_axes) contexts; empty means hints are identities.
+_ACTIVE: list[tuple] = []
+
+
+class activation_sharding:
+    """Context manager activating the hints on ``mesh``.
+
+    ``batch_axes`` — mesh axes the activations' batch dim shards over
+    (defaults to the mesh's data axes).
+    """
+
+    def __init__(self, mesh, batch_axes=None):
+        self.mesh = mesh
+        self.batch_axes = (
+            tuple(batch_axes) if batch_axes is not None else data_axes(mesh)
+        )
+
+    def __enter__(self):
+        _ACTIVE.append((self.mesh, self.batch_axes))
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def _hint(x: jax.Array, body: tuple) -> jax.Array:
+    """Constrain ``x`` to P(batch, *body) under the active context."""
+    if not _ACTIVE:
+        return x
+    mesh, baxes = _ACTIVE[-1]
+    spec = (_batch_entry(baxes),) + body
+    spec = _divisible(P(*spec), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def act(x: jax.Array) -> jax.Array:
+    """Residual stream (B, S, d): batch over data, d replicated (TP keeps
+    the residual unsharded; column/row weight pairing reduces into it)."""
+    return _hint(x, (None,) * (x.ndim - 1))
+
+
+def heads(x: jax.Array) -> jax.Array:
+    """Per-head activations (B, S, H, hd): heads over the model axis."""
+    if x.ndim == 4:
+        return _hint(x, (None, "model", None))
+    return _hint(x, (None,) * (x.ndim - 1))
+
+
+def ffn_hidden(h: jax.Array) -> jax.Array:
+    """FFN hidden (B, S, f): the column-parallel output dim over model."""
+    return _hint(h, (None,) * (h.ndim - 2) + ("model",))

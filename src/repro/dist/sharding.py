@@ -1,0 +1,206 @@
+"""Declarative sharding rules: param / batch / decode-cache partition specs.
+
+The rules are name-based (the model zoo uses consistent leaf names across
+architectures — see the family table in the package docstring) and every
+spec passes through the ``_divisible`` guard before becoming a
+``NamedSharding``, so the same rule set works on any mesh shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "DATA_AXES",
+    "batch_pspec",
+    "batch_shardings",
+    "cache_pspecs",
+    "cache_shardings",
+    "data_axes",
+    "param_pspec",
+    "param_shardings",
+    "strip_axes",
+]
+
+# Mesh axes that carry (pure or FSDP) data parallelism, outermost first.
+DATA_AXES = ("pod", "data")
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """The mesh's data-parallel axis names, outermost first."""
+    return tuple(a for a in mesh.axis_names if a in DATA_AXES)
+
+
+def _axes_of(entry) -> tuple[str, ...]:
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def _divisible(spec: P, shape: tuple[int, ...], mesh) -> P:
+    """Divisibility guard: per dim, drop mesh axes absent from ``mesh`` and,
+    if the remaining axis-size product does not divide the dim, drop the
+    whole entry.  ``mesh`` only needs a ``.shape`` mapping (duck-typed)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for size, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        names = tuple(n for n in _axes_of(entry) if n in mesh.shape)
+        prod = math.prod(mesh.shape[n] for n in names)
+        if not names or size % prod != 0:
+            out.append(None)
+        elif isinstance(entry, tuple):
+            out.append(names)
+        else:
+            out.append(names[0])
+    return P(*out)
+
+
+def _batch_entry(axes: Iterable[str]):
+    axes = tuple(axes)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+# --------------------------------------------------------------------------
+# Batch rules.
+# --------------------------------------------------------------------------
+def batch_pspec(mesh, global_batch: int) -> P:
+    """Shard the batch dim over the largest divisible suffix of the data
+    axes (drop outermost first: a batch too small for pod x data still
+    shards over data alone)."""
+    axes = list(data_axes(mesh))
+    while axes and global_batch % math.prod(mesh.shape[a] for a in axes):
+        axes.pop(0)
+    if not axes:
+        return P()
+    return P(_batch_entry(axes))
+
+
+def batch_shardings(batch, mesh):
+    """Tree of NamedShardings: leading dim is the batch dim, rest replicated."""
+
+    def one(leaf):
+        if not getattr(leaf, "shape", ()):
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, batch_pspec(mesh, leaf.shape[0]))
+
+    return jax.tree.map(one, batch)
+
+
+# --------------------------------------------------------------------------
+# Param rules.
+# --------------------------------------------------------------------------
+_COL_2D = {
+    "wq", "wk", "wv", "w_gate", "w_up", "w_dkv", "w_kr", "w_dq",
+    "in_proj", "router",
+}
+_ROW_2D = {"wo", "w_down", "out_proj"}
+_HEAD_3D = {"w_uk", "w_uv", "w_uq", "w_q"}
+_SCALAR = {"A_log", "D", "norm_w"}
+
+
+def param_pspec(path, leaf, cfg) -> P:
+    """PartitionSpec for one param leaf, keyed on its tree path.
+
+    Stacked layer params (under a ``stack{i}`` key) get a leading ``None``
+    for the unit axis; the body follows the family table in the package
+    docstring.  The result is *unguarded* — callers run ``_divisible``.
+    """
+    keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+    name = keys[-1]
+    stacked = bool(keys) and keys[0].startswith("stack")
+    lead = (None,) if stacked else ()
+    r = len(leaf.shape) - len(lead)
+
+    if name == "embed":
+        body = ("model", "data")
+    elif name == "lm_head":
+        body = ("data", "model")
+    elif name.endswith("norm") or name in _SCALAR:
+        body = (None,) * r
+    elif name in ("w_gate", "w_up") and r == 3:    # routed experts (E, d, f)
+        body = ("model", "data", None)
+    elif name == "w_down" and r == 3:              # routed experts (E, f, d)
+        body = ("model", None, "data")
+    elif name in _HEAD_3D and r == 3:              # (d_in, H, head_feat)
+        body = ("data", "model", None)
+    elif name in _ROW_2D and r == 2:
+        body = ("model", "data")
+    elif name in _COL_2D and r == 2:
+        body = ("data", "model")
+    elif name == "conv_w":                         # (K, conv_dim)
+        body = (None, "model")
+    elif name.endswith(("_bias", "_b")) or (name.startswith("b") and r == 1):
+        body = (None,) * (r - 1) + ("model",)
+    else:
+        body = (None,) * r
+    return P(*(lead + body))
+
+
+def param_shardings(params, mesh, cfg):
+    """Full param tree -> NamedShardings (rules + divisibility guard)."""
+
+    def one(path, leaf):
+        spec = _divisible(param_pspec(path, leaf, cfg), leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# --------------------------------------------------------------------------
+# Decode-cache rules.
+# --------------------------------------------------------------------------
+def cache_pspecs(caches, mesh, cfg):
+    """Decode caches: leading unit axis replicated, batch dim (axis 1) over
+    the data axes, KV-head axis of (L, B, S, Hkv, hd) leaves over model."""
+    baxes = _batch_entry(data_axes(mesh))
+
+    def one(leaf):
+        shape = leaf.shape
+        if len(shape) < 2:
+            return P()
+        spec = [None, baxes] + [None] * (len(shape) - 2)
+        if len(shape) == 5 and shape[3] == getattr(cfg, "n_kv_heads", 0):
+            spec[3] = "model"
+        return _divisible(P(*spec), shape, mesh)
+
+    return jax.tree.map(one, caches)
+
+
+def cache_shardings(caches, mesh, cfg):
+    """``cache_pspecs`` as NamedShardings (the jit in_shardings form)."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        cache_pspecs(caches, mesh, cfg),
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# --------------------------------------------------------------------------
+# Spec surgery.
+# --------------------------------------------------------------------------
+def strip_axes(shardings, axes: Iterable[str]):
+    """Remove the named mesh axes from every sharding in the tree (e.g. the
+    weight-stationary serving layout: params TP-sharded, FSDP axes gone)."""
+    axes = set(axes)
+
+    def one(s):
+        entries = []
+        for e in s.spec:
+            if e is None:
+                entries.append(None)
+            elif isinstance(e, tuple):
+                kept = tuple(n for n in e if n not in axes)
+                entries.append(kept if kept else None)
+            else:
+                entries.append(None if e in axes else e)
+        return NamedSharding(s.mesh, P(*entries))
+
+    return jax.tree.map(
+        one, shardings, is_leaf=lambda x: isinstance(x, NamedSharding)
+    )

@@ -30,7 +30,7 @@ from ..configs import SHAPES, get_config, list_configs, shape_is_applicable
 from ..dist import hints
 from ..dist.sharding import (
     batch_shardings,
-    cache_pspecs,
+    cache_shardings,
     data_axes,
     param_shardings,
 )
@@ -133,7 +133,7 @@ def build_cell(
             shape.global_batch, shape.seq_len, dtype, kv_dtype=kv_dtype
         )
     )
-    csh = cache_pspecs(caches_abs, mesh, cfg)
+    csh = cache_shardings(caches_abs, mesh, cfg)
     pos = shape.seq_len - 1
 
     def decode_fn(params, caches, tokens):
@@ -213,6 +213,13 @@ def run_cell(
                 v = getattr(mem, k, None)
                 if v is not None:
                     mem_rec[k] = int(v)
+            if not mem_rec.get("peak_memory_in_bytes") and mem_rec:
+                # CPU backend reports no peak; args+outputs+temps bounds it.
+                mem_rec["peak_memory_in_bytes"] = sum(
+                    mem_rec.get(k, 0)
+                    for k in ("argument_size_in_bytes",
+                              "output_size_in_bytes", "temp_size_in_bytes")
+                )
         cost_rec = {}
         if cost:
             for k in ("flops", "bytes accessed", "transcendentals"):

@@ -1,7 +1,10 @@
 """Property-based tests (hypothesis) for the system's invariants."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.distance import nary_distance, pdx_distance
 from repro.core.layout import build_flat_store, pdx_to_nary
