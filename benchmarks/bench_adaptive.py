@@ -8,7 +8,7 @@ import time
 
 import numpy as np
 
-from repro.core.engine import VectorSearchEngine
+from repro.core.engine import SearchSpec, VectorSearchEngine
 from .common import dataset, emit
 
 
@@ -18,17 +18,17 @@ def run(scale: str = "smoke"):
     nq = 12 if scale == "smoke" else 50
     X, Q = dataset(n, dim, "skewed", n_queries=nq, seed=5)
 
-    eng_a = VectorSearchEngine.build(X, pruner="adsampling", capacity=1024,
-                                     schedule="adaptive")
-    eng_f = VectorSearchEngine.build(X, pruner="adsampling", capacity=1024,
-                                     schedule="fixed", delta_d=32)
-    eng_a.search(Q[0], 10)
-    eng_f.search(Q[0], 10)
+    # One engine, two specs — the boundary schedule is a per-query choice.
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=1024)
+    spec_a = SearchSpec(k=10, schedule="adaptive")
+    spec_f = SearchSpec(k=10, schedule="fixed", delta_d=32)
+    eng.search(Q[0], spec_a)
+    eng.search(Q[0], spec_f)
 
     ratios = []
     for q in Q:
-        t0 = time.perf_counter(); eng_f.search(q, 10); tf = time.perf_counter() - t0
-        t0 = time.perf_counter(); eng_a.search(q, 10); ta = time.perf_counter() - t0
+        t0 = time.perf_counter(); eng.search(q, spec_f); tf = time.perf_counter() - t0
+        t0 = time.perf_counter(); eng.search(q, spec_a); ta = time.perf_counter() - t0
         ratios.append(tf / ta)
     ratios = np.array(ratios)
     emit(

@@ -1,0 +1,117 @@
+"""Batched distributed search: per-query vs per-batch top-k collectives on
+an 8-fake-CPU-device ``data`` mesh — the ROADMAP "batched distributed
+search" item.  Both paths go through the one public entry point; the spec's
+``batch_collectives`` hint flips the planner between the per-query
+block-sharded executor (2 all-gathers per query) and the fused
+batch-block-sharded executor (1 packed all-gather per batch).  Emits CSV
+rows plus a ``BENCH_batch_dist.json`` record with queries/sec for both.
+
+Standalone only (NOT in run.py's MODULES): the XLA device-count flag is
+process-global and must be set before jax initializes.
+
+    PYTHONPATH=src python -m benchmarks.bench_batch_dist [--scale paper]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.data.synthetic import ground_truth, recall_at_k
+from repro.dist.pdx_sharded import (
+    collective_counts,
+    search_batch_block_sharded,
+    search_block_sharded,
+)
+
+from .common import dataset, emit, timeit, write_json
+
+
+def run(scale: str = "smoke"):
+    n, dim, cap, nq = (
+        (16384, 64, 128, 16) if scale == "smoke" else (131072, 128, 512, 64)
+    )
+    k = 10
+    X, Q = dataset(n, dim, "normal", n_queries=nq, seed=0)
+    n_dev = jax.device_count()
+    parts = max(n // cap // n_dev, 1) * n_dev
+    X = X[: parts * cap]
+    gt_ids, gt_d = ground_truth(X, Q, k=k)
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=cap, mesh=mesh)
+    spec_batch = SearchSpec(k=k)                          # fused collective
+    spec_query = SearchSpec(k=k, batch_collectives=False)  # per-query loop
+
+    # correctness + dispatch gate before timing
+    res_b = eng.search(Q, spec_batch)
+    res_q = eng.search(Q, spec_query)
+    assert res_b.plan.executor == "batch-block-sharded", res_b.plan
+    assert res_q.plan.executor == "block-sharded", res_q.plan
+    assert recall_at_k(res_b.ids, gt_ids) == 1.0
+    assert recall_at_k(res_q.ids, gt_ids) == 1.0
+
+    # collective counts from the traced jaxprs (independent of B for fused)
+    data, ids, Qj = eng.store.data, eng.store.ids, jax.numpy.asarray(Q)
+    n_batched = collective_counts(
+        lambda d, i, q: search_batch_block_sharded(mesh, d, i, q, k),
+        data, ids, Qj,
+    ).get("all_gather", 0)
+    n_per_query = len(Q) * collective_counts(
+        lambda d, i, q: search_block_sharded(mesh, d, i, q, k),
+        data, ids, Qj[0],
+    ).get("all_gather", 0)
+
+    t_batch = timeit(lambda: eng.search(Q, spec_batch))
+    t_query = timeit(lambda: eng.search(Q, spec_query))
+    qps_batch = len(Q) / t_batch
+    qps_query = len(Q) / t_query
+    emit(
+        f"batch_dist/fused/n{parts*cap}/D{dim}/B{len(Q)}/dev{n_dev}",
+        t_batch / len(Q) * 1e6,
+        f"qps={qps_batch:.1f};all_gathers={n_batched}",
+    )
+    emit(
+        f"batch_dist/per_query/n{parts*cap}/D{dim}/B{len(Q)}/dev{n_dev}",
+        t_query / len(Q) * 1e6,
+        f"qps={qps_query:.1f};all_gathers={n_per_query};"
+        f"fused_speedup={t_query/t_batch:.2f}",
+    )
+    write_json(
+        "BENCH_batch_dist.json",
+        {
+            "bench": "batch_dist_per_batch_vs_per_query_collectives",
+            "scale": scale,
+            "n_vectors": parts * cap,
+            "dim": dim,
+            "capacity": cap,
+            "k": k,
+            "batch": len(Q),
+            "n_devices": n_dev,
+            "all_gathers_per_batch_fused": n_batched,
+            "all_gathers_per_batch_per_query": n_per_query,
+            "t_fused_us_per_query": t_batch / len(Q) * 1e6,
+            "t_per_query_us_per_query": t_query / len(Q) * 1e6,
+            "queries_per_s_fused": qps_batch,
+            "queries_per_s_per_query": qps_query,
+            "fused_speedup": t_query / t_batch,
+        },
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -8,19 +8,17 @@ import time
 
 import numpy as np
 
-from repro.core.engine import SearchStats, VectorSearchEngine
+from repro.core.engine import SearchSpec, SearchStats, VectorSearchEngine
 from repro.data.synthetic import ground_truth, recall_at_k
 from .common import dataset, emit
 
 
 def _pruning_power_quantiles(eng, Q, k=10, nprobe=8):
+    spec = SearchSpec(k=k, nprobe=nprobe)  # planner handles flat vs IVF
     powers = []
     for q in Q:
         st = SearchStats()
-        if eng.ivf is not None:
-            eng.search(q, k, nprobe=nprobe, stats=st)
-        else:
-            eng.search(q, k, stats=st)
+        eng.search(q, spec, stats=st)
         powers.append(st.pruning_power * 100)
     p = np.array(powers)
     return (
@@ -53,11 +51,12 @@ def run(scale: str = "smoke"):
         engines[pruner] = VectorSearchEngine.build(
             X, index="ivf", pruner=pruner, capacity=1024,
         )
+    spec = SearchSpec(k=k, nprobe=nprobe)
     for name, eng in engines.items():
         for q in Q[: min(4, len(Q))]:  # warm capacity-bucket jit variants
-            eng.search(q, k, nprobe=nprobe)
+            eng.search(q, spec)
         t0 = time.perf_counter()
-        found = [eng.search(q, k, nprobe=nprobe)[0] for q in Q]
+        found = [eng.search(q, spec).ids for q in Q]
         dt = time.perf_counter() - t0
         rec = recall_at_k(np.stack(found), gt_ids)
         emit(

@@ -11,12 +11,13 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import VectorSearchEngine
+from repro.core.engine import SearchSpec, VectorSearchEngine
 from repro.core.pdxearch import pdxearch
 from .common import dataset, emit
 
 
 def _phase_times(eng, Q, k=10, nprobe=8, reps=2):
+    spec = SearchSpec(k=k, nprobe=nprobe, metric=eng.spec.metric)
     t_pre = t_buckets = t_scan = 0.0
     for _ in range(reps):
         for q in Q:
@@ -27,16 +28,14 @@ def _phase_times(eng, Q, k=10, nprobe=8, reps=2):
             t_pre += time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            border = eng.ivf.rank_buckets(qt, eng.metric)
+            order, start = eng.ivf.route(qt, spec.nprobe, spec.metric)
             t_buckets += time.perf_counter() - t0
 
-            order = eng.ivf.partition_order(border, nprobe)
-            start = int(eng.ivf.part_counts[border[0]])
             t0 = time.perf_counter()
             pdxearch(
-                eng.store, q, k, eng.pruner, metric=eng.metric,
-                schedule=eng.schedule, sel_frac=eng.sel_frac,
-                group=eng.group, pid_order=order, start_parts=start,
+                eng.store, q, spec.k, eng.pruner, metric=spec.metric,
+                schedule=spec.schedule, sel_frac=spec.sel_frac,
+                group=spec.group, pid_order=order, start_parts=start,
             )
             t_scan += time.perf_counter() - t0
     n = reps * len(Q)
@@ -53,7 +52,7 @@ def run(scale: str = "smoke"):
         eng = VectorSearchEngine.build(
             X, index="ivf", pruner=pruner, capacity=1024,
         )
-        eng.search(Q[0], 10, nprobe=8)  # warmup jits
+        eng.search(Q[0], SearchSpec(k=10, nprobe=8))  # warmup jits
         pre, buck, scan = _phase_times(eng, Q)
         tot = pre + buck + scan
         emit(

@@ -11,9 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import VectorSearchEngine
-from repro.core.layout import build_flat_store
-from repro.core.pdxearch import search_batch_matmul
+from repro.core.engine import SearchSpec, VectorSearchEngine
 from repro.data.synthetic import ground_truth, recall_at_k
 from .common import dataset, emit
 
@@ -47,11 +45,11 @@ def run(scale: str = "smoke"):
     gt_ids, _ = ground_truth(X, Q, k)
 
     # paper setting: 10K-vector partitions for exact PDX-BOND
+    spec = SearchSpec(k=k)
     bond = VectorSearchEngine.build(X, pruner="bond", capacity=4096)
     lin = VectorSearchEngine.build(X, pruner="linear", capacity=4096)
     Xj = jnp.asarray(X)
     XTj = jnp.asarray(np.ascontiguousarray(X.T))
-    store = build_flat_store(X, capacity=4096)
 
     def bench(name, fn):
         for q in Q[: min(4, len(Q))]:  # warm all capacity-bucket jit variants
@@ -63,19 +61,19 @@ def run(scale: str = "smoke"):
         emit(f"fig9/{name}", dt / len(Q) * 1e6,
              f"qps={len(Q)/dt:.1f};recall={rec:.3f}")
 
-    bench("pdx-bond", lambda q: bond.search(q, k)[0])
-    bench("pdx-linear", lambda q: lin.search(q, k)[0])
+    bench("pdx-bond", lambda q: bond.search(q, spec).ids)
+    bench("pdx-linear", lambda q: lin.search(q, spec).ids)
     bench("nary-linear", lambda q: _nary_scan(Xj, jnp.asarray(q), k)[1])
     bench("dsm-linear", lambda q: _dsm_scan(XTj, jnp.asarray(q), k)[1])
 
-    # beyond-paper: batched MXU-form exact scan, amortized per query
-    Qj = jnp.asarray(Q)
-    search_batch_matmul(store.data, store.ids, Qj, k)  # warmup
+    # beyond-paper: batched MXU-form exact scan, amortized per query — the
+    # same entry point; a (B, D) batch makes the planner pick the MXU scan.
+    lin.search(Q, spec)  # warmup
     t0 = time.perf_counter()
-    res = search_batch_matmul(store.data, store.ids, Qj, k)
-    jax.block_until_ready(res.ids)
+    res = lin.search(Q, spec)
     dt = time.perf_counter() - t0
-    rec = recall_at_k(np.asarray(res.ids), gt_ids)
+    assert res.plan.executor == "batch-matmul", res.plan
+    rec = recall_at_k(res.ids, gt_ids)
     emit("fig9/pdx-batched-matmul", dt / len(Q) * 1e6,
          f"qps={len(Q)/dt:.1f};recall={rec:.3f}")
 

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import VectorSearchEngine
+from repro.core.engine import SearchSpec, VectorSearchEngine
 from repro.core.pruners import make_adsampling
 from repro.data.synthetic import ground_truth, recall_at_k
 from repro.index.kmeans import kmeans
@@ -121,8 +121,10 @@ def run(scale: str = "smoke"):
                 f"qps={len(Q)/dt:.1f};recall={rec:.3f}",
             )
 
-    bench("pdx-ads", lambda q, np_: pdx_ads.search(q, k, nprobe=np_)[0])
-    bench("pdx-linear", lambda q, np_: pdx_lin.search(q, k, nprobe=np_)[0])
+    bench("pdx-ads",
+          lambda q, np_: pdx_ads.search(q, SearchSpec(k=k, nprobe=np_)).ids)
+    bench("pdx-linear",
+          lambda q, np_: pdx_lin.search(q, SearchSpec(k=k, nprobe=np_)).ids)
     bench("nary-linear(faiss-like)",
           lambda q, np_: np.asarray(hor_lin.search(q, k, np_, "linear")[1]))
     bench("nary-ads(simd-like)",

@@ -7,7 +7,7 @@ import time
 
 import numpy as np
 
-from repro.core.engine import VectorSearchEngine
+from repro.core.engine import SearchSpec, VectorSearchEngine
 from .common import dataset, emit
 
 FRACS = [0.02, 0.05, 0.1, 0.2, 0.4, 0.6]
@@ -20,21 +20,21 @@ def run(scale: str = "smoke"):
     X, Q = dataset(n, dim, "skewed", n_queries=nq, seed=9)
 
     lin = VectorSearchEngine.build(X, pruner="linear", capacity=1024)
-    lin.search(Q[0], 10)
+    lin.search(Q[0], SearchSpec(k=10))
     t0 = time.perf_counter()
     for q in Q:
-        lin.search(q, 10)
+        lin.search(q, SearchSpec(k=10))
     t_lin = (time.perf_counter() - t0) / len(Q)
 
+    # One preprocessed engine; sel_frac is a per-query SearchSpec knob.
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=1024)
     for frac in FRACS:
-        eng = VectorSearchEngine.build(
-            X, pruner="adsampling", capacity=1024, sel_frac=frac,
-        )
+        spec = SearchSpec(k=10, sel_frac=frac)
         for q in Q[: min(4, len(Q))]:  # warm capacity-bucket jit variants
-            eng.search(q, 10)
+            eng.search(q, spec)
         t0 = time.perf_counter()
         for q in Q:
-            eng.search(q, 10)
+            eng.search(q, spec)
         t = (time.perf_counter() - t0) / len(Q)
         emit(f"fig10/selfrac{frac}", t * 1e6,
              f"speedup_vs_linear={t_lin/t:.2f}")

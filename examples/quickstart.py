@@ -1,10 +1,10 @@
-"""Quickstart: build a PDX store, search it exactly and approximately.
+"""Quickstart: build a PDX store, search it through the spec/plan API.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core.engine import SearchStats, VectorSearchEngine
+from repro.core.engine import SearchSpec, SearchStats, VectorSearchEngine
 from repro.data.synthetic import ground_truth, make_dataset, recall_at_k
 
 
@@ -12,27 +12,32 @@ def main():
     # 50K skewed vectors, 128-dim (SIFT-like per the paper's taxonomy)
     X, Q = make_dataset(50_000, 128, "skewed", n_queries=8, seed=0)
     gt_ids, gt_d = ground_truth(X, Q, k=10)
+    spec = SearchSpec(k=10)
 
     # --- exact search with PDX-BOND (no preprocessing, no recall loss) ----
     bond = VectorSearchEngine.build(X, pruner="bond", capacity=4096)
     stats = SearchStats()
-    ids, dists = bond.search(Q[0], k=10, stats=stats)
+    ids, dists = bond.search(Q[0], spec, stats=stats)
     print(f"PDX-BOND exact: recall={recall_at_k(ids[None], gt_ids[:1]):.2f} "
           f"pruning_power={stats.pruning_power:.1%}")
 
     # --- approximate IVF search with ADSampling ---------------------------
+    # Same entry point: the planner routes through the IVF index.
     ads = VectorSearchEngine.build(
         X, index="ivf", pruner="adsampling", capacity=1024
     )
+    ivf_spec = spec.replace(nprobe=16)
     recs = []
     for qi, q in enumerate(Q):
-        ids, _ = ads.search(q, k=10, nprobe=16)
+        ids, _ = ads.search(q, ivf_spec)
         recs.append(recall_at_k(ids[None], gt_ids[qi : qi + 1]))
     print(f"PDX-ADSampling IVF (nprobe=16): recall={np.mean(recs):.2f}")
 
-    # --- beyond-paper batched MXU-form scan --------------------------------
-    ids_b, _ = bond.search_batch(Q, k=10)
-    print(f"batched matmul scan: recall={recall_at_k(ids_b, gt_ids):.2f}")
+    # --- batched queries: same entry point, planner picks the MXU scan ----
+    res = bond.search(Q, spec)
+    print(f"batched ({res.plan.executor}): "
+          f"recall={recall_at_k(res.ids, gt_ids):.2f}")
+    print(f"  plan: {res.plan.reason}")
 
 
 if __name__ == "__main__":

@@ -3,7 +3,10 @@
    PDX: A Data Layout for Vector Similarity Search (SIGMOD 2025).
 
 Public API:
-    repro.core.engine.VectorSearchEngine   — exact/IVF search w/ dimension pruning
+    repro.core.engine.VectorSearchEngine   — exact/IVF search w/ dimension pruning;
+                                             one search() entry point driven by a
+                                             declarative SearchSpec + query planner
+                                             (repro.core.spec / repro.core.plan)
     repro.configs                          — assigned architecture registry
     repro.launch                           — mesh / dryrun / train / serve drivers
 """

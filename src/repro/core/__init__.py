@@ -1,15 +1,35 @@
-"""The paper's primary contribution: the PDX layout + PDXearch + pruners.
+"""The paper's primary contribution: the PDX layout + PDXearch + pruners,
+fronted by a declarative spec/plan API.
 
-Public API: VectorSearchEngine (engine.py) wraps everything; the pieces
-(layout, distance kernels, pruning predicates, search phases) are importable
-individually for composition and testing.
+Layering:
+
+  * ``spec``     — ``SearchSpec`` (what to search: k, metric, pruning
+                   config, nprobe, execution hints) and ``SearchResult``
+                   (ids, dists, stats, plan trace).
+  * ``plan``     — the query planner and executor registry: maps a
+                   ``(SearchSpec, store, query shape, optional mesh)`` to
+                   adaptive / jit-masked / batch-matmul / block-sharded /
+                   dim-sharded / batch-block-sharded execution.
+  * ``engine``   — ``VectorSearchEngine``: the single public entry point;
+                   ``engine.search(q_or_Q, spec)`` plans and executes.
+  * ``layout`` / ``distance`` / ``pruners`` / ``pdxearch`` / ``topk`` — the
+    building blocks (PDX tiles, distance kernels, pruning predicates, the
+    three-phase search, streaming top-k), importable individually for
+    composition and testing.
 """
-from .engine import SearchStats, VectorSearchEngine  # noqa: F401
+from .engine import VectorSearchEngine  # noqa: F401
 from .layout import PDXStore, build_bucketed_store, build_flat_store  # noqa: F401
-from .pdxearch import pdxearch, pdxearch_jit, search_batch_matmul  # noqa: F401
+from .pdxearch import (  # noqa: F401
+    SearchStats,
+    pdxearch,
+    pdxearch_jit,
+    search_batch_matmul,
+)
+from .plan import ExecutionPlan, execute, executor_names, plan_search  # noqa: F401
 from .pruners import (  # noqa: F401
     make_adsampling,
     make_bond,
     make_bsa,
     make_plain_pruner,
 )
+from .spec import SearchResult, SearchSpec  # noqa: F401

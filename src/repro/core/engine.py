@@ -1,28 +1,58 @@
-"""VectorSearchEngine — the framework's public vector-search API.
+"""VectorSearchEngine — the framework's single public vector-search API.
 
-Combines layout + index + pruner + PDXearch into the object a service embeds
-(cf. the paper's open-source C++/Python PDX library).  NumPy in, NumPy out.
+Combines layout + index + pruner into the object a service embeds, and
+delegates *execution mode* to the query planner (``repro.core.plan``): one
+``search`` call serves single queries and batches, exact and pruned scans,
+IVF routing, and the mesh-sharded distributed paths.  NumPy in, NumPy out.
 
     eng = VectorSearchEngine.build(X, index="ivf", pruner="adsampling")
-    ids, dists = eng.search(q, k=10, nprobe=16)
-    ids, dists = eng.search_batch(Q, k=10)          # MXU batched path
+    spec = SearchSpec(k=10, nprobe=16)
+    ids, dists = eng.search(q, spec)        # single query
+    res = eng.search(Q, spec)               # (B, D) batch — planner batches
+    res.plan.executor, res.plan.reason      # which mode ran, and why
+
+With a device mesh (built via ``jax.make_mesh`` or given at build time) the
+planner dispatches to the ``repro.dist`` sharded executors automatically —
+including the fused batched path that issues one top-k all-gather per query
+batch:
+
+    eng = VectorSearchEngine.build(X, mesh=jax.make_mesh((8,), ("data",)))
+    res = eng.search(Q, SearchSpec(k=10))   # -> "batch-block-sharded"
+
+Migration from the pre-spec API (old entry points remain as deprecated
+shims for one release):
+
+    old call / kwarg                        spec/plan equivalent
+    --------------------------------------  --------------------------------
+    search(q, k=10)                         search(q, SearchSpec(k=10))
+    search(q, k, nprobe=16)                 SearchSpec(k=k, nprobe=16)
+    search_jit(q, k)                        SearchSpec(k=k, prefer_static=True)
+                                            (or executor="jit-masked")
+    search_batch(Q, k)                      search(Q, SearchSpec(k=k))
+    dist.pdx_sharded.search_block_sharded   search(q, spec, mesh=mesh)
+    dist.pdx_sharded.search_dim_sharded     search(q, spec, mesh=model_mesh)
+    build(schedule=, delta_d=, sel_frac=,   SearchSpec(schedule=, delta_d=,
+          group=, metric=)                    sel_frac=, group=, metric=)
+                                            (build kwargs still accepted —
+                                             they seed ``engine.spec``)
+
+Pruner *algorithm* selection (``pruner="adsampling"``, ``eps0``, ``bsa_m``,
+``zone_size``) stays a build-time choice: those transforms are baked into
+the stored vectors.  Everything about a single query is a ``SearchSpec``.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import warnings
+from typing import Any, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..index.ivf import IVFIndex, build_ivf
 from .layout import PDXStore, build_flat_store
-from .pdxearch import (
-    SearchStats,
-    pdxearch,
-    pdxearch_jit,
-    search_batch_matmul,
-)
+from .pdxearch import SearchStats
+from .plan import ExecutionPlan, execute, plan_search
 from .pruners import (
     Pruner,
     make_adsampling,
@@ -31,8 +61,9 @@ from .pruners import (
     make_bsa,
     make_plain_pruner,
 )
+from .spec import SearchResult, SearchSpec
 
-__all__ = ["VectorSearchEngine", "SearchStats"]
+__all__ = ["VectorSearchEngine", "SearchSpec", "SearchResult", "SearchStats"]
 
 PRUNERS = ("linear", "adsampling", "bsa", "bond", "bond-decreasing")
 
@@ -62,14 +93,15 @@ def _make_pruner(
 
 @dataclasses.dataclass
 class VectorSearchEngine:
+    """Store + pruner + optional IVF index + optional mesh, searched through
+    the planner.  ``spec`` holds the engine's default ``SearchSpec`` (seeded
+    from build kwargs); per-call specs override it."""
+
     store: PDXStore
     pruner: Pruner
-    metric: str
+    spec: SearchSpec = SearchSpec()
     ivf: Optional[IVFIndex] = None
-    schedule: str = "adaptive"
-    delta_d: int = 32
-    sel_frac: float = 0.2
-    group: int = 8
+    mesh: Any = None
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -92,6 +124,8 @@ class VectorSearchEngine:
         kmeans_iters: int = 10,
         seed: int = 0,
         precomputed_ivf=None,
+        spec: Optional[SearchSpec] = None,
+        mesh: Any = None,
     ) -> "VectorSearchEngine":
         X = np.ascontiguousarray(np.asarray(X, np.float32))
         pr = _make_pruner(
@@ -110,56 +144,106 @@ class VectorSearchEngine:
             store = build_flat_store(Xt, capacity=capacity)
         else:
             raise ValueError(f"index must be 'flat' or 'ivf', got {index!r}")
-        return cls(
-            store=store, pruner=pr, metric=metric, ivf=ivf,
-            schedule=schedule, delta_d=delta_d, sel_frac=sel_frac, group=group,
-        )
+        if spec is None:
+            spec = SearchSpec(
+                metric=metric, schedule=schedule, delta_d=delta_d,
+                sel_frac=sel_frac, group=group,
+            )
+        return cls(store=store, pruner=pr, spec=spec, ivf=ivf, mesh=mesh)
 
     # ----------------------------------------------------------------- search
     def search(
         self,
         q: np.ndarray,
-        k: int = 10,
+        spec: Optional[SearchSpec] = None,
         *,
-        nprobe: int = 8,
         stats: Optional[SearchStats] = None,
-    ) -> tuple[np.ndarray, np.ndarray]:
-        q = jnp.asarray(q, jnp.float32)
-        if self.ivf is not None:
-            res = self.ivf.search(
-                q, k, self.pruner, nprobe=nprobe, metric=self.metric,
-                schedule=self.schedule, delta_d=self.delta_d,
-                sel_frac=self.sel_frac, group=self.group, stats=stats,
-            )
-        else:
-            res = pdxearch(
-                self.store, q, k, self.pruner, metric=self.metric,
-                schedule=self.schedule, delta_d=self.delta_d,
-                sel_frac=self.sel_frac, group=self.group, stats=stats,
-            )
-        return np.asarray(res.ids), np.asarray(res.dists)
+        mesh: Any = None,
+        **overrides,
+    ) -> SearchResult:
+        """Search for the nearest neighbours of ``q`` under ``spec``.
 
-    def search_jit(self, q: np.ndarray, k: int = 10):
-        """Shape-static masked variant (repro.dist uses this form)."""
-        res = pdxearch_jit(
-            self.store, jnp.asarray(q, jnp.float32), k, self.pruner,
-            metric=self.metric, schedule=self.schedule, delta_d=self.delta_d,
+        ``q`` — one (D,) query or a (B, D) batch; the result's ids/dists
+        match that shape ((k,) or (B, k)).  ``spec`` defaults to the
+        engine's; keyword ``overrides`` (any ``SearchSpec`` field, e.g.
+        ``k=``, ``nprobe=``) apply on top of it, which also keeps the
+        legacy ``search(q, k=10, nprobe=16)`` call shape working.  ``mesh``
+        overrides the engine mesh for this call.  The returned
+        ``SearchResult`` unpacks as ``(ids, dists)`` and carries the
+        ``ExecutionPlan`` trace.
+        """
+        if isinstance(spec, (int, np.integer)):  # legacy positional k
+            overrides.setdefault("k", spec)
+            spec = None
+        base = spec if spec is not None else self.spec
+        if overrides:
+            base = base.replace(**overrides)
+        Q = jnp.asarray(q, jnp.float32)
+        if Q.ndim not in (1, 2):
+            raise ValueError(f"q must be (D,) or (B, D), got shape {Q.shape}")
+        single = Q.ndim == 1
+        Qb = Q[None, :] if single else Q
+        use_mesh = mesh if mesh is not None else self.mesh
+        plan = plan_search(
+            base, self.store, Qb.shape[0], pruner=self.pruner,
+            ivf=self.ivf, mesh=use_mesh, wants_stats=stats is not None,
         )
-        return np.asarray(res.ids), np.asarray(res.dists)
+        ids, dists = execute(
+            plan, base, self.store, self.pruner, Qb,
+            ivf=self.ivf, mesh=use_mesh, stats=stats,
+        )
+        if single:
+            ids, dists = ids[0], dists[0]
+        return SearchResult(ids=ids, dists=dists, spec=base, plan=plan,
+                            stats=stats)
+
+    def plan(
+        self,
+        q: np.ndarray,
+        spec: Optional[SearchSpec] = None,
+        *,
+        mesh: Any = None,
+        wants_stats: bool = False,
+    ) -> ExecutionPlan:
+        """Dry-run the planner: which executor would ``search(q, spec)`` use."""
+        Q = jnp.asarray(q, jnp.float32)
+        n_queries = 1 if Q.ndim == 1 else Q.shape[0]
+        return plan_search(
+            spec if spec is not None else self.spec, self.store, n_queries,
+            pruner=self.pruner, ivf=self.ivf,
+            mesh=mesh if mesh is not None else self.mesh,
+            wants_stats=wants_stats,
+        )
+
+    # ------------------------------------------- deprecated one-release shims
+    def search_jit(self, q: np.ndarray, k: int = 10):
+        """Deprecated: use ``search(q, spec.replace(prefer_static=True))``."""
+        warnings.warn(
+            "VectorSearchEngine.search_jit is deprecated; use search() with "
+            "SearchSpec(prefer_static=True) or executor='jit-masked'",
+            DeprecationWarning, stacklevel=2,
+        )
+        res = self.search(q, self.spec.replace(k=k, executor="jit-masked"))
+        return res.ids, res.dists
 
     def search_batch(self, Q: np.ndarray, k: int = 10):
-        """Beyond-paper batched exact scan (MXU matmul form). Queries must be
-        pre-transformed only by isometries, so this uses raw coordinates when
-        the pruner is a projection (results are identical either way)."""
-        Qj = jnp.asarray(Q, jnp.float32)
-        if self.pruner.needs_preprocess:
-            Qj = jnp.stack([self.pruner.transform_query(r) for r in Qj])
-        res = search_batch_matmul(
-            self.store.data, self.store.ids, Qj, k, self.metric
+        """Deprecated: ``search`` accepts a (B, D) batch directly."""
+        warnings.warn(
+            "VectorSearchEngine.search_batch is deprecated; pass the (B, D) "
+            "batch to search() — the planner picks the batched executor",
+            DeprecationWarning, stacklevel=2,
         )
-        return np.asarray(res.ids), np.asarray(res.dists)
+        res = self.search(
+            np.atleast_2d(np.asarray(Q, np.float32)),
+            self.spec.replace(k=k, executor="batch-matmul"),
+        )
+        return res.ids, res.dists
 
     # ------------------------------------------------------------------ util
+    @property
+    def metric(self) -> str:
+        return self.spec.metric
+
     @property
     def num_vectors(self) -> int:
         return self.store.num_vectors

@@ -22,6 +22,7 @@ Execution modes:
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 from typing import Optional, Sequence
@@ -96,9 +97,16 @@ def make_boundaries(
 
 # --------------------------------------------------------------------------
 # Per-pruner jitted step functions (cached so jax.jit's shape cache is reused
-# across queries; the predicate closure is baked in).
+# across queries; the predicate closure is baked in).  Keyed on the pruner's
+# stable fingerprint (name + param hash), NOT id(): object ids are recycled
+# after GC, so an id key could alias a dead pruner's cached predicate onto a
+# new, different pruner — and the cache grew without bound.  LRU-bounded:
+# each entry pins jit executables plus the predicate's closed-over arrays.
 # --------------------------------------------------------------------------
-_EXEC_CACHE: dict[tuple[int, str], tuple] = {}
+_EXEC_CACHE: "collections.OrderedDict[tuple[str, str], tuple]" = (
+    collections.OrderedDict()
+)
+_EXEC_CACHE_MAX = 16
 
 
 def _accum_gdc(block: jax.Array, qd: jax.Array, metric: str) -> jax.Array:
@@ -122,8 +130,9 @@ def _accum_rows(block: jax.Array, qd: jax.Array, metric: str) -> jax.Array:
 
 
 def _get_exec(pruner: Pruner, metric: str):
-    key = (id(pruner), metric)
+    key = (pruner.fingerprint, metric)
     if key in _EXEC_CACHE:
+        _EXEC_CACHE.move_to_end(key)
         return _EXEC_CACHE[key]
 
     @jax.jit
@@ -159,6 +168,8 @@ def _get_exec(pruner: Pruner, metric: str):
 
     fns = (warmup_step, prune_step, compact)
     _EXEC_CACHE[key] = fns
+    while len(_EXEC_CACHE) > _EXEC_CACHE_MAX:
+        _EXEC_CACHE.popitem(last=False)
     return fns
 
 

@@ -1,0 +1,287 @@
+"""Query planner + executor registry — *how* a ``SearchSpec`` executes.
+
+``plan_search`` maps (spec, store, query count, optional mesh) onto one of
+the registered executors; ``execute`` runs the chosen plan.  All executors
+answer the same question — top-k under the spec's metric/pruner config —
+and differ only in execution strategy:
+
+  adaptive             host-orchestrated PDXearch (paper Section 4); the
+                       only executor with IVF routing and work accounting.
+  jit-masked           shape-static masked PDXearch (whole search jittable).
+  batch-matmul         exact MXU scan of a (B, D) query batch.
+  block-sharded        PDX partitions sharded over the mesh "data" axis;
+                       per-query top-k all-gather.
+  dim-sharded          dimension slices sharded over the mesh "model" axis;
+                       psum completes distances.
+  batch-block-sharded  batch-matmul fused with block sharding: ONE packed
+                       top-k all-gather per query *batch* (the ROADMAP's
+                       "batched distributed search").
+
+Planner rules, in order: a forced ``spec.executor`` wins; a stats request
+pins the adaptive executor (only it accounts work); a usable mesh picks a
+sharded executor (batched when B > 1 and ``spec.batch_collectives``);
+otherwise batches take the MXU scan and single queries the adaptive (or,
+with ``spec.prefer_static``, the masked) path.  Every fallback records its
+reason in the ``ExecutionPlan`` trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layout import PDXStore
+from .pdxearch import SearchStats, pdxearch, pdxearch_jit, search_batch_matmul
+from .pruners import Pruner
+from .spec import SearchSpec
+
+__all__ = [
+    "ExecutionPlan",
+    "executor_names",
+    "plan_search",
+    "execute",
+    "register_executor",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionPlan:
+    """Plan trace: which executor runs, and why the planner picked it."""
+
+    executor: str
+    reason: str
+    n_queries: int
+    pruner: str = ""            # pruner fingerprint (stable identity)
+    mesh_axes: tuple = ()
+
+
+# -------------------------------------------------------------------- registry
+# name -> fn(store, pruner, Q(B,D), spec, *, ivf, mesh, stats) -> (ids, dists)
+# with ids/dists shaped (B, k).
+_EXECUTORS: dict[str, Callable] = {}
+
+
+def register_executor(name: str):
+    def deco(fn):
+        _EXECUTORS[name] = fn
+        return fn
+    return deco
+
+
+def executor_names() -> tuple[str, ...]:
+    return tuple(_EXECUTORS)
+
+
+# --------------------------------------------------------------------- planner
+def plan_search(
+    spec: SearchSpec,
+    store: PDXStore,
+    n_queries: int,
+    *,
+    pruner: Optional[Pruner] = None,
+    ivf=None,
+    mesh=None,
+    wants_stats: bool = False,
+) -> ExecutionPlan:
+    """Choose an executor for ``n_queries`` queries against ``store``."""
+    fp = pruner.fingerprint if pruner is not None else ""
+    axes = tuple(getattr(mesh, "axis_names", ())) if mesh is not None else ()
+
+    def plan(executor: str, reason: str) -> ExecutionPlan:
+        return ExecutionPlan(
+            executor=executor, reason=reason, n_queries=n_queries,
+            pruner=fp, mesh_axes=axes,
+        )
+
+    if spec.executor is not None:
+        if spec.executor not in _EXECUTORS:
+            raise ValueError(
+                f"unknown executor {spec.executor!r}; "
+                f"registered: {executor_names()}"
+            )
+        if wants_stats and spec.executor != "adaptive":
+            warnings.warn(
+                f"stats requested but executor {spec.executor!r} is forced; "
+                "only the adaptive executor accounts pruning work — the "
+                "SearchStats will stay zero",
+                RuntimeWarning, stacklevel=3,
+            )
+        return plan(spec.executor, "forced by spec.executor")
+
+    if wants_stats:
+        return plan("adaptive", "stats requested; only the adaptive "
+                                "executor accounts pruning work")
+
+    if mesh is not None:
+        if ivf is not None:
+            return _host_plan(
+                spec, n_queries, ivf, plan,
+                note="mesh ignored: IVF bucket routing is host-side "
+                     "(ROADMAP: IVF bucket routing across hosts); ",
+            )
+        if "data" in axes:
+            n_sh = mesh.shape["data"]
+            if store.num_partitions % n_sh == 0:
+                if n_queries > 1 and spec.batch_collectives:
+                    return plan(
+                        "batch-block-sharded",
+                        f"mesh 'data' axis ({n_sh} shards), batch of "
+                        f"{n_queries}: one top-k all-gather per batch",
+                    )
+                return plan(
+                    "block-sharded",
+                    f"mesh 'data' axis ({n_sh} shards): per-query "
+                    "shard-local PDXearch + top-k all-gather",
+                )
+            return _host_plan(
+                spec, n_queries, ivf, plan,
+                note=f"mesh ignored: {store.num_partitions} partitions not "
+                     f"divisible over {n_sh} 'data' shards; ",
+            )
+        if "model" in axes:
+            n_sh = mesh.shape["model"]
+            if store.dim % n_sh == 0:
+                return plan(
+                    "dim-sharded",
+                    f"mesh 'model' axis ({n_sh} shards): dimension-slab "
+                    "partial distances + psum",
+                )
+            return _host_plan(
+                spec, n_queries, ivf, plan,
+                note=f"mesh ignored: D={store.dim} not divisible over "
+                     f"{n_sh} 'model' shards; ",
+            )
+        return _host_plan(
+            spec, n_queries, ivf, plan,
+            note=f"mesh ignored: no 'data'/'model' axis in {axes}; ",
+        )
+
+    return _host_plan(spec, n_queries, ivf, plan)
+
+
+def _host_plan(spec, n_queries, ivf, plan, note: str = "") -> ExecutionPlan:
+    if n_queries > 1 and ivf is None:
+        return plan("batch-matmul",
+                    note + f"batch of {n_queries} on one host: exact MXU scan")
+    if spec.prefer_static and ivf is None:
+        return plan("jit-masked",
+                    note + "prefer_static: shape-static masked PDXearch")
+    where = "IVF-routed" if ivf is not None else "flat"
+    return plan("adaptive", note + f"{where} host-orchestrated PDXearch")
+
+
+# ------------------------------------------------------------------- execution
+def execute(
+    plan: ExecutionPlan,
+    spec: SearchSpec,
+    store: PDXStore,
+    pruner: Pruner,
+    Q: jax.Array,
+    *,
+    ivf=None,
+    mesh=None,
+    stats: Optional[SearchStats] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Run ``plan`` for the (B, D) query batch ``Q`` -> (B, k) ids/dists."""
+    fn = _EXECUTORS[plan.executor]
+    ids, dists = fn(store, pruner, Q, spec, ivf=ivf, mesh=mesh, stats=stats)
+    return np.asarray(ids), np.asarray(dists)
+
+
+@register_executor("adaptive")
+def _exec_adaptive(store, pruner, Q, spec, *, ivf, mesh, stats):
+    out_i, out_d = [], []
+    for q in Q:
+        if ivf is not None:
+            qt = pruner.transform_query(q)
+            order, start_parts = ivf.route(qt, spec.nprobe, spec.metric)
+        else:
+            order, start_parts = None, 1
+        res = pdxearch(
+            store, q, spec.k, pruner, metric=spec.metric,
+            schedule=spec.schedule, delta_d=spec.delta_d,
+            sel_frac=spec.sel_frac, group=spec.group,
+            pid_order=order, start_parts=start_parts, stats=stats,
+        )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    return np.stack(out_i), np.stack(out_d)
+
+
+@register_executor("jit-masked")
+def _exec_jit_masked(store, pruner, Q, spec, *, ivf, mesh, stats):
+    if ivf is not None:
+        raise ValueError(
+            "jit-masked executor has no IVF routing (bucket ranking is "
+            "data-dependent); use the adaptive executor"
+        )
+    out_i, out_d = [], []
+    for q in Q:
+        res = pdxearch_jit(
+            store, q, spec.k, pruner, metric=spec.metric,
+            schedule=spec.schedule, delta_d=spec.delta_d,
+        )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    return np.stack(out_i), np.stack(out_d)
+
+
+def _transform_batch(pruner: Pruner, Q: jax.Array) -> jax.Array:
+    """Pruner query transforms are per-vector; vmap lifts them to batches."""
+    if not pruner.needs_preprocess:
+        return Q
+    return jax.vmap(pruner.transform_query)(Q)
+
+
+@register_executor("batch-matmul")
+def _exec_batch_matmul(store, pruner, Q, spec, *, ivf, mesh, stats):
+    # Exact scan over ALL partitions (IVF engines included: their store holds
+    # every bucket, so this is exact; nprobe does not apply).
+    Qt = _transform_batch(pruner, Q)
+    res = search_batch_matmul(store.data, store.ids, Qt, spec.k, spec.metric)
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+@register_executor("block-sharded")
+def _exec_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
+    from ..dist.pdx_sharded import search_block_sharded  # no core<->dist cycle
+
+    out_i, out_d = [], []
+    for q in Q:
+        res = search_block_sharded(
+            mesh, store.data, store.ids, q, spec.k, metric=spec.metric,
+            pruner=pruner, schedule=spec.schedule, delta_d=spec.delta_d,
+        )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    return np.stack(out_i), np.stack(out_d)
+
+
+@register_executor("dim-sharded")
+def _exec_dim_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
+    from ..dist.pdx_sharded import search_dim_sharded
+
+    out_i, out_d = [], []
+    for q in Q:
+        qt = pruner.transform_query(q)
+        res = search_dim_sharded(
+            mesh, store.data, store.ids, qt, spec.k, metric=spec.metric,
+        )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    return np.stack(out_i), np.stack(out_d)
+
+
+@register_executor("batch-block-sharded")
+def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
+    from ..dist.pdx_sharded import search_batch_block_sharded
+
+    Qt = _transform_batch(pruner, Q)
+    res = search_batch_block_sharded(
+        mesh, store.data, store.ids, Qt, spec.k, metric=spec.metric,
+    )
+    return np.asarray(res.ids), np.asarray(res.dists)

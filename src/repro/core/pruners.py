@@ -19,6 +19,8 @@ BOND [de Vries et al., SIGMOD'02].
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import itertools
 from typing import Callable, Optional
 
 import jax
@@ -27,12 +29,36 @@ import numpy as np
 
 __all__ = [
     "Pruner",
+    "pruner_fingerprint",
     "make_plain_pruner",
     "make_adsampling",
     "make_bsa",
     "make_bond",
     "random_orthogonal",
 ]
+
+
+def pruner_fingerprint(name: str, *params) -> str:
+    """Stable identity of a pruning predicate: name + hash of its parameters.
+
+    Two pruners with equal fingerprints have functionally identical
+    ``keep_mask``/``dim_order`` closures, so jit caches (and ``SearchSpec``
+    plan traces) can key on this instead of object identity — object ids are
+    reused after GC, which both aliased unrelated pruners and leaked cache
+    entries (see ``core.pdxearch._EXEC_CACHE``).
+    """
+    h = hashlib.sha1()
+    for p in params:
+        if isinstance(p, (np.ndarray, jax.Array)):
+            a = np.asarray(p)
+            h.update(str(a.shape).encode())
+            h.update(a.tobytes())
+        else:
+            h.update(repr(p).encode())
+    return f"{name}:{h.hexdigest()[:16]}"
+
+
+_ANON_IDS = itertools.count()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +74,17 @@ class Pruner:
     keep_mask: Callable[[jax.Array, jax.Array, jax.Array], jax.Array]
     # Optional query-aware dimension order: (q (D,)) -> permutation (D,) int32.
     dim_order: Optional[Callable[[jax.Array], jax.Array]] = None
+    # Stable identity (name + param hash).  Factories set it; a directly
+    # constructed Pruner without one gets a process-unique fallback, so two
+    # hand-built pruners with different closures can never share a jit-cache
+    # entry (a counter, unlike id(), is never reused after GC).
+    fingerprint: str = ""
+
+    def __post_init__(self):
+        if not self.fingerprint:
+            object.__setattr__(
+                self, "fingerprint", f"{self.name}:anon{next(_ANON_IDS)}"
+            )
 
 
 # --------------------------------------------------------------------------
@@ -61,6 +98,7 @@ def make_plain_pruner() -> Pruner:
         preprocess=lambda X: X,
         transform_query=lambda q: q,
         keep_mask=lambda partial, d, thr: jnp.ones_like(partial, dtype=bool),
+        fingerprint=pruner_fingerprint("linear"),
     )
 
 
@@ -98,6 +136,7 @@ def make_adsampling(dim: int, eps0: float = 2.1, seed: int = 0) -> Pruner:
         preprocess=lambda X: (np.asarray(X, np.float32) @ P.T),
         transform_query=lambda q: Pj @ q,
         keep_mask=keep_mask,
+        fingerprint=pruner_fingerprint("adsampling", dim, eps0, seed),
     )
 
 
@@ -147,6 +186,7 @@ def make_bsa(X_sample: np.ndarray, m: float = 3.0, seed: int = 0) -> Pruner:
         preprocess=lambda X: (np.asarray(X, np.float32) @ components),
         transform_query=lambda q: q @ Cj,
         keep_mask=keep_mask,
+        fingerprint=pruner_fingerprint("bsa", components, m),
     )
 
 
@@ -186,6 +226,7 @@ def make_bond(dim_means: jax.Array, zone_size: int = 0) -> Pruner:
         transform_query=lambda q: q,
         keep_mask=lambda partial, d, thr: partial <= thr,
         dim_order=dim_order,
+        fingerprint=pruner_fingerprint("bond", means, zone_size),
     )
 
 
@@ -203,4 +244,5 @@ def make_bond_decreasing(dim: int) -> Pruner:
         transform_query=lambda q: q,
         keep_mask=lambda partial, d, thr: partial <= thr,
         dim_order=dim_order,
+        fingerprint=pruner_fingerprint("bond-decreasing", dim),
     )

@@ -1,0 +1,131 @@
+"""Declarative search specification — *what* to search, not *how*.
+
+The paper's point is that one layout (PDX) serves many search strategies:
+exact scans, ADSampling/BSA/BOND dimension pruning, IVF routing, batched
+MXU scans, and the sharded distributed paths.  A ``SearchSpec`` captures the
+strategy-level knobs once; the planner (``repro.core.plan``) maps a
+``(spec, store, query shape, optional mesh)`` onto the right execution mode,
+so callers never hand-pick ``search`` vs ``search_jit`` vs ``search_batch``
+vs the ``repro.dist`` entry points again.
+
+    spec = SearchSpec(k=10, nprobe=16)
+    res = engine.search(q, spec)          # single query
+    res = engine.search(Q, spec)          # (B, D) batch — planner batches
+    res.ids, res.dists, res.plan          # plan records executor + reason
+
+Specs are frozen (hashable, reusable across queries and engines) and
+validated at construction.  The pruning *algorithm* (ADSampling's rotation,
+BSA's PCA, BOND's means) is build-time engine state — it transforms the
+stored vectors — so the spec carries its runtime configuration (boundary
+schedule, selectivity threshold, grouping) and the planner records the
+engine pruner's stable fingerprint in the plan trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .distance import METRICS
+from .pdxearch import SearchStats
+
+__all__ = ["SearchSpec", "SearchResult"]
+
+SCHEDULES = ("adaptive", "fixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchSpec:
+    """Declarative description of one vector-similarity search.
+
+    Result shaping
+      k          — neighbours to return per query.
+      metric     — "l2" | "l1" | "ip" (all minimized; ip is negated).
+
+    Pruning configuration (PDXearch phases; see ``core.pdxearch``)
+      schedule   — boundary schedule: "adaptive" (exponential steps, the
+                   paper's fix for fixed-Δd tail latency) or "fixed".
+      delta_d    — step size for the "fixed" schedule.
+      sel_frac   — surviving fraction below which the PRUNE phase compacts
+                   survivors (paper: 0.2).
+      group      — partitions evaluated per pruning round (host path).
+
+    IVF routing
+      nprobe     — buckets probed when the engine has an IVF index.
+
+    Execution hints (planner inputs, never change *results* beyond the
+    pruner's own approximation)
+      executor          — force a registered executor by name (see
+                          ``repro.core.plan.executor_names()``); None lets
+                          the planner choose.
+      prefer_static     — prefer the shape-static masked path over the
+                          host-orchestrated adaptive one (for callers that
+                          need the whole search inside one jit).
+      batch_collectives — on a mesh, amortize the top-k merge collective
+                          over the whole query batch (one all-gather per
+                          batch) instead of issuing it per query.
+    """
+
+    k: int = 10
+    metric: str = "l2"
+    schedule: str = "adaptive"
+    delta_d: int = 32
+    sel_frac: float = 0.2
+    group: int = 8
+    nprobe: int = 8
+    executor: Optional[str] = None
+    prefer_static: bool = False
+    batch_collectives: bool = True
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"k must be >= 1, got {self.k}")
+        if self.metric not in METRICS:
+            raise ValueError(f"metric must be one of {METRICS}, got {self.metric!r}")
+        if self.schedule not in SCHEDULES:
+            raise ValueError(
+                f"schedule must be one of {SCHEDULES}, got {self.schedule!r}"
+            )
+        if self.delta_d < 1:
+            raise ValueError(f"delta_d must be >= 1, got {self.delta_d}")
+        if not (0.0 < self.sel_frac <= 1.0):
+            raise ValueError(f"sel_frac must be in (0, 1], got {self.sel_frac}")
+        if self.group < 1:
+            raise ValueError(f"group must be >= 1, got {self.group}")
+        if self.nprobe < 1:
+            raise ValueError(f"nprobe must be >= 1, got {self.nprobe}")
+
+    def replace(self, **changes) -> "SearchSpec":
+        """A copy with ``changes`` applied (specs are immutable)."""
+        return dataclasses.replace(self, **changes)
+
+
+@dataclasses.dataclass
+class SearchResult:
+    """Search output plus its provenance.
+
+    ``ids``/``dists`` are (k,) for a single query, (B, k) for a batch.
+    ``plan`` is the ``repro.core.plan.ExecutionPlan`` the planner chose
+    (executor name + reason), ``stats`` the work accounting when requested.
+
+    Unpacks like the legacy ``(ids, dists)`` tuple::
+
+        ids, dists = engine.search(q, spec)
+    """
+
+    ids: np.ndarray
+    dists: np.ndarray
+    spec: SearchSpec
+    plan: "ExecutionPlan"  # noqa: F821 — repro.core.plan (no import cycle)
+    stats: Optional[SearchStats] = None
+
+    def __iter__(self):
+        yield self.ids
+        yield self.dists
+
+    def __getitem__(self, i):
+        return (self.ids, self.dists)[i]
+
+    def __len__(self) -> int:
+        return 2

@@ -11,6 +11,14 @@ the dimension-major layout:
   every tile (a dimension shard of a PDX tile is contiguous — paper Fig. 1),
   one psum completes the distances, then a single top-k finishes.  Exact for
   all metrics whose distance decomposes over dimensions (l2 / l1 / ip).
+
+* ``search_batch_block_sharded`` — the batched distributed search: the MXU
+  batch scan (``core.pdxearch.search_batch_matmul``) runs on each device's
+  partition shard, then the per-shard (B, k) candidate sets cross the mesh
+  in ONE packed all-gather per query *batch* (dists and bitcast ids share
+  the collective), amortizing the merge latency that the per-query path
+  pays B times.  The planner (``repro.core.plan``) picks this automatically
+  when a mesh and B > 1 are present.
 """
 from __future__ import annotations
 
@@ -20,11 +28,20 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.distance import pdx_distance
-from ..core.pdxearch import _pdxearch_jit_impl, make_boundaries
+from ..core.pdxearch import (
+    _pdxearch_jit_impl,
+    make_boundaries,
+    search_batch_matmul,
+)
 from ..core.pruners import Pruner, make_plain_pruner
 from ..core.topk import TopK, topk_init, topk_merge
 
-__all__ = ["search_block_sharded", "search_dim_sharded"]
+__all__ = [
+    "search_block_sharded",
+    "search_dim_sharded",
+    "search_batch_block_sharded",
+    "collective_counts",
+]
 
 
 def search_block_sharded(
@@ -107,3 +124,90 @@ def search_dim_sharded(
         check_rep=False,
     )(data, q.astype(jnp.float32))
     return topk_merge(topk_init(k), dmat.reshape(-1), ids.reshape(-1))
+
+
+def search_batch_block_sharded(
+    mesh,
+    data: jax.Array,
+    ids: jax.Array,
+    Q: jax.Array,
+    k: int,
+    *,
+    metric: str = "l2",
+    axis: str = "data",
+) -> TopK:
+    """Batched block-sharded exact search: ``data`` (P, D, C) / ``ids``
+    (P, C) shard partitions over ``axis``; the (B, D) query batch is
+    replicated.  Each device scans its shard with the MXU batch kernel, then
+    the per-shard (B, k) top-k sets are exchanged in a single all-gather for
+    the whole batch — dists and ids are packed into one (B, 2k) buffer
+    (int32 ids bitcast to float32, bit-exact) so exactly ONE collective
+    crosses the mesh per batch, versus 2·B for B per-query searches.
+    Returns a replicated batched TopK with (B, k) leaves."""
+    n_shards = mesh.shape[axis]
+    if data.shape[0] % n_shards:
+        raise ValueError(
+            f"{data.shape[0]} partitions not divisible over {n_shards} "
+            f"'{axis}' shards"
+        )
+    if Q.ndim != 2:
+        raise ValueError(f"Q must be (B, D), got shape {Q.shape}")
+
+    def local(d_sh, i_sh, Q_rep):
+        B = Q_rep.shape[0]
+        res = search_batch_matmul(d_sh, i_sh, Q_rep, k, metric)  # (B, k)
+        packed = jnp.concatenate(
+            [res.dists, jax.lax.bitcast_convert_type(res.ids, jnp.float32)],
+            axis=1,
+        )  # (B, 2k)
+        allp = jax.lax.all_gather(packed, axis, axis=1, tiled=True)
+        allp = allp.reshape(B, n_shards, 2 * k)
+        all_d = allp[:, :, :k].reshape(B, n_shards * k)
+        all_i = jax.lax.bitcast_convert_type(
+            allp[:, :, k:], jnp.int32
+        ).reshape(B, n_shards * k)
+        merge = lambda dd, ii: topk_merge(topk_init(k), dd, ii)  # noqa: E731
+        return jax.vmap(merge)(all_d, all_i)
+
+    fn = shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P()),
+        out_specs=TopK(dists=P(), ids=P()),
+        check_rep=False,
+    )
+    return fn(data, ids, Q.astype(jnp.float32))
+
+
+_COLLECTIVES = (
+    "all_gather", "psum", "all_to_all", "ppermute", "reduce_scatter",
+)
+
+
+def collective_counts(fn, *args, **kwargs) -> dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and count collective primitives in the
+    jaxpr (recursing into sub-jaxprs of pjit/shard_map/scan/...).  Used by
+    tests and benchmarks to assert e.g. the batched path issues exactly one
+    all-gather per batch, independent of batch size."""
+    counts: dict[str, int] = {}
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in _COLLECTIVES:
+                counts[name] = counts.get(name, 0) + 1
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    walk(sub)
+
+    def _subjaxprs(v):
+        if hasattr(v, "eqns"):            # Jaxpr
+            yield v
+        elif hasattr(v, "jaxpr"):         # ClosedJaxpr
+            yield v.jaxpr
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _subjaxprs(item)
+
+    walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
+    return counts

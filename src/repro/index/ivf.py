@@ -50,6 +50,17 @@ class IVFIndex:
         ]
         return np.concatenate(parts)
 
+    def route(
+        self, qt: jax.Array, nprobe: int, metric: str = "l2"
+    ) -> tuple[np.ndarray, int]:
+        """Query routing for the planner's adaptive executor: rank buckets
+        by centroid distance of the (already pruner-transformed) query and
+        return ``(partition visit order, start_parts)`` — START linear-scans
+        every partition of the nearest bucket to seed the top-k threshold."""
+        border = self.rank_buckets(qt, metric)
+        order = self.partition_order(border, nprobe)
+        return order, int(self.part_counts[border[0]])
+
     def search(
         self,
         q: jax.Array,
@@ -64,11 +75,11 @@ class IVFIndex:
         group: int = 8,
         stats: Optional[SearchStats] = None,
     ) -> TopK:
+        """Compatibility wrapper around ``route`` + ``pdxearch``.  Engine
+        code goes through ``repro.core.plan``, which calls ``route`` and
+        owns the executor choice; this stays for direct index users."""
         qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
-        border = self.rank_buckets(qt, metric)
-        order = self.partition_order(border, nprobe)
-        # START = every partition of the nearest bucket (linear scan).
-        start_parts = int(self.part_counts[border[0]])
+        order, start_parts = self.route(qt, nprobe, metric)
         return pdxearch(
             self.store,
             q,

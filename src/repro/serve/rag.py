@@ -59,13 +59,12 @@ class RagPipeline:
         )
 
     def retrieve(self, query_batch: dict) -> np.ndarray:
-        """-> (B, retrieve_k) document ids."""
-        q_emb = self.engine.embed(query_batch)
-        out = []
-        for q in q_emb:
-            ids, _ = self.store.search(q, k=self.retrieve_k)
-            out.append(ids)
-        return np.stack(out)
+        """-> (B, retrieve_k) document ids.  One planned search for the whole
+        embedding batch — the planner picks the batched (and, when the store
+        carries a mesh, batched-sharded) executor instead of a per-query loop."""
+        q_emb = np.atleast_2d(np.asarray(self.engine.embed(query_batch)))
+        res = self.store.search(q_emb, self.store.spec.replace(k=self.retrieve_k))
+        return np.asarray(res.ids)
 
     def answer(
         self, query_batch: dict, max_new_tokens: int = 16

@@ -1,0 +1,289 @@
+"""SearchSpec / planner / executor tests: dispatch rules, cross-executor
+agreement against brute-force ground truth (including the sharded executors
+under 8 fake CPU devices, in subprocesses — see tests/test_dist.py for why),
+the one-collective-per-batch guarantee, and the bounded fingerprint-keyed
+exec cache."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.core.plan import executor_names, plan_search
+from repro.core.pruners import make_adsampling, make_bond
+from repro.data.synthetic import ground_truth, make_dataset, recall_at_k
+
+from test_dist import run_devices
+
+
+# ------------------------------------------------------------------ SearchSpec
+def test_spec_is_frozen_and_validated():
+    spec = SearchSpec(k=5)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        spec.k = 7
+    assert spec.replace(k=7).k == 7 and spec.k == 5
+    for bad in (
+        dict(k=0), dict(metric="cosine"), dict(schedule="geometric"),
+        dict(sel_frac=0.0), dict(sel_frac=1.5), dict(nprobe=0),
+        dict(delta_d=0), dict(group=0),
+    ):
+        with pytest.raises(ValueError):
+            SearchSpec(**bad)
+
+
+def test_search_result_unpacks_like_tuple():
+    X, Q = make_dataset(500, 16, "normal", n_queries=2, seed=0)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    res = eng.search(Q[0], SearchSpec(k=3))
+    ids, dists = res
+    assert ids is res.ids and dists is res.dists
+    assert res[0] is res.ids and res[1] is res.dists and len(res) == 2
+    assert res.plan.executor in executor_names()
+
+
+# --------------------------------------------------------------- planner rules
+class _FakeMesh:
+    """Duck-typed mesh for planner unit tests (no devices needed)."""
+
+    def __init__(self, **axes):
+        self.axis_names = tuple(axes)
+        self.shape = dict(axes)
+
+
+def _store(n=512, dim=32, cap=64):
+    X, _ = make_dataset(n, dim, "normal", n_queries=1, seed=0)
+    return VectorSearchEngine.build(X, pruner="linear", capacity=cap).store
+
+
+def test_planner_dispatch_rules():
+    spec = SearchSpec(k=5)
+    store = _store()  # 8 partitions, D=32
+
+    assert plan_search(spec, store, 1).executor == "adaptive"
+    assert plan_search(spec, store, 8).executor == "batch-matmul"
+    assert plan_search(spec.replace(prefer_static=True), store, 1).executor \
+        == "jit-masked"
+    assert plan_search(spec, store, 1, wants_stats=True).executor == "adaptive"
+    assert plan_search(spec, store, 8, wants_stats=True).executor == "adaptive"
+
+    data_mesh = _FakeMesh(data=8)
+    assert plan_search(spec, store, 1, mesh=data_mesh).executor \
+        == "block-sharded"
+    assert plan_search(spec, store, 4, mesh=data_mesh).executor \
+        == "batch-block-sharded"
+    assert plan_search(
+        spec.replace(batch_collectives=False), store, 4, mesh=data_mesh
+    ).executor == "block-sharded"
+    assert plan_search(spec, store, 1, mesh=_FakeMesh(model=8)).executor \
+        == "dim-sharded"
+
+    # indivisible mesh axes fall back to host executors, with the reason
+    p = plan_search(spec, store, 1, mesh=_FakeMesh(data=7))
+    assert p.executor == "adaptive" and "not divisible" in p.reason
+    p = plan_search(spec, store, 4, mesh=_FakeMesh(model=7))
+    assert p.executor == "batch-matmul" and "not divisible" in p.reason
+
+    # IVF is host-routed for now: a mesh is ignored, batches loop adaptive
+    ivf = object()
+    p = plan_search(spec, store, 4, ivf=ivf, mesh=data_mesh)
+    assert p.executor == "adaptive" and "IVF" in p.reason
+    assert plan_search(spec, store, 4, ivf=ivf).executor == "adaptive"
+
+    # forced executor wins over everything
+    p = plan_search(spec.replace(executor="jit-masked"), store, 4,
+                    mesh=data_mesh, wants_stats=True)
+    assert p.executor == "jit-masked" and "forced" in p.reason
+    with pytest.raises(ValueError, match="unknown executor"):
+        plan_search(spec.replace(executor="warp-drive"), store, 1)
+
+
+def test_plan_trace_records_pruner_fingerprint():
+    X, Q = make_dataset(400, 16, "normal", n_queries=1, seed=1)
+    eng = VectorSearchEngine.build(X, pruner="bond", capacity=128)
+    res = eng.search(Q[0], SearchSpec(k=3))
+    assert res.plan.pruner == eng.pruner.fingerprint
+    assert res.plan.pruner.startswith("bond:")
+
+
+# ----------------------------------------- executor agreement (host executors)
+HOST_CASES = [
+    ("flat", "linear"),
+    ("flat", "bond"),
+    ("ivf", "linear"),
+]
+
+
+@pytest.mark.parametrize("index,pruner", HOST_CASES)
+def test_host_executors_match_ground_truth(index, pruner):
+    """Every host executor the planner can pick returns brute-force top-k
+    for exact pruners — single query and batch, flat and IVF."""
+    X, Q = make_dataset(1536, 24, "clustered", n_queries=4, seed=21)
+    gt_ids, gt_d = ground_truth(X, Q, k=5)
+    nlist = 8
+    eng = VectorSearchEngine.build(
+        X, index=index, pruner=pruner, capacity=128, nlist=nlist,
+    )
+    # full probe makes IVF exact; flat ignores nprobe
+    spec = SearchSpec(k=5, nprobe=nlist)
+    executors = ["adaptive"]
+    if index == "flat":
+        executors += ["jit-masked", "batch-matmul"]
+    else:
+        executors += ["batch-matmul"]  # exact full scan over all buckets
+    for ex in executors:
+        res = eng.search(Q, spec.replace(executor=ex))
+        assert res.plan.executor == ex
+        assert recall_at_k(res.ids, gt_ids) == 1.0, (ex, res.ids)
+        np.testing.assert_allclose(
+            np.sort(res.dists, axis=1), np.sort(gt_d, axis=1),
+            rtol=1e-3, atol=1e-2,
+        )
+        # single-query form agrees with the batch form
+        res1 = eng.search(Q[0], spec.replace(executor=ex))
+        assert res1.ids.shape == (5,)
+        assert set(res1.ids.tolist()) == set(np.asarray(res.ids[0]).tolist())
+
+
+def test_batch_entry_point_vmaps_query_transform():
+    """Projection pruners transform batches via one vmapped transform; the
+    batched executor must match per-query transforms exactly."""
+    X, Q = make_dataset(1024, 32, "normal", n_queries=6, seed=3)
+    gt_ids, _ = ground_truth(X, Q, k=5)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=256)
+    res = eng.search(Q, SearchSpec(k=5))
+    assert res.plan.executor == "batch-matmul"
+    assert recall_at_k(res.ids, gt_ids) == 1.0  # exact: batch path never prunes
+
+
+# --------------------------------------------- sharded executors (8 fake CPUs)
+def test_sharded_executors_match_ground_truth_8dev():
+    run_devices("""
+    from repro.core.engine import SearchSpec, VectorSearchEngine
+    from repro.data.synthetic import make_dataset, ground_truth, recall_at_k
+
+    X, Q = make_dataset(2048, 64, "normal", n_queries=4, seed=0)
+    gt_ids, gt_d = ground_truth(X, Q, k=5)
+    spec = SearchSpec(k=5)
+
+    # data mesh: 16 partitions over 8 shards
+    mesh = jax.make_mesh((8,), ("data",))
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128, mesh=mesh)
+    r1 = eng.search(Q[0], spec)
+    assert r1.plan.executor == "block-sharded", r1.plan
+    rb = eng.search(Q, spec)
+    assert rb.plan.executor == "batch-block-sharded", rb.plan
+    rq = eng.search(Q, spec.replace(batch_collectives=False))
+    assert rq.plan.executor == "block-sharded", rq.plan
+    for r in (rb, rq):
+        assert recall_at_k(r.ids, gt_ids) == 1.0
+        np.testing.assert_allclose(np.sort(r.dists, axis=1),
+                                   np.sort(gt_d, axis=1), rtol=1e-3, atol=1e-2)
+    assert set(r1.ids.tolist()) == set(gt_ids[0].tolist())
+
+    # model mesh: D=64 over 8 shards, with a projection pruner
+    meshm = jax.make_mesh((8,), ("model",))
+    engm = VectorSearchEngine.build(X, pruner="adsampling", capacity=128,
+                                    mesh=meshm)
+    rm = engm.search(Q[0], spec)
+    assert rm.plan.executor == "dim-sharded", rm.plan
+    assert set(rm.ids.tolist()) == set(gt_ids[0].tolist())
+    print("OK")
+    """)
+
+
+def test_batched_executor_one_allgather_per_batch_8dev():
+    """Acceptance gate: the fused batched executor issues exactly ONE top-k
+    all-gather per query batch (dists+ids packed), independent of B, while
+    the per-query path pays two per query."""
+    run_devices("""
+    from repro.core.layout import build_flat_store
+    from repro.data.synthetic import make_dataset
+    from repro.dist.pdx_sharded import (collective_counts,
+                                        search_batch_block_sharded,
+                                        search_block_sharded)
+
+    X, Q = make_dataset(2048, 32, "normal", n_queries=16, seed=0)
+    store = build_flat_store(X, capacity=128)
+    mesh = jax.make_mesh((8,), ("data",))
+    d, i = store.data, store.ids
+    for B in (2, 4, 16):
+        counts = collective_counts(
+            lambda dd, ii, qq: search_batch_block_sharded(mesh, dd, ii, qq, 5),
+            d, i, jnp.asarray(Q[:B]))
+        assert counts == {"all_gather": 1}, (B, counts)
+    per_q = collective_counts(
+        lambda dd, ii, qq: search_block_sharded(mesh, dd, ii, qq, 5),
+        d, i, jnp.asarray(Q[0]))
+    assert per_q.get("all_gather") == 2, per_q
+    print("OK")
+    """)
+
+
+# ------------------------------------------------------------------ exec cache
+def test_exec_cache_fingerprint_keyed_and_bounded():
+    from repro.core.pdxearch import _EXEC_CACHE, _EXEC_CACHE_MAX, _get_exec
+
+    # identical params => identical fingerprint => shared cache entry
+    a1 = make_adsampling(16, eps0=2.1, seed=0)
+    a2 = make_adsampling(16, eps0=2.1, seed=0)
+    assert a1 is not a2 and a1.fingerprint == a2.fingerprint
+    assert _get_exec(a1, "l2") is _get_exec(a2, "l2")
+    # different params => distinct entries
+    assert make_adsampling(16, eps0=3.0, seed=0).fingerprint != a1.fingerprint
+    assert make_adsampling(16, eps0=2.1, seed=1).fingerprint != a1.fingerprint
+
+    # the cache stays bounded no matter how many pruners come and go
+    rng = np.random.default_rng(0)
+    for _ in range(2 * _EXEC_CACHE_MAX + 3):
+        pr = make_bond(rng.standard_normal(8).astype(np.float32))
+        _get_exec(pr, "l2")
+        assert len(_EXEC_CACHE) <= _EXEC_CACHE_MAX
+    # LRU: the most recent entry survived
+    assert (pr.fingerprint, "l2") in _EXEC_CACHE
+
+
+# ------------------------------------------------------------ deprecated shims
+def test_deprecated_shims_still_work():
+    X, Q = make_dataset(600, 16, "normal", n_queries=3, seed=5)
+    gt_ids, _ = ground_truth(X, Q, k=4)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    with pytest.warns(DeprecationWarning):
+        ids, dists = eng.search_batch(Q, k=4)
+    assert ids.shape == (3, 4) and recall_at_k(ids, gt_ids) == 1.0
+    with pytest.warns(DeprecationWarning):
+        ids, dists = eng.search_jit(Q[0], k=4)
+    assert set(ids.tolist()) == set(gt_ids[0].tolist())
+    # legacy kwarg/positional call shapes on the unified entry point
+    ids, dists = eng.search(Q[0], 4)
+    assert ids.shape == (4,)
+    ids, dists = eng.search(Q[0], np.int64(4))  # k computed from array shapes
+    assert ids.shape == (4,)
+    ids, dists = eng.search(Q[0], k=4)
+    assert set(ids.tolist()) == set(gt_ids[0].tolist())
+
+
+def test_directly_constructed_pruners_never_share_cache_entries():
+    import jax.numpy as jnp
+
+    from repro.core.pruners import Pruner
+
+    def mk(keep):
+        return Pruner(
+            name="custom", is_exact=True, needs_preprocess=False,
+            preprocess=lambda X: X, transform_query=lambda q: q,
+            keep_mask=keep,
+        )
+
+    a = mk(lambda partial, d, thr: jnp.ones_like(partial, dtype=bool))
+    b = mk(lambda partial, d, thr: partial <= thr)
+    assert a.fingerprint != b.fingerprint  # no factory => unique fallback
+
+
+def test_stats_with_forced_non_adaptive_executor_warns():
+    from repro.core.pdxearch import SearchStats
+
+    X, Q = make_dataset(400, 16, "normal", n_queries=2, seed=8)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    with pytest.warns(RuntimeWarning, match="adaptive executor"):
+        eng.search(Q, SearchSpec(k=3, executor="batch-matmul"),
+                   stats=SearchStats())
