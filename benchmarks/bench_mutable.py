@@ -1,0 +1,126 @@
+"""Mutable PDX store under churn: insert/delete/repack throughput and
+search latency with a live write-head vs the sealed-store baseline —
+the ISSUE-3 acceptance gate is that batched search latency under churn
+stays within 2x of the sealed store.  Emits CSV rows plus a
+``BENCH_mutable.json`` record.
+
+    PYTHONPATH=src python -m benchmarks.bench_mutable [--scale paper]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+
+from .common import dataset, emit, timeit, write_json
+
+
+def run(scale: str = "smoke"):
+    n, dim, cap, nq = (
+        (8192, 64, 256, 16) if scale == "smoke" else (131072, 128, 1024, 64)
+    )
+    k, churn = 10, max(n // 16, 256)
+    X, Q = dataset(n, dim, "normal", n_queries=nq, seed=0)
+    rng = np.random.default_rng(1)
+    spec = SearchSpec(k=k)
+
+    # ---- sealed baseline: batched exact scan on the frozen store ----------
+    sealed = VectorSearchEngine.build(X, pruner="linear", capacity=cap)
+    t_sealed = timeit(lambda: sealed.search(Q, spec))
+    emit(
+        f"mutable/sealed_search/n{n}/D{dim}/B{nq}",
+        t_sealed / nq * 1e6,
+        f"qps={nq / t_sealed:.1f}",
+    )
+
+    # ---- mutation throughput ---------------------------------------------
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=cap)
+    new = rng.standard_normal((churn, dim)).astype(np.float32)
+
+    t0 = time.perf_counter()
+    ids = eng.insert(new)
+    t_insert = time.perf_counter() - t0
+    emit(
+        f"mutable/insert/n{n}/rows{churn}",
+        t_insert / churn * 1e6,
+        f"rows_per_s={churn / t_insert:.0f}",
+    )
+
+    victims = rng.choice(n, size=churn, replace=False)
+    t0 = time.perf_counter()
+    eng.delete(victims)
+    t_delete = time.perf_counter() - t0
+    emit(
+        f"mutable/delete/n{n}/rows{churn}",
+        t_delete / churn * 1e6,
+        f"rows_per_s={churn / t_delete:.0f}",
+    )
+
+    # ---- search latency under churn (write-head live + tombstones) -------
+    assert eng.store.head_count > 0, "churn config must leave a live head"
+    eng.search(Q, spec)  # compile against the churned version
+    t_churn = timeit(lambda: eng.search(Q, spec))
+    ratio = t_churn / t_sealed
+    emit(
+        f"mutable/churned_search/n{n}/D{dim}/B{nq}",
+        t_churn / nq * 1e6,
+        f"qps={nq / t_churn:.1f};vs_sealed={ratio:.2f}x"
+        f";head={eng.store.head_count}",
+    )
+    if ratio > 2.0:
+        print(f"# WARNING churned search {ratio:.2f}x sealed (budget: 2x)")
+
+    # ---- repack + post-compact latency -----------------------------------
+    t0 = time.perf_counter()
+    eng.compact()
+    t_repack = time.perf_counter() - t0
+    emit(
+        f"mutable/repack/n{eng.store.num_vectors}",
+        t_repack * 1e6,
+        f"rows_per_s={eng.store.num_vectors / t_repack:.0f}",
+    )
+    eng.search(Q, spec)
+    t_compacted = timeit(lambda: eng.search(Q, spec))
+    emit(
+        f"mutable/compacted_search/n{eng.store.num_vectors}/D{dim}/B{nq}",
+        t_compacted / nq * 1e6,
+        f"qps={nq / t_compacted:.1f};vs_sealed={t_compacted / t_sealed:.2f}x",
+    )
+
+    write_json(
+        "BENCH_mutable.json",
+        {
+            "bench": "mutable_store_churn_vs_sealed",
+            "scale": scale,
+            "n_vectors": n,
+            "dim": dim,
+            "capacity": cap,
+            "k": k,
+            "batch": nq,
+            "churn_rows": int(churn),
+            "insert_rows_per_s": churn / t_insert,
+            "delete_rows_per_s": churn / t_delete,
+            "repack_s": t_repack,
+            "t_sealed_us_per_query": t_sealed / nq * 1e6,
+            "t_churned_us_per_query": t_churn / nq * 1e6,
+            "t_compacted_us_per_query": t_compacted / nq * 1e6,
+            "churned_over_sealed": ratio,
+            "compacted_over_sealed": t_compacted / t_sealed,
+            "within_2x_budget": bool(ratio <= 2.0),
+        },
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

@@ -11,14 +11,21 @@ Layering:
                    adaptive / jit-masked / batch-matmul / block-sharded /
                    dim-sharded / batch-block-sharded execution.
   * ``engine``   — ``VectorSearchEngine``: the single public entry point;
-                   ``engine.search(q_or_Q, spec)`` plans and executes.
+                   ``engine.search(q_or_Q, spec)`` plans and executes, and
+                   ``insert``/``delete``/``compact`` mutate the store live
+                   (upgrading it to a versioned ``MutablePDXStore``).
   * ``layout`` / ``distance`` / ``pruners`` / ``pdxearch`` / ``topk`` — the
-    building blocks (PDX tiles, distance kernels, pruning predicates, the
-    three-phase search, streaming top-k), importable individually for
-    composition and testing.
+    building blocks (PDX tiles frozen and mutable, distance kernels,
+    pruning predicates, the three-phase search, streaming top-k),
+    importable individually for composition and testing.
 """
 from .engine import VectorSearchEngine  # noqa: F401
-from .layout import PDXStore, build_bucketed_store, build_flat_store  # noqa: F401
+from .layout import (  # noqa: F401
+    MutablePDXStore,
+    PDXStore,
+    build_bucketed_store,
+    build_flat_store,
+)
 from .pdxearch import (  # noqa: F401
     SearchStats,
     pdxearch,

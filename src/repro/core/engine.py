@@ -35,6 +35,23 @@ shims for one release):
           group=, metric=)                    sel_frac=, group=, metric=)
                                             (build kwargs still accepted —
                                              they seed ``engine.spec``)
+    rebuild store to add vectors            insert(X) -> new ids (write-head
+                                              absorbs them; searched exactly
+                                              by every executor immediately)
+    rebuild store to remove vectors         delete(ids) (tombstones; slots
+                                              poisoned + reusable)
+    rebuild store to defragment             compact() (drains tombstones +
+                                              write-head into lane-aligned
+                                              tiles, refreshes the store's
+                                              dim_means/dim_vars and rebuilds
+                                              a BOND pruner on them; BSA's
+                                              PCA stays build-time-calibrated
+                                              — rebuild to recalibrate)
+
+Mutation upgrades the frozen ``PDXStore`` into a versioned
+``core.layout.MutablePDXStore`` in place on first use; searches observe
+``store.version`` through the plan trace and jitted-executor caches are
+keyed on it, so no executor ever runs against stale tiles.
 
 Pruner *algorithm* selection (``pruner="adsampling"``, ``eps0``, ``bsa_m``,
 ``zone_size``) stays a build-time choice: those transforms are baked into
@@ -50,7 +67,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..index.ivf import IVFIndex, build_ivf
-from .layout import PDXStore, build_flat_store
+from .layout import MutablePDXStore, PDXStore, build_flat_store
 from .pdxearch import SearchStats
 from .plan import ExecutionPlan, execute, plan_search
 from .pruners import (
@@ -102,6 +119,8 @@ class VectorSearchEngine:
     spec: SearchSpec = SearchSpec()
     ivf: Optional[IVFIndex] = None
     mesh: Any = None
+    zone_size: int = 0          # BOND zone grouping (kept for pruner refresh)
+    head_capacity: int = 256    # write-head size on mutable upgrade
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -149,7 +168,8 @@ class VectorSearchEngine:
                 metric=metric, schedule=schedule, delta_d=delta_d,
                 sel_frac=sel_frac, group=group,
             )
-        return cls(store=store, pruner=pr, spec=spec, ivf=ivf, mesh=mesh)
+        return cls(store=store, pruner=pr, spec=spec, ivf=ivf, mesh=mesh,
+                   zone_size=zone_size)
 
     # ----------------------------------------------------------------- search
     def search(
@@ -214,6 +234,67 @@ class VectorSearchEngine:
             mesh=mesh if mesh is not None else self.mesh,
             wants_stats=wants_stats,
         )
+
+    # --------------------------------------------------------------- mutation
+    def _ensure_mutable(self) -> MutablePDXStore:
+        """Upgrade the frozen store into a MutablePDXStore on first mutation
+        (in place; the IVF index keeps pointing at the same store object)."""
+        if not isinstance(self.store, MutablePDXStore):
+            kwargs = dict(head_capacity=self.head_capacity)
+            if self.ivf is not None:
+                kwargs.update(
+                    num_buckets=self.ivf.nlist,
+                    part_counts=self.ivf.part_counts,
+                )
+            self.store = MutablePDXStore.from_store(self.store, **kwargs)
+            if self.ivf is not None:
+                self.ivf.store = self.store
+        return self.store
+
+    def _sync_ivf(self) -> None:
+        """Repacks move bucket boundaries; refresh the index's view of them."""
+        if self.ivf is not None and isinstance(self.store, MutablePDXStore):
+            self.ivf.part_offsets = self.store.part_offsets
+            self.ivf.part_counts = self.store.part_counts
+
+    def insert(self, X: np.ndarray) -> np.ndarray:
+        """Add vectors; returns their new ids (valid for ``delete`` and in
+        search results).  Rows land in the store's write-head — searched
+        exactly by every executor from this call on — and are drained into
+        sealed PDX tiles by a later flush/``compact()``.  IVF engines assign
+        each row to its nearest centroid at insert time so the repack keeps
+        buckets contiguous."""
+        X = np.atleast_2d(np.ascontiguousarray(np.asarray(X, np.float32)))
+        store = self._ensure_mutable()
+        Xt = self.pruner.preprocess(X) if self.pruner.needs_preprocess else X
+        assignments = self.ivf.assign(Xt) if self.ivf is not None else None
+        new_ids = store.insert(Xt, assignments=assignments)
+        self._sync_ivf()
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone vectors by id; returns how many were live.  Their slots
+        are poisoned (never rank into a top-k) and become reusable."""
+        store = self._ensure_mutable()
+        removed = store.delete(ids)
+        self._sync_ivf()
+        return removed
+
+    def compact(self) -> None:
+        """Repack: drain tombstones + write-head into minimal lane-aligned
+        tiles and refresh store metadata (dim_means/dim_vars).  A BOND
+        pruner is rebuilt from the repacked collection means — its
+        fingerprint changes, naturally invalidating jit caches.  BSA's PCA
+        projection is baked into the stored vectors at build time and is NOT
+        recalibrated here (it stays exact w.r.t. its build sample; rebuild
+        the engine to recalibrate after heavy distribution shift)."""
+        store = self._ensure_mutable()
+        store.repack()
+        self._sync_ivf()
+        if self.pruner.name == "bond":
+            self.pruner = make_bond(
+                jnp.asarray(store.dim_means), zone_size=self.zone_size
+            )
 
     # ------------------------------------------- deprecated one-release shims
     def search_jit(self, q: np.ndarray, k: int = 10):

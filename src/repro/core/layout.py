@@ -11,11 +11,25 @@ is why capacities here default to lane multiples; the paper's CPU-optimal
 
 Build-time code is NumPy (offline, like index construction in FAISS); the
 resulting arrays are device arrays consumed by jitted search code.
+
+Two store flavours share the tile format:
+
+* ``PDXStore`` — frozen build artifact (a dataclass of device arrays).
+* ``MutablePDXStore`` — the versioned, mutable serving store (the paper's
+  closing pitch: PDX "can work on vector data as-is ... attractive for
+  vector databases with frequent updates").  It keeps NumPy master copies
+  of the tiles plus a horizontal *write-head* buffer that absorbs inserts
+  (scanned exactly, unpruned, until flushed), per-partition free-slot
+  bitmaps (slots whose ``ids == -1`` are reusable), tombstoning deletes
+  (slot poisoned to ``PAD_VALUE`` so it can never enter a top-k), and a
+  ``repack()`` step that drains tombstones and the write-head back into
+  lane-aligned, bucket-contiguous tiles.  ``store.version`` increases
+  monotonically with every mutation; executors key their jit caches on it.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +38,7 @@ import numpy as np
 __all__ = [
     "PDXPartition",
     "PDXStore",
+    "MutablePDXStore",
     "build_flat_store",
     "build_bucketed_store",
     "pdx_to_nary",
@@ -104,23 +119,35 @@ def _round_up(x: int, m: int) -> int:
 
 
 def _pack_groups(
-    X: np.ndarray, groups: Sequence[np.ndarray], capacity: int
+    X: np.ndarray,
+    groups: Sequence[np.ndarray],
+    capacity: int,
+    row_ids: Optional[np.ndarray] = None,
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Pack row-id groups into (P, D, C) dimension-major tiles."""
+    """Pack row-id groups into (P, D, C) dimension-major tiles.
+
+    Empty groups emit NO partition (an empty IVF bucket must cost zero scan
+    work — a full all-``PAD_VALUE`` tile is pure wasted DMA + FLOPs).
+    ``row_ids`` maps a row index to its stored id (default: the row index
+    itself; mutable-store repacks pass the surviving sparse ids).
+    """
     n, d = X.shape
     parts_data, parts_ids, parts_counts = [], [], []
     for rows in groups:
         rows = np.asarray(rows, dtype=np.int64)
-        for lo in range(0, max(len(rows), 1), capacity):
+        for lo in range(0, len(rows), capacity):
             chunk = rows[lo : lo + capacity]
             tile = np.full((d, capacity), PAD_VALUE, dtype=X.dtype)
             ids = np.full((capacity,), -1, dtype=np.int32)
-            if len(chunk):
-                tile[:, : len(chunk)] = X[chunk].T
-                ids[: len(chunk)] = chunk
+            tile[:, : len(chunk)] = X[chunk].T
+            ids[: len(chunk)] = chunk if row_ids is None else row_ids[chunk]
             parts_data.append(tile)
             parts_ids.append(ids)
             parts_counts.append(len(chunk))
+    if not parts_data:  # fully empty collection: one all-pad placeholder
+        parts_data.append(np.full((d, capacity), PAD_VALUE, dtype=X.dtype))
+        parts_ids.append(np.full((capacity,), -1, dtype=np.int32))
+        parts_counts.append(0)
     return (
         np.stack(parts_data),
         np.stack(parts_ids),
@@ -168,21 +195,460 @@ def build_bucketed_store(
     for b in range(num_buckets):
         rows = np.nonzero(assignments == b)[0]
         groups.append(rows)
-        nparts[b] = max(_round_up(len(rows), capacity) // capacity, 1)
+        # empty bucket => zero partitions => zero scan work (its offset simply
+        # equals the next bucket's; partition_order yields an empty range)
+        nparts[b] = _round_up(len(rows), capacity) // capacity
     data, ids, counts = _pack_groups(X, groups, capacity)
     offsets = np.concatenate([[0], np.cumsum(nparts)[:-1]])
     return _store_from_packed(X, data, ids, counts), offsets, nparts
 
 
-def pdx_to_nary(store: PDXStore) -> np.ndarray:
-    """Inverse transposition (round-trip oracle for tests)."""
+def pdx_to_nary(store) -> np.ndarray:
+    """Inverse transposition (round-trip oracle for tests).
+
+    Works on frozen and mutable stores alike: live slots may sit anywhere in
+    a tile (tombstones leave holes) and ids may be sparse (deleted ids are
+    never reused), so row ``r`` of the output is the live vector with the
+    ``r``-th smallest id.  For a freshly built store ids are dense 0..n-1 and
+    this is the exact inverse of the build transposition.  Unflushed
+    write-head rows of a ``MutablePDXStore`` are included.
+    """
     data = np.asarray(store.data)
     ids = np.asarray(store.ids)
-    counts = np.asarray(store.counts)
-    n = int(counts.sum())
-    out = np.zeros((n, store.dim), dtype=data.dtype)
-    for p in range(store.num_partitions):
-        c = int(counts[p])
-        if c:
-            out[ids[p, :c]] = data[p, :, :c].T
-    return out
+    live = ids >= 0  # (P, C)
+    all_ids = [ids[live]]
+    all_vecs = [np.swapaxes(data, 1, 2)[live]]  # (n_live, D)
+    if hasattr(store, "head_live"):
+        hids, hvecs = store.head_live()
+        all_ids.append(hids)
+        all_vecs.append(hvecs)
+    flat_ids = np.concatenate(all_ids)
+    flat_vecs = np.concatenate(all_vecs) if flat_ids.size else np.zeros(
+        (0, store.dim), dtype=data.dtype
+    )
+    order = np.argsort(flat_ids, kind="stable")
+    return np.ascontiguousarray(flat_vecs[order])
+
+
+# ==========================================================================
+# Mutable PDX — the versioned serving store.
+# ==========================================================================
+class MutablePDXStore:
+    """Versioned, mutable PDX store: sealed tiles + write-head + tombstones.
+
+    Presents the same read interface as ``PDXStore`` (``data``/``ids``/
+    ``counts`` device arrays, ``dim``/``capacity``/``num_partitions``), so
+    every executor consumes it unchanged; mutation happens on NumPy master
+    copies and the device mirror is refreshed lazily, once per version.
+
+    Mutation model
+      * ``insert(V)`` appends rows to a small horizontal *write-head*
+        ``(head_capacity, D)`` buffer.  Write-head rows are scanned exactly
+        (unpruned) by every executor — the planner merges them into each
+        top-k (see ``repro.core.plan.execute``) — until a flush drains them
+        into sealed tiles.
+      * ``delete(ids)`` tombstones: the slot's id becomes -1 (which is also
+        the free-slot bitmap bit) and its column is poisoned to
+        ``PAD_VALUE`` so no metric can ever rank it into a top-k.
+      * ``flush()`` drains live write-head rows into free sealed slots
+        (bucket-local for bucketed stores, preserving the bucket-contiguous
+        layout); when free slots run out it falls back to ``repack()``.
+      * ``repack()`` rebuilds lane-aligned tiles from scratch out of the
+        surviving rows (bucket-contiguous for IVF) — the "background
+        re-pack" of the ROADMAP.  Partition count shrinks back to the
+        minimum, tombstone holes disappear, and pruner metadata
+        (``dim_means``/``dim_vars``) is refreshed from running moments.
+
+    ``version`` increases on every mutating call; jitted-executor caches
+    (``core.pdxearch._EXEC_CACHE``) and plan traces key on it so a search
+    can never reuse state derived from stale tiles.  ``tiles_version``
+    increases only when the *sealed* tiles change (sealed delete, flush,
+    repack): the device mirror and the sharded executors' padded-tile cache
+    key on it, so a head-only insert never re-uploads the whole store.
+
+    Pruner metadata is *incrementally* maintained: running per-dimension
+    sum / sum-of-squares are updated O(D) per inserted/deleted row, and the
+    public ``dim_means``/``dim_vars`` snapshot is refreshed on repack or
+    whenever the fraction of mutations since the last refresh exceeds
+    ``meta_staleness`` — never on every insert.
+    """
+
+    def __init__(
+        self,
+        data: np.ndarray,
+        ids: np.ndarray,
+        counts: np.ndarray,
+        dim_means: np.ndarray,
+        dim_vars: np.ndarray,
+        *,
+        head_capacity: int = 256,
+        num_buckets: Optional[int] = None,
+        part_bucket: Optional[np.ndarray] = None,
+        meta_staleness: float = 0.25,
+    ):
+        # np.asarray over a jax array yields a read-only view; these are the
+        # mutable masters, so force writable copies.
+        self._data = np.array(data, dtype=np.float32, copy=True, order="C")
+        self._ids = np.array(ids, dtype=np.int32, copy=True, order="C")
+        self._counts = np.asarray(counts, np.int32).copy()
+        # NOTE the per-partition free-slot bitmap IS `self._ids < 0` — a slot
+        # is reusable iff its id is the -1 sentinel, with no second array to
+        # keep in sync (see _plan_free_slot_fill).
+        self._dim_means = np.asarray(dim_means, np.float32).copy()
+        self._dim_vars = np.asarray(dim_vars, np.float32).copy()
+        self.meta_staleness = float(meta_staleness)
+        # version: every mutation (cache keys / plan traces key on it).
+        # tiles_version: only mutations that touch the SEALED tiles (sealed
+        # delete, flush, repack) — head-only inserts leave it alone, so the
+        # device mirror / padded-tile caches skip the full-store re-upload.
+        self.version = 0
+        self.tiles_version = 0
+
+        P, D, C = self._data.shape
+        if head_capacity < 1:
+            raise ValueError(
+                f"head_capacity must be >= 1, got {head_capacity}"
+            )
+        self.head_capacity = int(head_capacity)
+        self._head_data = np.full(
+            (self.head_capacity, D), PAD_VALUE, dtype=np.float32
+        )
+        self._head_ids = np.full((self.head_capacity,), -1, dtype=np.int32)
+        self._head_assign = np.full((self.head_capacity,), -1, dtype=np.int32)
+        self._head_n = 0  # append pointer (holes stay until flush)
+
+        # bucket structure (IVF): which bucket owns each sealed partition
+        self.num_buckets = num_buckets
+        if num_buckets is not None:
+            if part_bucket is None:
+                raise ValueError("bucketed store needs part_bucket")
+            self._part_bucket = np.asarray(part_bucket, np.int64).copy()
+        else:
+            self._part_bucket = np.full((P,), -1, dtype=np.int64)
+
+        # id -> location map ('s', p, c) sealed | ('h', j) write-head
+        self._id_loc = self._build_id_loc()
+        self._next_id = 1 + max(self._id_loc, default=-1)
+
+        # running per-dimension moments over live rows (float64 for drift)
+        live = self._ids >= 0
+        live_vecs = np.swapaxes(self._data, 1, 2)[live].astype(np.float64)
+        self._sum = live_vecs.sum(axis=0)
+        self._sumsq = (live_vecs**2).sum(axis=0)
+        self._n_live = int(live.sum())
+        self._mutations_since_meta = 0
+
+        self._dev: Optional[tuple] = None
+        self._dev_version = -1
+
+    def _build_id_loc(self) -> dict[int, tuple]:
+        """Vectorized sealed-slot scan (a Python loop over P*C slots would
+        dominate repack latency at 100k+ vectors)."""
+        ps, cs = np.nonzero(self._ids >= 0)
+        return {
+            i: ("s", p, c)
+            for i, p, c in zip(
+                self._ids[ps, cs].tolist(), ps.tolist(), cs.tolist()
+            )
+        }
+
+    # ----------------------------------------------------------- constructors
+    @classmethod
+    def from_store(
+        cls,
+        store: PDXStore,
+        *,
+        head_capacity: int = 256,
+        num_buckets: Optional[int] = None,
+        part_counts: Optional[np.ndarray] = None,
+        meta_staleness: float = 0.25,
+    ) -> "MutablePDXStore":
+        """Unseal a frozen ``PDXStore``.  For a bucketed (IVF) store pass its
+        per-bucket ``part_counts`` so repack keeps bucket contiguity (the
+        layout is bucket-contiguous, so counts fully determine ownership)."""
+        part_bucket = None
+        if num_buckets is not None:
+            nparts = np.asarray(part_counts, np.int64)
+            part_bucket = np.repeat(np.arange(num_buckets), nparts)
+            if len(part_bucket) < store.num_partitions:  # pad placeholders
+                part_bucket = np.concatenate([
+                    part_bucket,
+                    np.full(
+                        store.num_partitions - len(part_bucket), -1, np.int64
+                    ),
+                ])
+        return cls(
+            np.asarray(store.data), np.asarray(store.ids),
+            np.asarray(store.counts), np.asarray(store.dim_means),
+            np.asarray(store.dim_vars),
+            head_capacity=head_capacity, num_buckets=num_buckets,
+            part_bucket=part_bucket, meta_staleness=meta_staleness,
+        )
+
+    def _bump(self, tiles: bool = False):
+        self.version += 1
+        if tiles:
+            self.tiles_version += 1
+
+    # ------------------------------------------------------ PDXStore interface
+    def _sync_device(self):
+        if self._dev_version != self.tiles_version:
+            self._dev = (
+                jnp.array(self._data),
+                jnp.array(self._ids),
+                jnp.array(self._counts),
+            )
+            self._dev_version = self.tiles_version
+
+    @property
+    def data(self) -> jax.Array:
+        self._sync_device()
+        return self._dev[0]
+
+    @property
+    def ids(self) -> jax.Array:
+        self._sync_device()
+        return self._dev[1]
+
+    @property
+    def counts(self) -> jax.Array:
+        self._sync_device()
+        return self._dev[2]
+
+    @property
+    def dim_means(self) -> jax.Array:
+        return jnp.asarray(self._dim_means)
+
+    @property
+    def dim_vars(self) -> jax.Array:
+        return jnp.asarray(self._dim_vars)
+
+    @property
+    def num_partitions(self) -> int:
+        return self._data.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self._data.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self._data.shape[2]
+
+    @property
+    def num_vectors(self) -> int:
+        """Live vectors: sealed non-tombstoned slots + unflushed head rows."""
+        return int(self._counts.sum()) + int((self._head_ids >= 0).sum())
+
+    def partition(self, p: int) -> PDXPartition:
+        return PDXPartition(
+            data=self.data[p], ids=self.ids[p], count=int(self._counts[p])
+        )
+
+    # -------------------------------------------------------- bucket structure
+    @property
+    def part_offsets(self) -> np.ndarray:
+        """(K,) first partition id of each bucket (bucket-contiguous layout)."""
+        nparts = self.part_counts
+        return np.concatenate([[0], np.cumsum(nparts)[:-1]]).astype(np.int64)
+
+    @property
+    def part_counts(self) -> np.ndarray:
+        """(K,) partitions per bucket; 0 for empty buckets."""
+        if self.num_buckets is None:
+            raise ValueError("flat store has no bucket structure")
+        return np.bincount(
+            self._part_bucket[self._part_bucket >= 0],
+            minlength=self.num_buckets,
+        ).astype(np.int64)
+
+    # -------------------------------------------------------------- write-head
+    @property
+    def head_count(self) -> int:
+        return int((self._head_ids >= 0).sum())
+
+    def head_live(self) -> tuple[np.ndarray, np.ndarray]:
+        """Live write-head rows -> ((m,) ids, (m, D) vectors).  These must be
+        merged *exactly* (no pruning) into every executor's top-k."""
+        mask = self._head_ids >= 0
+        return self._head_ids[mask].copy(), self._head_data[mask].copy()
+
+    # --------------------------------------------------------------- mutation
+    def insert(
+        self, V: np.ndarray, assignments: Optional[np.ndarray] = None
+    ) -> np.ndarray:
+        """Absorb rows into the write-head; returns their new global ids.
+
+        ``assignments`` — per-row IVF bucket (centroid assignment done at
+        insert time by the index); required for bucketed stores.  A full
+        write-head flushes itself (free-slot fill, falling back to repack).
+        """
+        V = np.atleast_2d(np.ascontiguousarray(np.asarray(V, np.float32)))
+        if V.shape[1] != self.dim:
+            raise ValueError(f"expected (N, {self.dim}) rows, got {V.shape}")
+        if self.num_buckets is not None:
+            if assignments is None:
+                raise ValueError("bucketed store insert needs assignments")
+            assignments = np.asarray(assignments, np.int32)
+            if assignments.shape != (len(V),):
+                raise ValueError("one bucket assignment per inserted row")
+        new_ids = np.arange(
+            self._next_id, self._next_id + len(V), dtype=np.int32
+        )
+        self._next_id += len(V)
+        pos = 0  # chunked copies: bulk-load cost is slice assignments, not rows
+        while pos < len(V):
+            if self._head_n == self.head_capacity:
+                self.flush()
+            j0, take = self._head_n, min(
+                self.head_capacity - self._head_n, len(V) - pos
+            )
+            self._head_data[j0 : j0 + take] = V[pos : pos + take]
+            self._head_ids[j0 : j0 + take] = new_ids[pos : pos + take]
+            if assignments is not None:
+                self._head_assign[j0 : j0 + take] = assignments[pos : pos + take]
+            self._id_loc.update(
+                (i, ("h", j0 + off))
+                for off, i in enumerate(new_ids[pos : pos + take].tolist())
+            )
+            self._head_n += take
+            pos += take
+        self._sum += V.astype(np.float64).sum(axis=0)
+        self._sumsq += (V.astype(np.float64) ** 2).sum(axis=0)
+        self._n_live += len(V)
+        self._mutations_since_meta += len(V)
+        self._maybe_refresh_meta()
+        self._bump()  # head-only: sealed tiles untouched (unless flush ran)
+        return new_ids
+
+    def delete(self, ids) -> int:
+        """Tombstone rows by id; returns how many were live.  Sealed slots
+        are poisoned to ``PAD_VALUE`` and their free-bitmap bit set."""
+        removed, touched_sealed = 0, False
+        for i in np.atleast_1d(np.asarray(ids, np.int64)):
+            loc = self._id_loc.pop(int(i), None)
+            if loc is None:
+                continue
+            if loc[0] == "s":
+                _, p, c = loc
+                vec = self._data[p, :, c].astype(np.float64)
+                self._data[p, :, c] = PAD_VALUE
+                self._ids[p, c] = -1
+                self._counts[p] -= 1
+                touched_sealed = True
+            else:
+                j = loc[1]
+                vec = self._head_data[j].astype(np.float64)
+                self._head_data[j] = PAD_VALUE
+                self._head_ids[j] = -1
+            self._sum -= vec
+            self._sumsq -= vec**2
+            self._n_live -= 1
+            removed += 1
+        if removed:
+            self._mutations_since_meta += removed
+            self._maybe_refresh_meta()
+            self._bump(tiles=touched_sealed)
+        return removed
+
+    def flush(self) -> None:
+        """Drain live write-head rows into free sealed slots (reusing the
+        free-slot bitmap; bucket-local for bucketed stores).  Falls back to a
+        full ``repack()`` when free slots run out."""
+        rows = np.nonzero(self._head_ids >= 0)[0]
+        if len(rows) == 0:
+            self._reset_head()  # only tombstoned head rows, if any: a no-op
+            return
+        placements = self._plan_free_slot_fill(rows)
+        if placements is None:
+            self.repack()
+            return
+        for j, (p, c) in zip(rows, placements):
+            i = int(self._head_ids[j])
+            self._data[p, :, c] = self._head_data[j]
+            self._ids[p, c] = i
+            self._counts[p] += 1
+            self._id_loc[i] = ("s", p, int(c))
+        self._reset_head()
+        self._bump(tiles=True)
+
+    def _plan_free_slot_fill(self, rows) -> Optional[list]:
+        """(p, c) free slot per head row, or None if any row has no slot.
+        Free slots are enumerated once per bucket, not once per row."""
+        free = self._ids < 0  # the free-slot bitmap
+        if self.num_buckets is None:
+            free_p, free_c = np.nonzero(free)
+            if len(free_p) < len(rows):
+                return None
+            return list(zip(free_p[: len(rows)], free_c[: len(rows)]))
+        placements: dict[int, tuple] = {}
+        for b in np.unique(self._head_assign[rows]):
+            mine = rows[self._head_assign[rows] == b]
+            free_p, free_c = np.nonzero(free & (self._part_bucket == b)[:, None])
+            if len(free_p) < len(mine):
+                return None
+            for j, p, c in zip(mine, free_p, free_c):
+                placements[int(j)] = (p, c)
+        return [placements[int(j)] for j in rows]
+
+    def _reset_head(self):
+        self._head_data[:] = PAD_VALUE
+        self._head_ids[:] = -1
+        self._head_assign[:] = -1
+        self._head_n = 0
+
+    def repack(self) -> None:
+        """Drain tombstones and the write-head back into minimal lane-aligned
+        tiles (bucket-contiguous for IVF), then refresh pruner metadata."""
+        C = self.capacity
+        live = self._ids >= 0
+        hmask = self._head_ids >= 0
+        all_ids = np.concatenate([self._ids[live], self._head_ids[hmask]])
+        all_vecs = np.concatenate(
+            [np.swapaxes(self._data, 1, 2)[live], self._head_data[hmask]]
+        )
+        all_bucket = np.concatenate([
+            np.repeat(self._part_bucket, C).reshape(self._ids.shape)[live],
+            self._head_assign[hmask].astype(np.int64),
+        ])
+        order = np.argsort(all_ids, kind="stable")  # deterministic layout
+        all_ids, all_vecs, all_bucket = (
+            all_ids[order], all_vecs[order], all_bucket[order],
+        )
+
+        if self.num_buckets is None:
+            buckets = [-1]
+            groups = [np.arange(len(all_ids))]
+        else:
+            buckets = list(range(self.num_buckets))
+            groups = [np.nonzero(all_bucket == b)[0] for b in buckets]
+        self._data, self._ids, self._counts = _pack_groups(
+            all_vecs, groups, C, row_ids=all_ids
+        )
+        nparts = [-(-len(g) // C) for g in groups]
+        if sum(nparts) == 0:  # nothing survived: the all-pad placeholder tile
+            self._part_bucket = np.asarray([-1], dtype=np.int64)
+        else:
+            self._part_bucket = np.repeat(buckets, nparts).astype(np.int64)
+        self._id_loc = self._build_id_loc()
+        self._reset_head()
+        self._refresh_meta()
+        self._bump(tiles=True)
+
+    # ------------------------------------------------- incremental metadata
+    def _maybe_refresh_meta(self):
+        if self._mutations_since_meta > self.meta_staleness * max(
+            self._n_live, 1
+        ):
+            self._refresh_meta()
+
+    def _refresh_meta(self):
+        """Snapshot dim_means/dim_vars (BOND / BSA block metadata) from the
+        running moments — O(D), independent of collection size."""
+        n = max(self._n_live, 1)
+        mean = self._sum / n
+        self._dim_means = mean.astype(np.float32)
+        self._dim_vars = np.maximum(self._sumsq / n - mean**2, 0.0).astype(
+            np.float32
+        )
+        self._mutations_since_meta = 0

@@ -97,13 +97,22 @@ def make_boundaries(
 
 # --------------------------------------------------------------------------
 # Per-pruner jitted step functions (cached so jax.jit's shape cache is reused
-# across queries; the predicate closure is baked in).  Keyed on the pruner's
-# stable fingerprint (name + param hash), NOT id(): object ids are recycled
-# after GC, so an id key could alias a dead pruner's cached predicate onto a
-# new, different pruner — and the cache grew without bound.  LRU-bounded:
-# each entry pins jit executables plus the predicate's closed-over arrays.
+# across queries; the predicate closure is baked in).  Keyed on
+# (pruner fingerprint, metric, store version), NOT id(): object ids are
+# recycled after GC, so an id key could alias a dead pruner's cached
+# predicate onto a new, different pruner — and the cache grew without bound.
+# The store version (monotone, bumped by every MutablePDXStore mutation) is
+# part of the key so a search after insert()/delete() can never reuse an
+# executor traced while the tiles looked different; frozen stores are
+# version 0 forever and keep hitting one entry.  The trade-off is explicit:
+# tiles flow into the steps as traced arguments (nothing below closes over
+# them), so version keying buys auditability at the cost of a retrace on
+# the first adaptive search after each mutation — churn-heavy serving
+# should batch mutations or search through the shape-keyed batch/masked
+# paths, which don't pay it.  LRU-bounded: each entry pins jit executables
+# plus the predicate's closed-over arrays.
 # --------------------------------------------------------------------------
-_EXEC_CACHE: "collections.OrderedDict[tuple[str, str], tuple]" = (
+_EXEC_CACHE: "collections.OrderedDict[tuple[str, str, int], tuple]" = (
     collections.OrderedDict()
 )
 _EXEC_CACHE_MAX = 16
@@ -129,8 +138,8 @@ def _accum_rows(block: jax.Array, qd: jax.Array, metric: str) -> jax.Array:
     return -jnp.sum(block * qd[None, :], axis=1)
 
 
-def _get_exec(pruner: Pruner, metric: str):
-    key = (pruner.fingerprint, metric)
+def _get_exec(pruner: Pruner, metric: str, version: int = 0):
+    key = (pruner.fingerprint, metric, version)
     if key in _EXEC_CACHE:
         _EXEC_CACHE.move_to_end(key)
         return _EXEC_CACHE[key]
@@ -229,7 +238,9 @@ def pdxearch(
     perm = pruner.dim_order(qt) if pruner.dim_order is not None else None
     qp = qt[perm] if perm is not None else qt
     bounds = make_boundaries(D, schedule, delta_d)
-    warmup_step, prune_step, compact = _get_exec(pruner, metric)
+    warmup_step, prune_step, compact = _get_exec(
+        pruner, metric, getattr(store, "version", 0)
+    )
 
     if pid_order is None:
         pid_order = np.arange(store.num_partitions)

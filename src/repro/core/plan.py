@@ -23,6 +23,14 @@ sharded executor (batched when B > 1 and ``spec.batch_collectives``);
 otherwise batches take the MXU scan and single queries the adaptive (or,
 with ``spec.prefer_static``, the masked) path.  Every fallback records its
 reason in the ``ExecutionPlan`` trace.
+
+Mutable stores (``core.layout.MutablePDXStore``) flow through the same
+planner: the plan trace records ``store.version`` (so a cached/compared
+plan is visibly tied to the tiles it saw), ``execute`` merges the store's
+unflushed write-head rows *exactly* (never pruned) into every executor's
+top-k, and the block-sharded executors pad the partition axis with empty
+tiles when churn has left it indivisible by the mesh — a mutable store
+never falls off the sharded fast path just because a repack changed P.
 """
 from __future__ import annotations
 
@@ -34,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .layout import PDXStore
+from .distance import nary_distance
+from .layout import MutablePDXStore, PDXStore
 from .pdxearch import SearchStats, pdxearch, pdxearch_jit, search_batch_matmul
 from .pruners import Pruner
 from .spec import SearchSpec
@@ -57,6 +66,7 @@ class ExecutionPlan:
     n_queries: int
     pruner: str = ""            # pruner fingerprint (stable identity)
     mesh_axes: tuple = ()
+    store_version: int = 0      # MutablePDXStore.version (frozen stores: 0)
 
 
 # -------------------------------------------------------------------- registry
@@ -90,11 +100,12 @@ def plan_search(
     """Choose an executor for ``n_queries`` queries against ``store``."""
     fp = pruner.fingerprint if pruner is not None else ""
     axes = tuple(getattr(mesh, "axis_names", ())) if mesh is not None else ()
+    version = getattr(store, "version", 0)
 
     def plan(executor: str, reason: str) -> ExecutionPlan:
         return ExecutionPlan(
             executor=executor, reason=reason, n_queries=n_queries,
-            pruner=fp, mesh_axes=axes,
+            pruner=fp, mesh_axes=axes, store_version=version,
         )
 
     if spec.executor is not None:
@@ -125,17 +136,25 @@ def plan_search(
             )
         if "data" in axes:
             n_sh = mesh.shape["data"]
-            if store.num_partitions % n_sh == 0:
+            divisible = store.num_partitions % n_sh == 0
+            # a mutable store's partition count drifts with churn; the block
+            # executors pad it with empty tiles, so it stays on the fast path
+            if divisible or isinstance(store, MutablePDXStore):
+                pad_note = (
+                    "" if divisible
+                    else f" (P={store.num_partitions} padded to divisibility)"
+                )
                 if n_queries > 1 and spec.batch_collectives:
                     return plan(
                         "batch-block-sharded",
                         f"mesh 'data' axis ({n_sh} shards), batch of "
-                        f"{n_queries}: one top-k all-gather per batch",
+                        f"{n_queries}: one top-k all-gather per batch"
+                        + pad_note,
                     )
                 return plan(
                     "block-sharded",
                     f"mesh 'data' axis ({n_sh} shards): per-query "
-                    "shard-local PDXearch + top-k all-gather",
+                    "shard-local PDXearch + top-k all-gather" + pad_note,
                 )
             return _host_plan(
                 spec, n_queries, ivf, plan,
@@ -186,10 +205,54 @@ def execute(
     mesh=None,
     stats: Optional[SearchStats] = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Run ``plan`` for the (B, D) query batch ``Q`` -> (B, k) ids/dists."""
+    """Run ``plan`` for the (B, D) query batch ``Q`` -> (B, k) ids/dists.
+
+    For mutable stores this is also the write-head merge point: whatever
+    executor ran over the sealed tiles, the unflushed write-head rows are
+    scanned exactly (never pruned — they carry no pruner metadata yet) and
+    merged into every query's top-k, so freshly inserted vectors are
+    reachable through all executors, sharded paths included.
+    """
     fn = _EXECUTORS[plan.executor]
     ids, dists = fn(store, pruner, Q, spec, ivf=ivf, mesh=mesh, stats=stats)
-    return np.asarray(ids), np.asarray(dists)
+    return _merge_write_head(
+        store, pruner, Q, spec, np.asarray(ids), np.asarray(dists),
+        stats=stats,
+    )
+
+
+def _merge_write_head(
+    store, pruner: Pruner, Q: jax.Array, spec: SearchSpec,
+    ids: np.ndarray, dists: np.ndarray,
+    stats: Optional[SearchStats] = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Merge the store's live write-head rows into the (B, k) top-k — exact,
+    unpruned, in the pruner-transformed space the sealed tiles live in."""
+    head_live = getattr(store, "head_live", None)
+    if head_live is None:
+        return ids, dists
+    hids, hvecs = head_live()
+    if len(hids) == 0:
+        return ids, dists
+    Qt = _transform_batch(pruner, Q)                             # (B, D)
+    H = jnp.asarray(hvecs, jnp.float32)                          # (m, D)
+    hd = np.asarray(
+        jax.vmap(lambda q: nary_distance(H, q, spec.metric))(Qt)
+    )  # (B, m)
+    if stats is not None:  # the head is scanned in full, never pruned
+        work = float(hd.size * H.shape[1])
+        stats.values_total += work
+        stats.values_computed += work
+    all_d = np.concatenate([dists.astype(np.float32), hd.astype(np.float32)],
+                           axis=1)
+    all_i = np.concatenate(
+        [ids, np.broadcast_to(hids.astype(ids.dtype), hd.shape)], axis=1
+    )
+    order = np.argsort(all_d, axis=1, kind="stable")[:, : spec.k]
+    return (
+        np.take_along_axis(all_i, order, axis=1),
+        np.take_along_axis(all_d, order, axis=1),
+    )
 
 
 @register_executor("adaptive")
@@ -246,14 +309,29 @@ def _exec_batch_matmul(store, pruner, Q, spec, *, ivf, mesh, stats):
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
+def _padded_tiles(store, n_shards: int) -> tuple[jax.Array, jax.Array]:
+    """Partition-padded (data, ids) for the block-sharded executors, cached
+    on the store per (version, n_shards) — padding concatenates a full copy
+    of the tiles, which must cost once per mutation, not once per search."""
+    from ..dist.pdx_sharded import pad_partitions_to_shards  # no core<->dist cycle
+
+    key = (getattr(store, "tiles_version", 0), n_shards)
+    cached = getattr(store, "_pad_cache", None)
+    if cached is None or cached[0] != key:
+        padded = pad_partitions_to_shards(store.data, store.ids, n_shards)
+        store._pad_cache = cached = (key, padded)
+    return cached[1]
+
+
 @register_executor("block-sharded")
 def _exec_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
-    from ..dist.pdx_sharded import search_block_sharded  # no core<->dist cycle
+    from ..dist.pdx_sharded import search_block_sharded
 
+    data, ids = _padded_tiles(store, mesh.shape["data"])
     out_i, out_d = [], []
     for q in Q:
         res = search_block_sharded(
-            mesh, store.data, store.ids, q, spec.k, metric=spec.metric,
+            mesh, data, ids, q, spec.k, metric=spec.metric,
             pruner=pruner, schedule=spec.schedule, delta_d=spec.delta_d,
         )
         out_i.append(np.asarray(res.ids))
@@ -280,8 +358,9 @@ def _exec_dim_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
 def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
     from ..dist.pdx_sharded import search_batch_block_sharded
 
+    data, ids = _padded_tiles(store, mesh.shape["data"])
     Qt = _transform_batch(pruner, Q)
     res = search_batch_block_sharded(
-        mesh, store.data, store.ids, Qt, spec.k, metric=spec.metric,
+        mesh, data, ids, Qt, spec.k, metric=spec.metric,
     )
     return np.asarray(res.ids), np.asarray(res.dists)

@@ -19,6 +19,12 @@ BSA's PCA, BOND's means) is build-time engine state — it transforms the
 stored vectors — so the spec carries its runtime configuration (boundary
 schedule, selectivity threshold, grouping) and the planner records the
 engine pruner's stable fingerprint in the plan trace.
+
+Specs are also store-agnostic: the same spec searches a frozen ``PDXStore``
+and a live ``MutablePDXStore`` under churn.  The mutable store's monotone
+``version`` is not spec state — it rides in the ``ExecutionPlan`` trace
+(``plan.store_version``) and in the jitted-executor cache keys, so a spec
+reused across mutations always executes against the tiles it claims to.
 """
 from __future__ import annotations
 
@@ -107,7 +113,8 @@ class SearchResult:
 
     ``ids``/``dists`` are (k,) for a single query, (B, k) for a batch.
     ``plan`` is the ``repro.core.plan.ExecutionPlan`` the planner chose
-    (executor name + reason), ``stats`` the work accounting when requested.
+    (executor name + reason + the store version searched), ``stats`` the
+    work accounting when requested.
 
     Unpacks like the legacy ``(ids, dists)`` tuple::
 

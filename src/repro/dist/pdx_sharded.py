@@ -28,6 +28,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from ..core.distance import pdx_distance
+from ..core.layout import PAD_VALUE
 from ..core.pdxearch import (
     _pdxearch_jit_impl,
     make_boundaries,
@@ -37,11 +38,37 @@ from ..core.pruners import Pruner, make_plain_pruner
 from ..core.topk import TopK, topk_init, topk_merge
 
 __all__ = [
+    "pad_partitions_to_shards",
     "search_block_sharded",
     "search_dim_sharded",
     "search_batch_block_sharded",
     "collective_counts",
 ]
+
+
+def pad_partitions_to_shards(
+    data: jax.Array, ids: jax.Array, n_shards: int
+) -> tuple[jax.Array, jax.Array]:
+    """Round the partition axis up to a multiple of ``n_shards`` with empty
+    (all-``PAD_VALUE``, ids ``-1``) tiles.
+
+    A frozen store is built divisible once and stays divisible; a mutable
+    store's partition count drifts under insert/delete/repack churn, and
+    without padding every repack would knock it off the block-sharded
+    executors.  Padding tiles rank nothing into a top-k (the pad sentinel is
+    monotonically far away and ``topk_merge`` discards ids < 0), so the
+    sharded result stays bit-identical to the unpadded scan.
+    """
+    n_parts = data.shape[0]
+    rem = (-n_parts) % n_shards
+    if rem == 0:
+        return data, ids
+    pad_d = jnp.full((rem,) + data.shape[1:], PAD_VALUE, data.dtype)
+    pad_i = jnp.full((rem,) + ids.shape[1:], -1, ids.dtype)
+    return (
+        jnp.concatenate([data, pad_d], axis=0),
+        jnp.concatenate([ids, pad_i], axis=0),
+    )
 
 
 def search_block_sharded(

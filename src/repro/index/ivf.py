@@ -7,6 +7,7 @@ are also stored with PDX").
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
@@ -23,6 +24,25 @@ from .kmeans import kmeans
 __all__ = ["IVFIndex", "build_ivf"]
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "nlist"))
+def _rank_centroids(cdata: jax.Array, q: jax.Array, nlist: int, metric: str):
+    """One dimension-major scan of ALL centroid tiles -> ascending bucket
+    order.  vmap over the (Pc, D, C) tile stack replaces the old
+    per-partition Python loop, and the argsort happens on device so the
+    whole ranking is a single dispatch with one host sync at the caller."""
+    d = jax.vmap(lambda tile: pdx_distance(tile, q, metric))(cdata)
+    return jnp.argsort(d.reshape(-1)[:nlist])
+
+
+@jax.jit
+def _nearest_centroid(centroids: jax.Array, X: jax.Array) -> jax.Array:
+    """(K, D), (N, D) -> (N,) nearest-centroid bucket per row (L2, matching
+    the k-means training objective); used for centroid assignment on insert."""
+    cross = X @ centroids.T                       # (N, K) — MXU
+    cn = jnp.sum(centroids * centroids, axis=1)   # (K,)
+    return jnp.argmin(cn[None, :] - 2.0 * cross, axis=1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class IVFIndex:
     store: PDXStore                 # bucket-contiguous PDX partitions
@@ -34,11 +54,16 @@ class IVFIndex:
 
     def rank_buckets(self, q: jax.Array, metric: str = "l2") -> np.ndarray:
         """Distance of q to every centroid -> bucket ids sorted ascending."""
-        dists = []
-        for p in range(self.centroid_store.num_partitions):
-            dists.append(pdx_distance(self.centroid_store.data[p], q, metric))
-        d = jnp.concatenate(dists)[: self.nlist]
-        return np.asarray(jnp.argsort(d))
+        return np.asarray(
+            _rank_centroids(self.centroid_store.data, q, self.nlist, metric)
+        )
+
+    def assign(self, X: np.ndarray) -> np.ndarray:
+        """(N, D) rows -> (N,) bucket assignments (nearest centroid).  This
+        is the insert path of a mutable store: rows are bucket-assigned at
+        insert time so a later repack can drain them bucket-contiguously."""
+        X = jnp.atleast_2d(jnp.asarray(X, jnp.float32))
+        return np.asarray(_nearest_centroid(self.centroids, X))
 
     def partition_order(self, bucket_order: np.ndarray, nprobe: int) -> np.ndarray:
         sel = bucket_order[:nprobe]
@@ -48,7 +73,7 @@ class IVFIndex:
             )
             for b in sel
         ]
-        return np.concatenate(parts)
+        return np.concatenate(parts) if parts else np.zeros(0, np.int64)
 
     def route(
         self, qt: jax.Array, nprobe: int, metric: str = "l2"
@@ -56,10 +81,16 @@ class IVFIndex:
         """Query routing for the planner's adaptive executor: rank buckets
         by centroid distance of the (already pruner-transformed) query and
         return ``(partition visit order, start_parts)`` — START linear-scans
-        every partition of the nearest bucket to seed the top-k threshold."""
+        every partition of the nearest *non-empty* bucket to seed the top-k
+        threshold (empty buckets own zero partitions and zero scan work)."""
         border = self.rank_buckets(qt, metric)
         order = self.partition_order(border, nprobe)
-        return order, int(self.part_counts[border[0]])
+        start_parts = 0
+        for b in border[:nprobe]:
+            if self.part_counts[b] > 0:
+                start_parts = int(self.part_counts[b])
+                break
+        return order, start_parts
 
     def search(
         self,

@@ -25,6 +25,17 @@ from .engine import GenerationEngine
 __all__ = ["RagPipeline"]
 
 
+def _embed_docs(engine: GenerationEngine, doc_tokens: np.ndarray) -> np.ndarray:
+    """LM-embed documents in chunks -> (n_docs, D) float32."""
+    embeds = [
+        np.asarray(
+            engine.embed({"tokens": jnp.asarray(doc_tokens[lo : lo + 32])})
+        )
+        for lo in range(0, len(doc_tokens), 32)
+    ]
+    return np.concatenate(embeds, axis=0)
+
+
 @dataclasses.dataclass
 class RagPipeline:
     engine: GenerationEngine
@@ -44,12 +55,7 @@ class RagPipeline:
         retrieve_k: int = 1,
     ) -> "RagPipeline":
         """Embed every document with the LM and build the PDX store."""
-        embeds = []
-        for lo in range(0, len(doc_tokens), 32):
-            embeds.append(
-                engine.embed({"tokens": jnp.asarray(doc_tokens[lo : lo + 32])})
-            )
-        X = np.concatenate(embeds, axis=0)
+        X = _embed_docs(engine, doc_tokens)
         store = VectorSearchEngine.build(
             X, pruner=pruner, index=index, capacity=capacity
         )
@@ -57,6 +63,22 @@ class RagPipeline:
             engine=engine, store=store, doc_tokens=doc_tokens,
             retrieve_k=retrieve_k,
         )
+
+    def add_documents(self, doc_tokens: np.ndarray) -> np.ndarray:
+        """Absorb new documents into the live store; returns their doc ids.
+
+        Embeds the documents with the LM and ``insert``s the embeddings —
+        they land in the mutable store's write-head and are retrievable by
+        the very next ``retrieve``/``answer`` call, no rebuild.  Store ids
+        are allocated consecutively from the initial corpus size, so a doc's
+        id stays its row in ``self.doc_tokens``.
+        """
+        doc_tokens = np.asarray(doc_tokens, np.int32)
+        if len(doc_tokens) == 0:
+            return np.zeros((0,), np.int32)
+        ids = self.store.insert(_embed_docs(self.engine, doc_tokens))
+        self.doc_tokens = np.concatenate([self.doc_tokens, doc_tokens], axis=0)
+        return ids
 
     def retrieve(self, query_batch: dict) -> np.ndarray:
         """-> (B, retrieve_k) document ids.  One planned search for the whole

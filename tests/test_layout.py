@@ -48,12 +48,15 @@ def test_bucketed_layout_groups_by_bucket(rng):
     )
 
 
-def test_empty_bucket_gets_placeholder_partition(rng):
+def test_empty_bucket_gets_zero_partitions(rng):
+    """Empty buckets must cost zero scan work: no partition at all (they used
+    to emit a full all-PAD_VALUE tile each — wasted DMA + FLOPs per query)."""
     X = rng.standard_normal((50, 4)).astype(np.float32)
     assign = np.zeros(50, dtype=np.int64)  # bucket 1 and 2 empty
     store, offsets, nparts = build_bucketed_store(X, assign, 3, capacity=64)
-    assert nparts[1] == 1 and nparts[2] == 1
-    assert int(store.counts[offsets[1]]) == 0
+    assert nparts[1] == 0 and nparts[2] == 0
+    assert store.num_partitions == 1
+    assert offsets.tolist() == [0, 1, 1]
 
 
 def test_metadata_matches_collection(rng):

@@ -238,8 +238,8 @@ def test_exec_cache_fingerprint_keyed_and_bounded():
         pr = make_bond(rng.standard_normal(8).astype(np.float32))
         _get_exec(pr, "l2")
         assert len(_EXEC_CACHE) <= _EXEC_CACHE_MAX
-    # LRU: the most recent entry survived
-    assert (pr.fingerprint, "l2") in _EXEC_CACHE
+    # LRU: the most recent entry survived (version 0 = frozen store)
+    assert (pr.fingerprint, "l2", 0) in _EXEC_CACHE
 
 
 # ------------------------------------------------------------ deprecated shims

@@ -7,7 +7,8 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.distance import nary_distance, pdx_distance
-from repro.core.layout import build_flat_store, pdx_to_nary
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.core.layout import MutablePDXStore, build_flat_store, pdx_to_nary
 from repro.core.pdxearch import make_boundaries
 from repro.core.pruners import make_adsampling, make_bond, random_orthogonal
 from repro.core.topk import topk_init, topk_merge
@@ -103,6 +104,59 @@ def test_adsampling_keep_mask_monotone_in_threshold(seed, thr_scale, d_seen):
     keep_lo = np.asarray(pr.keep_mask(partial, jnp.float32(d_seen), t))
     keep_hi = np.asarray(pr.keep_mask(partial, jnp.float32(d_seen), t * 2))
     assert np.all(keep_hi >= keep_lo)
+
+
+_MUT_SETTINGS = settings(max_examples=10, deadline=None)
+
+
+@_MUT_SETTINGS
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    ops=st.lists(st.sampled_from(["ins", "del", "repack"]), min_size=1,
+                 max_size=8),
+)
+def test_mutable_store_always_matches_rebuilt_store(seed, ops):
+    """After ANY interleaving of insert/delete/repack, search results equal a
+    store rebuilt from scratch from the surviving vectors, and pdx_to_nary
+    round-trips them (ids map via rank order since they are sparse)."""
+    rng = np.random.default_rng(seed)
+    dim, cap, k = 8, 32, 3
+    X = rng.standard_normal((60, dim)).astype(np.float32)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=cap)
+    eng.head_capacity = 8  # tiny head: flushes + free-slot reuse get exercised
+    rows = {i: X[i] for i in range(len(X))}
+
+    for op in ops:
+        if op == "ins":
+            V = rng.standard_normal((int(rng.integers(1, 12)), dim)).astype(
+                np.float32
+            )
+            for r, i in enumerate(eng.insert(V)):
+                rows[int(i)] = V[r]
+        elif op == "del" and len(rows) > k:
+            victims = rng.choice(
+                sorted(rows), size=int(rng.integers(1, 6)), replace=False
+            )
+            eng.delete(victims)
+            for i in victims:
+                rows.pop(int(i), None)
+        elif op == "repack":
+            eng.compact()
+
+    assert isinstance(eng.store, MutablePDXStore)
+    im = np.asarray(sorted(rows))
+    Xs = np.stack([rows[i] for i in sorted(rows)])
+    np.testing.assert_array_equal(pdx_to_nary(eng.store), Xs)
+    assert eng.store.num_vectors == len(rows)
+
+    ref = VectorSearchEngine.build(Xs, pruner="linear", capacity=cap)
+    q = rng.standard_normal(dim).astype(np.float32)
+    for ex in ("adaptive", "jit-masked", "batch-matmul"):
+        got = eng.search(q, SearchSpec(k=k, executor=ex))
+        want = ref.search(q, SearchSpec(k=k, executor=ex))
+        np.testing.assert_array_equal(
+            np.searchsorted(im, got.ids), want.ids, err_msg=ex
+        )
 
 
 @SETTINGS

@@ -55,3 +55,22 @@ def test_rag_retrieves_self_document():
     q = {"tokens": docs[5:6]}
     ids = rag.retrieve(q)
     assert ids[0, 0] == 5
+
+
+def test_rag_add_documents_live():
+    """Documents added after build are retrievable immediately (write-head),
+    with ids that keep indexing doc_tokens."""
+    cfg, eng = _engine(cache_len=96)
+    rng = np.random.default_rng(4)
+    docs = rng.integers(0, cfg.vocab, (12, 10)).astype(np.int32)
+    rag = RagPipeline.build(eng, docs, pruner="bond", index="flat", retrieve_k=1)
+    extra = rng.integers(0, cfg.vocab, (3, 10)).astype(np.int32)
+    new_ids = rag.add_documents(extra)
+    assert new_ids.tolist() == [12, 13, 14]
+    assert rag.doc_tokens.shape == (15, 10)
+    # self-retrieval of a freshly added (unflushed, write-head) document
+    ids = rag.retrieve({"tokens": extra[1:2]})
+    assert ids[0, 0] == 13
+    # the full pipeline prepends the right doc tokens
+    out, doc_ids = rag.answer({"tokens": extra[1:2]}, max_new_tokens=2)
+    assert doc_ids[0, 0] == 13 and out.shape == (1, 2)
