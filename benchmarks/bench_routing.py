@@ -1,0 +1,139 @@
+"""Bucket-routed vs broadcast distributed search on an 8-fake-CPU-device
+``data`` mesh — the ROADMAP "IVF bucket routing across hosts" item.
+
+The broadcast baseline is the fused batch-block-sharded executor: every
+query replicates to every shard and the whole striped store is scanned.
+The routed path ships each query only to the shards owning its top-nprobe
+buckets (one all-to-all) and merges candidates hierarchically (one packed
+all-gather).  For each nprobe we report modeled *bytes moved per query*
+(the actual collective payload sizes) and p50 latency — bytes shrink as
+nprobe drops because fewer owner shards means fewer occupied send slots.
+
+Standalone only (NOT in run.py's MODULES): the XLA device-count flag is
+process-global and must be set before jax initializes.
+
+    PYTHONPATH=src python -m benchmarks.bench_routing [--scale paper]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.core.plan import _get_placement
+from repro.data.synthetic import ground_truth, recall_at_k
+from repro.dist.routing import build_send_buffer, plan_routing
+
+from .common import dataset, emit, write_json
+
+
+def _p50(fn, reps: int = 9, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def run(scale: str = "smoke"):
+    n, dim, cap, nq, nlist = (
+        (16384, 64, 128, 64, 64) if scale == "smoke"
+        else (131072, 128, 512, 256, 256)
+    )
+    k = 10
+    X, Q = dataset(n, dim, "clustered", n_queries=nq, seed=0)
+    n_dev = jax.device_count()
+    gt_ids, _ = ground_truth(X, Q, k=k)
+
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="linear", capacity=cap, nlist=nlist, mesh=mesh,
+    )
+    B = len(Q)
+
+    # broadcast baseline: replicated queries, full striped-store scan
+    spec_bcast = SearchSpec(k=k, executor="batch-block-sharded")
+    res = eng.search(Q, spec_bcast)
+    assert res.plan.executor == "batch-block-sharded", res.plan
+    assert recall_at_k(res.ids, gt_ids) == 1.0
+    t_bcast = _p50(lambda: eng.search(Q, spec_bcast))
+    bytes_bcast = (n_dev * B * dim + n_dev * B * 2 * k) * 4  # Q bcast + merge
+    emit(
+        f"routing/broadcast/n{n}/D{dim}/B{B}/dev{n_dev}",
+        t_bcast / B * 1e6,
+        f"bytes_per_q={bytes_bcast / B:.0f}",
+    )
+
+    record = {
+        "bench": "bucket_routed_vs_broadcast",
+        "scale": scale,
+        "n_vectors": n, "dim": dim, "capacity": cap, "k": k,
+        "batch": B, "n_devices": n_dev, "nlist": nlist,
+        "broadcast": {
+            "p50_us_per_query": t_bcast / B * 1e6,
+            "bytes_per_query": bytes_bcast / B,
+        },
+        "bucket_routed": {},
+    }
+
+    pl = _get_placement(eng.store, n_dev, "bucket", ivf=eng.ivf)
+    prev_bytes = float("inf")
+    for nprobe in (16, 4, 1):
+        spec = SearchSpec(k=k, nprobe=nprobe)
+        res = eng.search(Q, spec)
+        assert res.plan.executor == "routed_bucket", res.plan
+        rec = recall_at_k(res.ids, gt_ids)
+        t_routed = _p50(lambda: eng.search(Q, spec))
+
+        sel = eng.ivf.route_batch(jnp.asarray(Q), nprobe)
+        rp = plan_routing(sel, pl.bucket_shard, pl.bucket_parts, n_dev)
+        buf = build_send_buffer(Q, sel, rp)
+        # actual collective payloads: padded all-to-all + packed all-gather
+        bytes_a2a = buf.nbytes
+        bytes_gather = n_dev * (n_dev * rp.budget) * 2 * k * 4
+        bytes_q = (bytes_a2a + bytes_gather) / B
+        emit(
+            f"routing/bucket/nprobe{nprobe}/n{n}/D{dim}/B{B}/dev{n_dev}",
+            t_routed / B * 1e6,
+            f"bytes_per_q={bytes_q:.0f};recall={rec:.3f};"
+            f"budget={rp.budget};occupancy={rp.occupancy}",
+        )
+        record["bucket_routed"][f"nprobe_{nprobe}"] = {
+            "p50_us_per_query": t_routed / B * 1e6,
+            "bytes_per_query": bytes_q,
+            "bytes_all_to_all": bytes_a2a,
+            "bytes_all_gather": bytes_gather,
+            "send_budget": rp.budget,
+            "send_occupancy": rp.occupancy,
+            "recall_at_k": rec,
+        }
+        # the acceptance claim: wire bytes shrink as nprobe drops
+        assert bytes_q <= prev_bytes, (nprobe, bytes_q, prev_bytes)
+        prev_bytes = bytes_q
+
+    write_json("BENCH_routing.json", record)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()
+
+

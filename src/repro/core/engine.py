@@ -14,10 +14,16 @@ IVF routing, and the mesh-sharded distributed paths.  NumPy in, NumPy out.
 With a device mesh (built via ``jax.make_mesh`` or given at build time) the
 planner dispatches to the ``repro.dist`` sharded executors automatically —
 including the fused batched path that issues one top-k all-gather per query
-batch:
+batch, and for IVF engines the bucket-routed path where each query travels
+only to the shards owning its top-nprobe buckets (one all-to-all + one
+packed all-gather per batch; ``SearchSpec.routing="broadcast"`` opts back
+into host-side routing):
 
     eng = VectorSearchEngine.build(X, mesh=jax.make_mesh((8,), ("data",)))
     res = eng.search(Q, SearchSpec(k=10))   # -> "batch-block-sharded"
+
+    eng = VectorSearchEngine.build(X, index="ivf", mesh=mesh)
+    res = eng.search(Q, SearchSpec(k=10, nprobe=4))  # -> "routed_bucket"
 
 Migration from the pre-spec API (old entry points remain as deprecated
 shims for one release):
@@ -43,10 +49,12 @@ shims for one release):
     rebuild store to defragment             compact() (drains tombstones +
                                               write-head into lane-aligned
                                               tiles, refreshes the store's
-                                              dim_means/dim_vars and rebuilds
-                                              a BOND pruner on them; BSA's
-                                              PCA stays build-time-calibrated
-                                              — rebuild to recalibrate)
+                                              dim_means/dim_vars, rebuilds a
+                                              BOND pruner on them, and
+                                              recalibrates BSA's PCA from a
+                                              fresh survivor sample — the
+                                              live rows are re-projected in
+                                              place)
 
 Mutation upgrades the frozen ``PDXStore`` into a versioned
 ``core.layout.MutablePDXStore`` in place on first use; searches observe
@@ -67,7 +75,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..index.ivf import IVFIndex, build_ivf
-from .layout import MutablePDXStore, PDXStore, build_flat_store
+from .layout import MutablePDXStore, PDXStore, build_flat_store, pdx_to_nary
 from .pdxearch import SearchStats
 from .plan import ExecutionPlan, execute, plan_search
 from .pruners import (
@@ -145,6 +153,7 @@ class VectorSearchEngine:
         precomputed_ivf=None,
         spec: Optional[SearchSpec] = None,
         mesh: Any = None,
+        routing: str = "bucket",
     ) -> "VectorSearchEngine":
         X = np.ascontiguousarray(np.asarray(X, np.float32))
         pr = _make_pruner(
@@ -166,7 +175,7 @@ class VectorSearchEngine:
         if spec is None:
             spec = SearchSpec(
                 metric=metric, schedule=schedule, delta_d=delta_d,
-                sel_frac=sel_frac, group=group,
+                sel_frac=sel_frac, group=group, routing=routing,
             )
         return cls(store=store, pruner=pr, spec=spec, ivf=ivf, mesh=mesh,
                    zone_size=zone_size)
@@ -282,12 +291,15 @@ class VectorSearchEngine:
 
     def compact(self) -> None:
         """Repack: drain tombstones + write-head into minimal lane-aligned
-        tiles and refresh store metadata (dim_means/dim_vars).  A BOND
-        pruner is rebuilt from the repacked collection means — its
-        fingerprint changes, naturally invalidating jit caches.  BSA's PCA
-        projection is baked into the stored vectors at build time and is NOT
-        recalibrated here (it stays exact w.r.t. its build sample; rebuild
-        the engine to recalibrate after heavy distribution shift)."""
+        tiles and refresh store metadata (dim_means/dim_vars).  Pruner
+        calibration follows the surviving collection: a BOND pruner is
+        rebuilt from the repacked collection means, and a BSA pruner's PCA
+        is recalibrated from a fresh sample of the survivors — the stored
+        vectors are rotated back through the old components and re-projected
+        with the new ones in place (``replace_live_vectors``), so post-churn
+        pruning power matches a freshly built engine instead of decaying
+        with distribution shift.  Either way the pruner fingerprint changes,
+        naturally invalidating jit caches."""
         store = self._ensure_mutable()
         store.repack()
         self._sync_ivf()
@@ -295,6 +307,37 @@ class VectorSearchEngine:
             self.pruner = make_bond(
                 jnp.asarray(store.dim_means), zone_size=self.zone_size
             )
+        elif self.pruner.name == "bsa" and self.pruner.aux is not None:
+            self._recalibrate_bsa(store)
+
+    def _recalibrate_bsa(self, store: MutablePDXStore) -> None:
+        """Refit BSA's PCA on the post-churn collection (ROADMAP follow-up:
+        until now only BOND metadata refreshed on compact).  The projection
+        is orthogonal, so the original-space vectors are recovered exactly
+        (up to float rounding) as ``X_t @ C.T``; a fresh sample refits the
+        components and residual-energy quantiles, and the store's live rows
+        are re-projected in place.  IVF centroids ride along: bucket
+        assignments are rotation-invariant (orthogonal transforms preserve
+        L2), so only their coordinates change, never bucket membership."""
+        Xt = pdx_to_nary(store)  # live vectors, old projected space, id order
+        if len(Xt) < 2:
+            return  # no covariance to fit; keep the current calibration
+        C_old = np.asarray(self.pruner.aux["components"], np.float32)
+        X_orig = Xt @ C_old.T
+        sample = X_orig[: min(len(X_orig), 65536)]  # mirror build-time sampling
+        new_pruner = make_bsa(
+            sample, m=self.pruner.aux["m"], seed=self.pruner.aux["seed"]
+        )
+        store.replace_live_vectors(new_pruner.preprocess(X_orig))
+        if self.ivf is not None:
+            cents = new_pruner.preprocess(
+                np.asarray(self.ivf.centroids) @ C_old.T
+            )
+            self.ivf.centroids = jnp.asarray(cents)
+            self.ivf.centroid_store = build_flat_store(
+                cents, capacity=self.ivf.centroid_store.capacity
+            )
+        self.pruner = new_pruner
 
     # ------------------------------------------- deprecated one-release shims
     def search_jit(self, q: np.ndarray, k: int = 10):

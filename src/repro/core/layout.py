@@ -263,8 +263,14 @@ class MutablePDXStore:
     (``core.pdxearch._EXEC_CACHE``) and plan traces key on it so a search
     can never reuse state derived from stale tiles.  ``tiles_version``
     increases only when the *sealed* tiles change (sealed delete, flush,
-    repack): the device mirror and the sharded executors' padded-tile cache
-    key on it, so a head-only insert never re-uploads the whole store.
+    repack): the device mirror and the sharded executors' ``Placement``
+    cache key on it, so a head-only insert never re-uploads the whole store
+    or re-arranges a distributed placement.  Under bucket-owned sharding
+    (``repro.dist.placement``) this means an insert lands in the owning
+    shard's slice for free: the row's bucket is assigned at insert time,
+    ``flush`` fills free slots inside that bucket's partitions — which live
+    in the owner shard's contiguous slice — and the placement is only
+    rebuilt when a flush/repack actually moves sealed tiles.
 
     Pruner metadata is *incrementally* maintained: running per-dimension
     sum / sum-of-squares are updated O(D) per inserted/deleted row, and the
@@ -523,32 +529,45 @@ class MutablePDXStore:
 
     def delete(self, ids) -> int:
         """Tombstone rows by id; returns how many were live.  Sealed slots
-        are poisoned to ``PAD_VALUE`` and their free-bitmap bit set."""
-        removed, touched_sealed = 0, False
+        are poisoned to ``PAD_VALUE`` and their free-bitmap bit set.
+
+        Batched: the id array is resolved to (partition, column) coordinates
+        up front, then every slot is poisoned in one fancy-indexed pass and
+        the running moments are updated with one reduction — a 10k-id delete
+        costs a handful of NumPy calls, not 10k per-row assignments."""
+        sealed_p, sealed_c, head_j = [], [], []
         for i in np.atleast_1d(np.asarray(ids, np.int64)):
-            loc = self._id_loc.pop(int(i), None)
+            loc = self._id_loc.pop(int(i), None)  # also dedups repeated ids
             if loc is None:
                 continue
             if loc[0] == "s":
-                _, p, c = loc
-                vec = self._data[p, :, c].astype(np.float64)
-                self._data[p, :, c] = PAD_VALUE
-                self._ids[p, c] = -1
-                self._counts[p] -= 1
-                touched_sealed = True
+                sealed_p.append(loc[1])
+                sealed_c.append(loc[2])
             else:
-                j = loc[1]
-                vec = self._head_data[j].astype(np.float64)
-                self._head_data[j] = PAD_VALUE
-                self._head_ids[j] = -1
-            self._sum -= vec
-            self._sumsq -= vec**2
-            self._n_live -= 1
-            removed += 1
-        if removed:
-            self._mutations_since_meta += removed
-            self._maybe_refresh_meta()
-            self._bump(tiles=touched_sealed)
+                head_j.append(loc[1])
+        removed = len(sealed_p) + len(head_j)
+        if not removed:
+            return 0
+        if sealed_p:
+            ps = np.asarray(sealed_p, np.int64)
+            cs = np.asarray(sealed_c, np.int64)
+            vecs = self._data[ps, :, cs].astype(np.float64)  # (m, D)
+            self._sum -= vecs.sum(axis=0)
+            self._sumsq -= (vecs**2).sum(axis=0)
+            self._data[ps, :, cs] = PAD_VALUE
+            self._ids[ps, cs] = -1
+            np.subtract.at(self._counts, ps, 1)
+        if head_j:
+            js = np.asarray(head_j, np.int64)
+            vecs = self._head_data[js].astype(np.float64)
+            self._sum -= vecs.sum(axis=0)
+            self._sumsq -= (vecs**2).sum(axis=0)
+            self._head_data[js] = PAD_VALUE
+            self._head_ids[js] = -1
+        self._n_live -= removed
+        self._mutations_since_meta += removed
+        self._maybe_refresh_meta()
+        self._bump(tiles=bool(sealed_p))
         return removed
 
     def flush(self) -> None:
@@ -632,6 +651,32 @@ class MutablePDXStore:
             self._part_bucket = np.repeat(buckets, nparts).astype(np.int64)
         self._id_loc = self._build_id_loc()
         self._reset_head()
+        self._refresh_meta()
+        self._bump(tiles=True)
+
+    def replace_live_vectors(self, X: np.ndarray) -> None:
+        """Overwrite every live sealed vector, row ``r`` of ``X`` replacing
+        the vector with the ``r``-th smallest id (the ``pdx_to_nary``
+        order).  Ids, bucket assignments, and tile geometry are untouched —
+        this is the store-level primitive for re-projecting a collection in
+        place (e.g. recalibrating BSA's PCA on compact, where the stored
+        coordinates change but identity and bucket structure do not).
+        Requires a drained write-head (call after ``flush``/``repack``)."""
+        if self.head_count:
+            raise ValueError(
+                "replace_live_vectors needs a drained write-head; "
+                "flush() or repack() first"
+            )
+        X = np.asarray(X, np.float32)
+        ps, cs = np.nonzero(self._ids >= 0)
+        if len(ps) != len(X):
+            raise ValueError(
+                f"{len(X)} replacement rows for {len(ps)} live vectors"
+            )
+        order = np.argsort(self._ids[ps, cs], kind="stable")
+        self._data[ps[order], :, cs[order]] = X
+        self._sum = X.astype(np.float64).sum(axis=0)
+        self._sumsq = (X.astype(np.float64) ** 2).sum(axis=0)
         self._refresh_meta()
         self._bump(tiles=True)
 

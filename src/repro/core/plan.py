@@ -16,13 +16,26 @@ and differ only in execution strategy:
   batch-block-sharded  batch-matmul fused with block sharding: ONE packed
                        top-k all-gather per query *batch* (the ROADMAP's
                        "batched distributed search").
+  routed_bucket        bucket-owned sharding (IVF + "data" mesh): queries
+                       travel to the shards owning their top-nprobe buckets
+                       via one all-to-all, each shard scans only its owned
+                       buckets (masked per query), candidates merge
+                       hierarchically through one packed all-gather.
 
 Planner rules, in order: a forced ``spec.executor`` wins; a stats request
-pins the adaptive executor (only it accounts work); a usable mesh picks a
-sharded executor (batched when B > 1 and ``spec.batch_collectives``);
+pins the adaptive executor (only it accounts work); an IVF index on a
+"data"-axis mesh routes by bucket ownership (unless
+``spec.routing="broadcast"`` keeps routing host-side); a usable mesh picks
+a sharded executor (batched when B > 1 and ``spec.batch_collectives``);
 otherwise batches take the MXU scan and single queries the adaptive (or,
 with ``spec.prefer_static``, the masked) path.  Every fallback records its
 reason in the ``ExecutionPlan`` trace.
+
+Tile->shard mappings are ``repro.dist.placement.Placement`` values, cached
+on the store per ``(tiles_version, n_shards, kind)`` — arranging + padding
+copies the tiles, which must cost once per sealed-tile mutation, not once
+per search, and the dict key means the same store serving two mesh sizes
+(or both a block and a bucket layout) never thrashes the cache.
 
 Mutable stores (``core.layout.MutablePDXStore``) flow through the same
 planner: the plan trace records ``store.version`` (so a cached/compared
@@ -129,11 +142,22 @@ def plan_search(
 
     if mesh is not None:
         if ivf is not None:
-            return _host_plan(
-                spec, n_queries, ivf, plan,
-                note="mesh ignored: IVF bucket routing is host-side "
-                     "(ROADMAP: IVF bucket routing across hosts); ",
+            if "data" in axes and spec.routing == "bucket":
+                n_sh = mesh.shape["data"]
+                return plan(
+                    "routed_bucket",
+                    f"mesh 'data' axis ({n_sh} shards) + IVF: bucket-owned "
+                    f"placement, all-to-all query routing + hierarchical "
+                    f"top-k merge (nprobe={spec.nprobe})",
+                )
+            note = (
+                "mesh ignored: spec.routing='broadcast' keeps IVF bucket "
+                "routing host-side; "
+                if "data" in axes
+                else f"mesh ignored: IVF bucket routing needs a 'data' axis, "
+                     f"mesh has {axes}; "
             )
+            return _host_plan(spec, n_queries, ivf, plan, note=note)
         if "data" in axes:
             n_sh = mesh.shape["data"]
             divisible = store.num_partitions % n_sh == 0
@@ -309,30 +333,55 @@ def _exec_batch_matmul(store, pruner, Q, spec, *, ivf, mesh, stats):
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
-def _padded_tiles(store, n_shards: int) -> tuple[jax.Array, jax.Array]:
-    """Partition-padded (data, ids) for the block-sharded executors, cached
-    on the store per (version, n_shards) — padding concatenates a full copy
-    of the tiles, which must cost once per mutation, not once per search."""
-    from ..dist.pdx_sharded import pad_partitions_to_shards  # no core<->dist cycle
+def _get_placement(store, n_shards: int, kind: str, *, ivf=None, axis="data"):
+    """The store's tile->shard ``Placement``, cached per ``(tiles_version,
+    n_shards, kind)`` — arranging/padding copies the tiles, which must cost
+    once per sealed-tile mutation, not once per search.  A dict (not a
+    single slot) so one store serving two mesh sizes, or both block and
+    bucket layouts, never thrashes; stale-version entries are evicted so
+    churn doesn't pin dead device arrays."""
+    from ..dist.placement import Placement  # no core<->dist cycle
 
-    key = (getattr(store, "tiles_version", 0), n_shards)
-    cached = getattr(store, "_pad_cache", None)
-    if cached is None or cached[0] != key:
-        padded = pad_partitions_to_shards(store.data, store.ids, n_shards)
-        store._pad_cache = cached = (key, padded)
-    return cached[1]
+    version = getattr(store, "tiles_version", 0)
+    key = (version, n_shards, kind)
+    cache = getattr(store, "_placement_cache", None)
+    if cache is None:
+        cache = {}
+        store._placement_cache = cache
+    pl = cache.get(key)
+    if pl is None:
+        if kind == "block":
+            pl = Placement.block(store.data, store.ids, n_shards, axis=axis)
+        elif kind == "bucket":
+            pb = getattr(store, "_part_bucket", None)
+            if pb is None:  # frozen store: derive from the (synced) index
+                pb = np.repeat(np.arange(ivf.nlist), ivf.part_counts)
+            if len(pb) < store.num_partitions:  # all-pad placeholder tiles
+                pb = np.concatenate(
+                    [pb, np.full(store.num_partitions - len(pb), -1, np.int64)]
+                )
+            pl = Placement.bucket(
+                store.data, store.ids, pb, ivf.nlist, n_shards, axis=axis
+            )
+        else:
+            raise ValueError(f"no cached placement kind {kind!r}")
+        for stale in [kk for kk in cache if kk[0] != version]:
+            del cache[stale]
+        cache[key] = pl
+    return pl
 
 
 @register_executor("block-sharded")
 def _exec_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
     from ..dist.pdx_sharded import search_block_sharded
 
-    data, ids = _padded_tiles(store, mesh.shape["data"])
+    pl = _get_placement(store, mesh.shape["data"], "block")
     out_i, out_d = [], []
     for q in Q:
         res = search_block_sharded(
-            mesh, data, ids, q, spec.k, metric=spec.metric,
+            mesh, q=q, k=spec.k, metric=spec.metric,
             pruner=pruner, schedule=spec.schedule, delta_d=spec.delta_d,
+            placement=pl,
         )
         out_i.append(np.asarray(res.ids))
         out_d.append(np.asarray(res.dists))
@@ -342,12 +391,14 @@ def _exec_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
 @register_executor("dim-sharded")
 def _exec_dim_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
     from ..dist.pdx_sharded import search_dim_sharded
+    from ..dist.placement import Placement
 
+    pl = Placement.replicated(store.data, store.ids, mesh.shape["model"])
     out_i, out_d = [], []
     for q in Q:
         qt = pruner.transform_query(q)
         res = search_dim_sharded(
-            mesh, store.data, store.ids, qt, spec.k, metric=spec.metric,
+            mesh, q=qt, k=spec.k, metric=spec.metric, placement=pl,
         )
         out_i.append(np.asarray(res.ids))
         out_d.append(np.asarray(res.dists))
@@ -358,9 +409,33 @@ def _exec_dim_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
 def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
     from ..dist.pdx_sharded import search_batch_block_sharded
 
-    data, ids = _padded_tiles(store, mesh.shape["data"])
+    pl = _get_placement(store, mesh.shape["data"], "block")
     Qt = _transform_batch(pruner, Q)
     res = search_batch_block_sharded(
-        mesh, data, ids, Qt, spec.k, metric=spec.metric,
+        mesh, Q=Qt, k=spec.k, metric=spec.metric, placement=pl,
+    )
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+@register_executor("routed_bucket")
+def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Bucket-routed distributed search: queries travel to the shards that
+    own their top-nprobe buckets (one all-to-all + one packed all-gather
+    per batch — see ``repro.dist.routing``).  Exact over each query's
+    selected buckets; with nprobe >= nlist it equals the exact full scan."""
+    if ivf is None:
+        raise ValueError("routed_bucket executor needs an IVF index")
+    if mesh is None or "data" not in getattr(mesh, "axis_names", ()):
+        raise ValueError(
+            "routed_bucket executor needs a mesh with a 'data' axis, got "
+            f"{mesh!r}"
+        )
+    from ..dist.routing import search_routed_bucket
+
+    pl = _get_placement(store, mesh.shape["data"], "bucket", ivf=ivf)
+    Qt = _transform_batch(pruner, Q)
+    sel = ivf.route_batch(Qt, spec.nprobe, spec.metric)
+    res = search_routed_bucket(
+        mesh, pl, Qt, sel, spec.k, metric=spec.metric,
     )
     return np.asarray(res.ids), np.asarray(res.dists)

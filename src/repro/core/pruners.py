@@ -79,6 +79,13 @@ class Pruner:
     # hand-built pruners with different closures can never share a jit-cache
     # entry (a counter, unlike id(), is never reused after GC).
     fingerprint: str = ""
+    # Factory parameters needed to rebuild/invert the transform later (e.g.
+    # BSA's PCA components so compact() can recalibrate from a fresh
+    # sample).  Excluded from equality/hash: the fingerprint already covers
+    # identity, and the dict payload is unhashable.
+    aux: Optional[dict] = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     def __post_init__(self):
         if not self.fingerprint:
@@ -187,6 +194,7 @@ def make_bsa(X_sample: np.ndarray, m: float = 3.0, seed: int = 0) -> Pruner:
         transform_query=lambda q: q @ Cj,
         keep_mask=keep_mask,
         fingerprint=pruner_fingerprint("bsa", components, m),
+        aux={"components": components, "m": m, "seed": seed},
     )
 
 

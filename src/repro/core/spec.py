@@ -39,6 +39,7 @@ from .pdxearch import SearchStats
 __all__ = ["SearchSpec", "SearchResult"]
 
 SCHEDULES = ("adaptive", "fixed")
+ROUTINGS = ("broadcast", "bucket")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +60,12 @@ class SearchSpec:
 
     IVF routing
       nprobe     — buckets probed when the engine has an IVF index.
+      routing    — distributed query routing on a "data"-axis mesh:
+                   "bucket" (default) routes each query only to the shards
+                   owning its top-nprobe buckets (one all-to-all per batch,
+                   bucket-owned placement); "broadcast" keeps the IVF
+                   routing host-side (the pre-placement behavior).  Without
+                   a mesh or an IVF index the knob is inert.
 
     Execution hints (planner inputs, never change *results* beyond the
     pruner's own approximation)
@@ -83,6 +90,7 @@ class SearchSpec:
     executor: Optional[str] = None
     prefer_static: bool = False
     batch_collectives: bool = True
+    routing: str = "bucket"
 
     def __post_init__(self):
         if self.k < 1:
@@ -101,6 +109,10 @@ class SearchSpec:
             raise ValueError(f"group must be >= 1, got {self.group}")
         if self.nprobe < 1:
             raise ValueError(f"nprobe must be >= 1, got {self.nprobe}")
+        if self.routing not in ROUTINGS:
+            raise ValueError(
+                f"routing must be one of {ROUTINGS}, got {self.routing!r}"
+            )
 
     def replace(self, **changes) -> "SearchSpec":
         """A copy with ``changes`` applied (specs are immutable)."""

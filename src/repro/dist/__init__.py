@@ -1,8 +1,14 @@
 """repro.dist — the distributed substrate: sharding rules, activation
-hints, sharded PDXearch, and pipeline parallelism.
+hints, tile placement, sharded + bucket-routed PDXearch, and pipeline
+parallelism.
 
 Architecture
 ============
+
+Two orthogonal questions structure the package: **which mesh axis** a value
+crosses (below), and — for the vector store — **how tiles map onto that
+axis**, which is an explicit ``placement.Placement`` value rather than
+ad-hoc striping inside each executor.
 
 Mesh axes (see ``repro.launch.mesh``):
 
@@ -10,9 +16,8 @@ Mesh axes (see ``repro.launch.mesh``):
     axis through the int8-compressed all-reduce (``repro.train.compression``).
   * ``data``  — FSDP + batch data parallelism within a pod.  Batches shard
     their leading dim over ``("pod", "data")`` (largest divisible suffix —
-    outermost axes drop first, see ``sharding.batch_pspec``); PDX
-    partitions ("blocks") shard over
-    ``data`` in ``pdx_sharded.search_block_sharded``.
+    outermost axes drop first, see ``sharding.batch_pspec``); PDX partitions
+    ("blocks") map onto ``data`` through a ``Placement``.
   * ``model`` — tensor parallelism (Megatron-style column/row pairing) and
     expert parallelism for MoE; PDX *dimension* slices shard over ``model``
     in ``pdx_sharded.search_dim_sharded`` — the same axis split, because the
@@ -20,6 +25,34 @@ Mesh axes (see ``repro.launch.mesh``):
     contiguous row slab of every tile.
   * ``stage`` — pipeline parallelism (``pipeline.pipeline_apply``): each
     device owns one stage's weights; microbatches flow through ``ppermute``.
+
+Tile placements (``placement.Placement``) on the ``data`` axis:
+
+  kind         tiles per shard              who visits whom
+  ------------ ---------------------------- --------------------------------
+  replicated   all of them                  queries stay put (dim-sharded
+                                            search shards D inside the tile)
+  block        a contiguous 1/n stripe,     every query visits every shard:
+               padded to divisibility       per-query or per-batch top-k
+                                            all-gather (``pdx_sharded``)
+  bucket       its *owned* IVF buckets      queries visit only the shards
+               (greedy size-balanced        owning their top-nprobe buckets:
+               bucket -> shard assignment)  one all-to-all + one packed
+                                            all-gather per batch
+                                            (``routing``)
+
+``block`` mirrors-or-stripes the store and broadcasts queries — fine for
+exact scans, but the "replicated broadcast" anti-pattern for IVF serving.
+``bucket`` inverts it: the store stays put, partitioned by ownership, and
+the *queries* move, each to the few shards that can answer it.  The router
+(``routing.plan_routing``) pads the ragged per-shard query lists to a
+static power-of-two budget, packs queries with their selected bucket ids
+into one bitcast buffer, and each shard scans only its owned buckets with a
+per-query bucket mask; candidates merge hierarchically — shard-local top-k,
+then one packed (dists ‖ bitcast ids) all-gather.  Placements are cached on
+the store keyed by ``(tiles_version, n_shards, kind)`` (``core.plan``), so
+a mutable store's head-only inserts never re-arrange the mesh layout and a
+repack invalidates it exactly once.
 
 Which sharding rule fires for which param family (``sharding.param_pspec``):
 
@@ -47,6 +80,8 @@ Activation hints (``hints``) are ``with_sharding_constraint`` anchors inside
 an ``activation_sharding(mesh, batch_axes)`` context and exact identities
 outside it — model code calls them unconditionally and stays mesh-agnostic.
 """
-from . import hints, pdx_sharded, pipeline, sharding
+from . import hints, pdx_sharded, pipeline, placement, routing, sharding
 
-__all__ = ["hints", "pdx_sharded", "pipeline", "sharding"]
+__all__ = [
+    "hints", "pdx_sharded", "pipeline", "placement", "routing", "sharding",
+]

@@ -1,16 +1,19 @@
-"""Distributed PDXearch over a device mesh — both natural decompositions of
-the dimension-major layout:
+"""Distributed PDXearch over a device mesh — the natural decompositions of
+the dimension-major layout, all expressed against a ``Placement``
+(``repro.dist.placement``) that owns the tile->shard mapping:
 
-* ``search_block_sharded`` — partitions (PDX blocks) shard over the ``data``
-  axis: each device runs the masked jitted PDXearch on its local tiles, then
-  the per-shard top-k sets are all-gathered and merged.  Exact for exact
-  pruners (wire cost: ``n_dev * k`` floats+ids per query).
+* ``search_block_sharded`` — partitions (PDX blocks) stripe over the ``data``
+  axis (a ``block`` placement): each device runs the masked jitted PDXearch
+  on its local tiles, then the per-shard top-k sets are all-gathered and
+  merged.  Exact for exact pruners (wire cost: ``n_dev * k`` floats+ids per
+  query).
 
-* ``search_dim_sharded`` — *dimension slices* shard over the ``model`` axis:
-  each device accumulates partial distances over its contiguous row slab of
-  every tile (a dimension shard of a PDX tile is contiguous — paper Fig. 1),
-  one psum completes the distances, then a single top-k finishes.  Exact for
-  all metrics whose distance decomposes over dimensions (l2 / l1 / ip).
+* ``search_dim_sharded`` — *dimension slices* shard over the ``model`` axis
+  while the tiles replicate (a ``replicated`` placement): each device
+  accumulates partial distances over its contiguous row slab of every tile
+  (a dimension shard of a PDX tile is contiguous — paper Fig. 1), one psum
+  completes the distances, then a single top-k finishes.  Exact for all
+  metrics whose distance decomposes over dimensions (l2 / l1 / ip).
 
 * ``search_batch_block_sharded`` — the batched distributed search: the MXU
   batch scan (``core.pdxearch.search_batch_matmul``) runs on each device's
@@ -19,6 +22,13 @@ the dimension-major layout:
   the collective), amortizing the merge latency that the per-query path
   pays B times.  The planner (``repro.core.plan``) picks this automatically
   when a mesh and B > 1 are present.
+
+Padding to mesh divisibility lives in ``Placement.block`` (the former
+``pad_partitions_to_shards``, kept below as a thin compatibility wrapper):
+executors never re-derive striping themselves.  The bucket-*routed* search
+— queries traveling to the shards that own their IVF buckets instead of the
+store being mirrored — lives in ``repro.dist.routing`` on top of a
+``bucket`` placement.
 """
 from __future__ import annotations
 
@@ -27,15 +37,15 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
-from ..core.distance import pdx_distance
-from ..core.layout import PAD_VALUE
 from ..core.pdxearch import (
     _pdxearch_jit_impl,
     make_boundaries,
     search_batch_matmul,
 )
+from ..core.distance import pdx_distance
 from ..core.pruners import Pruner, make_plain_pruner
 from ..core.topk import TopK, topk_init, topk_merge
+from .placement import Placement
 
 __all__ = [
     "pad_partitions_to_shards",
@@ -52,48 +62,63 @@ def pad_partitions_to_shards(
     """Round the partition axis up to a multiple of ``n_shards`` with empty
     (all-``PAD_VALUE``, ids ``-1``) tiles.
 
-    A frozen store is built divisible once and stays divisible; a mutable
-    store's partition count drifts under insert/delete/repack churn, and
-    without padding every repack would knock it off the block-sharded
-    executors.  Padding tiles rank nothing into a top-k (the pad sentinel is
-    monotonically far away and ``topk_merge`` discards ids < 0), so the
-    sharded result stays bit-identical to the unpadded scan.
+    Compatibility wrapper: padding is owned by ``Placement.block`` now; this
+    keeps the old array-in/array-out shape for direct callers.  Padding tiles
+    rank nothing into a top-k (the pad sentinel is monotonically far away and
+    ``topk_merge`` discards ids < 0), so the sharded result stays
+    bit-identical to the unpadded scan.
     """
-    n_parts = data.shape[0]
-    rem = (-n_parts) % n_shards
-    if rem == 0:
-        return data, ids
-    pad_d = jnp.full((rem,) + data.shape[1:], PAD_VALUE, data.dtype)
-    pad_i = jnp.full((rem,) + ids.shape[1:], -1, ids.dtype)
-    return (
-        jnp.concatenate([data, pad_d], axis=0),
-        jnp.concatenate([ids, pad_i], axis=0),
-    )
+    pl = Placement.block(data, ids, n_shards)
+    return pl.data, pl.ids
+
+
+def _require(**named) -> None:
+    """Explicit required-argument check: ``data``/``ids`` became optional so
+    callers can pass a prebuilt ``placement=`` instead, but the query and k
+    are always required — fail here with a clear TypeError rather than
+    deep inside a trace."""
+    for name, val in named.items():
+        if val is None:
+            raise TypeError(f"missing required argument: {name!r}")
+
+
+def _block_placement(
+    mesh, data, ids, axis: str, placement: Placement | None
+) -> Placement:
+    """Resolve the tile placement for a block-sharded executor: callers pass
+    either raw (data, ids) arrays — striped + padded here — or a prebuilt
+    (typically cached, see ``core.plan``) ``block``/``bucket`` placement."""
+    if placement is None:
+        return Placement.block(data, ids, mesh.shape[axis], axis=axis)
+    if placement.n_shards != mesh.shape[axis]:
+        raise ValueError(
+            f"placement built for {placement.n_shards} shards, mesh axis "
+            f"'{axis}' has {mesh.shape[axis]}"
+        )
+    return placement
 
 
 def search_block_sharded(
     mesh,
-    data: jax.Array,
-    ids: jax.Array,
-    q: jax.Array,
-    k: int,
+    data: jax.Array | None = None,
+    ids: jax.Array | None = None,
+    q: jax.Array | None = None,
+    k: int | None = None,
     *,
     metric: str = "l2",
     pruner: Pruner | None = None,
     schedule: str = "adaptive",
     delta_d: int = 32,
     axis: str = "data",
+    placement: Placement | None = None,
 ) -> TopK:
-    """Partition-sharded PDXearch: ``data`` (P, D, C) and ``ids`` (P, C)
-    shard their leading (partition) dim over ``axis``; the query is
-    replicated.  Returns a replicated TopK."""
+    """Partition-sharded PDXearch: the placement's (P', D, C) tiles and
+    (P', C) ids shard their leading (partition) dim over ``axis``; the query
+    is replicated.  Returns a replicated TopK."""
+    _require(q=q, k=k)
     pruner = pruner or make_plain_pruner()
-    n_shards = mesh.shape[axis]
-    if data.shape[0] % n_shards:
-        raise ValueError(
-            f"{data.shape[0]} partitions not divisible over {n_shards} "
-            f"'{axis}' shards"
-        )
+    pl = _block_placement(mesh, data, ids, axis, placement)
+    data, ids = pl.data, pl.ids
     bounds = make_boundaries(data.shape[1], schedule, delta_d)
 
     def local(d_sh, i_sh, q_rep):
@@ -122,18 +147,24 @@ def search_block_sharded(
 
 def search_dim_sharded(
     mesh,
-    data: jax.Array,
-    ids: jax.Array,
-    q: jax.Array,
-    k: int,
+    data: jax.Array | None = None,
+    ids: jax.Array | None = None,
+    q: jax.Array | None = None,
+    k: int | None = None,
     *,
     metric: str = "l2",
     axis: str = "model",
+    placement: Placement | None = None,
 ) -> TopK:
-    """Dimension-sharded exact search: ``data`` (P, D, C) shards its D axis
-    over ``axis`` (the query shards alongside), partial distances are
-    psum'd, and one top-k over all candidates finishes the query."""
+    """Dimension-sharded exact search: tiles replicate (a ``replicated``
+    placement) while each (P, D, C) tile's D axis shards over ``axis`` (the
+    query shards alongside), partial distances are psum'd, and one top-k
+    over all candidates finishes the query."""
+    _require(q=q, k=k)
     n_shards = mesh.shape[axis]
+    if placement is None:
+        placement = Placement.replicated(data, ids, n_shards, axis=axis)
+    data, ids = placement.data, placement.ids
     if data.shape[1] % n_shards:
         raise ValueError(
             f"D={data.shape[1]} not divisible over {n_shards} '{axis}' shards"
@@ -155,28 +186,27 @@ def search_dim_sharded(
 
 def search_batch_block_sharded(
     mesh,
-    data: jax.Array,
-    ids: jax.Array,
-    Q: jax.Array,
-    k: int,
+    data: jax.Array | None = None,
+    ids: jax.Array | None = None,
+    Q: jax.Array | None = None,
+    k: int | None = None,
     *,
     metric: str = "l2",
     axis: str = "data",
+    placement: Placement | None = None,
 ) -> TopK:
-    """Batched block-sharded exact search: ``data`` (P, D, C) / ``ids``
-    (P, C) shard partitions over ``axis``; the (B, D) query batch is
-    replicated.  Each device scans its shard with the MXU batch kernel, then
-    the per-shard (B, k) top-k sets are exchanged in a single all-gather for
-    the whole batch — dists and ids are packed into one (B, 2k) buffer
-    (int32 ids bitcast to float32, bit-exact) so exactly ONE collective
-    crosses the mesh per batch, versus 2·B for B per-query searches.
-    Returns a replicated batched TopK with (B, k) leaves."""
-    n_shards = mesh.shape[axis]
-    if data.shape[0] % n_shards:
-        raise ValueError(
-            f"{data.shape[0]} partitions not divisible over {n_shards} "
-            f"'{axis}' shards"
-        )
+    """Batched block-sharded exact search: the placement's tiles stripe
+    partitions over ``axis``; the (B, D) query batch is replicated.  Each
+    device scans its shard with the MXU batch kernel, then the per-shard
+    (B, k) top-k sets are exchanged in a single all-gather for the whole
+    batch — dists and ids are packed into one (B, 2k) buffer (int32 ids
+    bitcast to float32, bit-exact) so exactly ONE collective crosses the
+    mesh per batch, versus 2·B for B per-query searches.  Returns a
+    replicated batched TopK with (B, k) leaves."""
+    _require(Q=Q, k=k)
+    pl = _block_placement(mesh, data, ids, axis, placement)
+    data, ids = pl.data, pl.ids
+    n_shards = pl.n_shards
     if Q.ndim != 2:
         raise ValueError(f"Q must be (B, D), got shape {Q.shape}")
 

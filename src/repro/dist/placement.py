@@ -1,0 +1,235 @@
+"""Placement — how PDX tiles map onto a device mesh.
+
+Before this module every sharded executor re-derived its own striping and
+padding from raw ``(data, ids)`` arrays; now that mapping is an explicit,
+checked value.  A ``Placement`` owns the arranged-and-padded tile arrays plus
+the metadata the executors and the query router need:
+
+* ``replicated``   — every shard holds every tile (the dimension-sharded
+  executor shards the *D* axis inside the tile instead; tiles replicate).
+* ``block``        — partitions stripe contiguously over the mesh axis,
+  padded with empty tiles to divisibility (the old
+  ``pad_partitions_to_shards`` folded in).  Exact for every executor: a pad
+  tile is all-``PAD_VALUE`` with ids ``-1``, so it can never rank into a
+  top-k.
+* ``bucket``       — bucket-*owned* sharding for IVF stores: a greedy
+  size-balanced assignment gives each IVF bucket exactly one owner shard,
+  partitions are permuted so each shard's slice is its owned buckets
+  (bucket-contiguous within the slice), and per-slot bucket ids let a shard
+  mask its scan down to the buckets a routed query selected.  This is the
+  layout half of HARMONY-style distributed ANN: queries travel to the few
+  shards owning their top-``nprobe`` buckets (see ``repro.dist.routing``)
+  instead of the store being mirrored everywhere.
+
+All builders end with ``check()`` — structural invariants (divisibility,
+each partition placed exactly once, one owner shard per bucket, greedy load
+balance) fail loudly at build time instead of as silent wrong answers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.layout import PAD_VALUE
+
+__all__ = ["Placement", "assign_buckets"]
+
+
+def assign_buckets(bucket_parts: np.ndarray, n_shards: int) -> np.ndarray:
+    """Greedy size-balanced bucket -> shard assignment.
+
+    Buckets are placed largest-first (by partition count) onto the currently
+    least-loaded shard, so ``max_load - min_load`` never exceeds the largest
+    single bucket — the classic LPT bound.  Ties break on lower bucket /
+    shard id, which keeps the assignment deterministic across processes
+    (every host must derive the identical placement).
+    """
+    bucket_parts = np.asarray(bucket_parts, np.int64)
+    order = np.argsort(-bucket_parts, kind="stable")  # largest first, id ties
+    shard_of = np.empty(len(bucket_parts), np.int64)
+    load = np.zeros(n_shards, np.int64)
+    for b in order:
+        s = int(np.argmin(load))  # argmin takes the lowest index on ties
+        shard_of[b] = s
+        load[s] += bucket_parts[b]
+    return shard_of
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """One arranged mapping of a store's tiles onto ``n_shards`` mesh shards.
+
+    ``data``/``ids`` are the tiles as the executors consume them: for
+    ``block``/``bucket`` the partition axis is permuted + padded so shard
+    ``s`` owns the contiguous slice ``[s * parts_per_shard, (s + 1) *
+    parts_per_shard)`` under a ``PartitionSpec(axis)``; for ``replicated``
+    they are the source arrays untouched.
+
+    ``part_perm[i]`` is the source partition sitting in slot ``i`` (-1 for a
+    pad tile); ``slot_bucket[i]`` / ``bucket_shard[b]`` / ``bucket_parts[b]``
+    carry the bucket structure for ``bucket`` placements (None otherwise).
+    """
+
+    kind: str                    # "replicated" | "block" | "bucket"
+    axis: str                    # mesh axis the tiles map onto
+    n_shards: int
+    data: jax.Array              # (P', D, C)
+    ids: jax.Array               # (P', C)
+    part_perm: np.ndarray        # (P',) source partition per slot, -1 = pad
+    bucket_shard: Optional[np.ndarray] = None   # (K,) owner shard per bucket
+    slot_bucket: Optional[np.ndarray] = None    # (P',) bucket per slot, -1 pad
+    bucket_parts: Optional[np.ndarray] = None   # (K,) partitions per bucket
+
+    # ------------------------------------------------------------- properties
+    @property
+    def num_slots(self) -> int:
+        return int(self.data.shape[0])
+
+    @property
+    def parts_per_shard(self) -> int:
+        return self.num_slots // self.n_shards if self.kind != "replicated" \
+            else self.num_slots
+
+    # ------------------------------------------------------------- builders
+    @classmethod
+    def replicated(
+        cls, data: jax.Array, ids: jax.Array, n_shards: int, axis: str = "model"
+    ) -> "Placement":
+        """Tiles present on every shard (dim-sharded / single-host use)."""
+        pl = cls(
+            kind="replicated", axis=axis, n_shards=n_shards,
+            data=data, ids=ids,
+            part_perm=np.arange(data.shape[0], dtype=np.int64),
+        )
+        pl.check()
+        return pl
+
+    @classmethod
+    def block(
+        cls, data: jax.Array, ids: jax.Array, n_shards: int, axis: str = "data"
+    ) -> "Placement":
+        """Contiguous partition striping, padded to divisibility with empty
+        tiles.  Slot order == source order, so for an already-divisible store
+        this is exactly the pre-Placement behavior (no copy, no permute)."""
+        n_parts = data.shape[0]
+        rem = (-n_parts) % n_shards
+        perm = np.concatenate(
+            [np.arange(n_parts, dtype=np.int64), np.full(rem, -1, np.int64)]
+        )
+        if rem:
+            pad_d = jnp.full((rem,) + data.shape[1:], PAD_VALUE, data.dtype)
+            pad_i = jnp.full((rem,) + ids.shape[1:], -1, ids.dtype)
+            data = jnp.concatenate([data, pad_d], axis=0)
+            ids = jnp.concatenate([ids, pad_i], axis=0)
+        pl = cls(
+            kind="block", axis=axis, n_shards=n_shards,
+            data=data, ids=ids, part_perm=perm,
+        )
+        pl.check()
+        return pl
+
+    @classmethod
+    def bucket(
+        cls,
+        data: jax.Array,
+        ids: jax.Array,
+        part_bucket: np.ndarray,
+        num_buckets: int,
+        n_shards: int,
+        axis: str = "data",
+    ) -> "Placement":
+        """Bucket-owned sharding: ``part_bucket[p]`` is the IVF bucket of
+        source partition ``p`` (-1 marks all-pad placeholder tiles, which are
+        dropped — they hold no live vectors).  Each bucket lands wholly on
+        one shard (greedy size-balanced), each shard's slice lists its
+        buckets ascending with their partitions contiguous, and every shard
+        is padded to the widest shard's slot count.
+
+        The width padding is bounded by the greedy balance: at most one
+        extra largest-bucket's worth of pad tiles per shard (LPT bound
+        checked in ``check()``).  With many buckets per shard (nlist >>
+        n_shards, the normal IVF regime) the waste is marginal; with nlist
+        close to n_shards or heavily skewed clusters it can approach the
+        largest bucket per shard — pad tiles are scanned (masked to inf),
+        so prefer nlist >= a few x n_shards when sharding by bucket."""
+        part_bucket = np.asarray(part_bucket, np.int64)
+        if len(part_bucket) != data.shape[0]:
+            raise ValueError(
+                f"part_bucket covers {len(part_bucket)} partitions, store has "
+                f"{data.shape[0]}"
+            )
+        bucket_parts = np.bincount(
+            part_bucket[part_bucket >= 0], minlength=num_buckets
+        ).astype(np.int64)
+        bucket_shard = assign_buckets(bucket_parts, n_shards)
+
+        shard_slots: list[list[int]] = [[] for _ in range(n_shards)]
+        for b in range(num_buckets):  # ascending bucket id within each shard
+            (parts,) = np.nonzero(part_bucket == b)
+            shard_slots[int(bucket_shard[b])].extend(parts.tolist())
+        width = max(1, max(len(sl) for sl in shard_slots))
+        perm = np.full(n_shards * width, -1, np.int64)
+        for s, sl in enumerate(shard_slots):
+            perm[s * width : s * width + len(sl)] = sl
+
+        safe = np.maximum(perm, 0)
+        pad = perm < 0
+        data_arr = jnp.asarray(data)[jnp.asarray(safe)]
+        ids_arr = jnp.asarray(ids)[jnp.asarray(safe)]
+        data_arr = jnp.where(
+            jnp.asarray(pad)[:, None, None], jnp.asarray(PAD_VALUE, data.dtype),
+            data_arr,
+        )
+        ids_arr = jnp.where(jnp.asarray(pad)[:, None], -1, ids_arr)
+        slot_bucket = np.where(pad, -1, part_bucket[safe])
+
+        pl = cls(
+            kind="bucket", axis=axis, n_shards=n_shards,
+            data=data_arr, ids=ids_arr, part_perm=perm,
+            bucket_shard=bucket_shard, slot_bucket=slot_bucket,
+            bucket_parts=bucket_parts,
+        )
+        pl.check()
+        return pl
+
+    # ------------------------------------------------------------ invariants
+    def check(self) -> None:
+        """Structural invariants; raises ValueError on the first violation."""
+        if self.kind not in ("replicated", "block", "bucket"):
+            raise ValueError(f"unknown placement kind {self.kind!r}")
+        if self.data.shape[0] != self.ids.shape[0] or \
+                self.data.shape[0] != len(self.part_perm):
+            raise ValueError("data/ids/part_perm slot counts disagree")
+        real = self.part_perm[self.part_perm >= 0]
+        if len(np.unique(real)) != len(real):
+            raise ValueError("a source partition is placed more than once")
+        if self.kind == "replicated":
+            return
+        if self.num_slots % self.n_shards:
+            raise ValueError(
+                f"{self.num_slots} slots not divisible over "
+                f"{self.n_shards} shards"
+            )
+        if self.kind == "bucket":
+            if self.bucket_shard is None or self.slot_bucket is None:
+                raise ValueError("bucket placement missing bucket metadata")
+            width = self.parts_per_shard
+            owner_of_slot = np.arange(self.num_slots) // width
+            live = self.slot_bucket >= 0
+            if not (self.bucket_shard[self.slot_bucket[live]]
+                    == owner_of_slot[live]).all():
+                raise ValueError("a bucket's partitions span shard slices")
+            load = np.bincount(
+                self.bucket_shard, weights=self.bucket_parts,
+                minlength=self.n_shards,
+            )
+            bound = max(int(self.bucket_parts.max(initial=0)), 1)
+            if load.max() - load.min() > bound:
+                raise ValueError(
+                    f"greedy balance violated: loads {load} vs max bucket "
+                    f"{bound}"
+                )

@@ -1,0 +1,274 @@
+"""Bucket-routed distributed search: queries travel, tiles stay put.
+
+The replicated-broadcast paths (``pdx_sharded``) send every query to every
+shard and scan the whole striped store.  With a ``bucket`` placement
+(``repro.dist.placement``) each shard *owns* a subset of the IVF buckets, so
+a query only needs to visit the shards owning its top-``nprobe`` buckets —
+the HARMONY-style routing the ROADMAP's "IVF bucket routing across hosts"
+item calls for.  One batch flows through exactly two collectives:
+
+1. **Route + exchange** — the router (``IVFIndex.route_batch``) ranks
+   buckets per query; ``plan_routing`` turns that into a host-side exchange
+   plan (which query goes to which owner shard, deduplicated).  Ragged
+   per-shard query lists are padded to a static power-of-two *budget* (few
+   distinct budgets => few retraces), queries and their selected bucket ids
+   are packed into one buffer (int32 bucket ids bitcast to float32), and a
+   single ``all_to_all`` delivers to each shard only the queries it owns
+   buckets for.
+
+2. **Masked local scan + hierarchical merge** — each shard scans *only its
+   owned buckets* (its placement slice), masking each received query down to
+   the buckets it actually selected, and keeps a shard-local top-k.  The
+   per-shard (dists ‖ bitcast ids) candidate sets then cross the mesh in one
+   packed ``all_gather`` (the PR 2 collective-packing trick), and the final
+   per-query top-k merges only the candidate blocks from the shards that
+   query was routed to.
+
+Wire cost per batch: ``n² · budget · (D + nprobe)`` floats in the
+all-to-all (budget shrinks with nprobe — fewer owner shards per query) plus
+``n · n·budget · 2k`` floats in the all-gather, versus the broadcast path's
+``n · B · D`` replicated queries + full-store scan on every shard.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from ..core.distance import batched_distance_matmul
+from ..core.topk import TopK, topk_init, topk_merge
+from .placement import Placement
+
+__all__ = [
+    "RoutingPlan",
+    "plan_routing",
+    "build_send_buffer",
+    "make_routed_fn",
+    "search_routed_bucket",
+]
+
+_INF = jnp.float32(jnp.inf)
+
+# Sentinel bucket id for unused send slots: must match NO slot_bucket entry
+# (pad slots carry -1, so -1 would wrongly select them).
+_EMPTY_SEL = -2
+
+
+def _pow2_at_least(x: int, lo: int = 1) -> int:
+    c = lo
+    while c < x:
+        c *= 2
+    return c
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutingPlan:
+    """Host-side exchange plan for one query batch.
+
+    ``send_slot[s, t, j]`` — global query index source shard ``s`` puts in
+    slot ``j`` of its message to shard ``t`` (-1 = unused pad slot).
+    ``dest_shard``/``dest_slot`` (B, max_dest) — where each query's
+    candidate blocks land after the all-gather (-1 pads).  ``src_of`` (B,)
+    — the source shard each query originates on (contiguous split of the
+    batch, mirroring how a (B, D) batch shards over the axis).
+    """
+
+    send_slot: np.ndarray
+    dest_shard: np.ndarray
+    dest_slot: np.ndarray
+    src_of: np.ndarray
+    budget: int       # static per-(src, dst) slot count (power of two)
+    occupancy: int    # real (src, dst, slot) entries, for byte accounting
+
+
+def plan_routing(
+    sel: np.ndarray,
+    bucket_shard: np.ndarray,
+    bucket_parts: np.ndarray,
+    n_shards: int,
+) -> RoutingPlan:
+    """Map each query's selected buckets onto owner shards.
+
+    ``sel`` (B, nprobe) — ranked bucket ids per query.  Empty buckets own no
+    partitions and are skipped (routing a query to their owner would move
+    bytes for zero scan work).  The per-(src, dst) budget is the max real
+    demand rounded up to a power of two, so shapes stay static across
+    batches with similar routing pressure.
+    """
+    sel = np.asarray(sel)
+    B = sel.shape[0]
+    src_of = (np.arange(B, dtype=np.int64) * n_shards) // max(B, 1)
+    dests = [
+        np.unique(bucket_shard[sel[b][bucket_parts[sel[b]] > 0]])
+        for b in range(B)
+    ]
+    max_dest = min(sel.shape[1], n_shards)
+    counts = np.zeros((n_shards, n_shards), np.int64)
+    for b, ds in enumerate(dests):
+        counts[src_of[b], ds] += 1
+    budget = _pow2_at_least(max(int(counts.max(initial=0)), 1))
+
+    send_slot = np.full((n_shards, n_shards, budget), -1, np.int32)
+    dest_shard = np.full((B, max_dest), -1, np.int32)
+    dest_slot = np.full((B, max_dest), -1, np.int32)
+    fill = np.zeros((n_shards, n_shards), np.int64)
+    for b, ds in enumerate(dests):
+        s = src_of[b]
+        for j, t in enumerate(ds):
+            slot = fill[s, t]
+            fill[s, t] += 1
+            send_slot[s, t, slot] = b
+            dest_shard[b, j] = t
+            dest_slot[b, j] = slot
+    return RoutingPlan(
+        send_slot=send_slot, dest_shard=dest_shard, dest_slot=dest_slot,
+        src_of=src_of.astype(np.int32), budget=budget,
+        occupancy=int(fill.sum()),
+    )
+
+
+def build_send_buffer(
+    Q: np.ndarray, sel: np.ndarray, rp: RoutingPlan
+) -> np.ndarray:
+    """Pack (queries ‖ bitcast selected-bucket ids) into the single
+    (n, n, budget, D + nprobe) float32 all-to-all payload."""
+    Q = np.asarray(Q, np.float32)
+    sel = np.asarray(sel, np.int32)
+    n = rp.send_slot.shape[0]
+    D, nprobe = Q.shape[1], sel.shape[1]
+    send_q = np.zeros((n, n, rp.budget, D), np.float32)
+    send_sel = np.full((n, n, rp.budget, nprobe), _EMPTY_SEL, np.int32)
+    occ = rp.send_slot >= 0
+    send_q[occ] = Q[rp.send_slot[occ]]
+    send_sel[occ] = sel[rp.send_slot[occ]]
+    return np.concatenate([send_q, send_sel.view(np.float32)], axis=-1)
+
+
+# jitted routed executors keyed on their static configuration; every array
+# (send buffer, tiles, routing indices) is a traced ARGUMENT, so one cache
+# entry serves every batch / placement with the same shapes — repeated
+# searches hit the jit executable instead of re-tracing the shard_map.
+_ROUTED_CACHE: "collections.OrderedDict[tuple, object]" = (
+    collections.OrderedDict()
+)
+_ROUTED_CACHE_MAX = 8
+
+
+def _routed_exec(mesh, axis: str, D: int, nprobe: int, k: int, metric: str):
+    key = (mesh, axis, D, nprobe, k, metric)
+    if key in _ROUTED_CACHE:
+        _ROUTED_CACHE.move_to_end(key)
+        return _ROUTED_CACHE[key]
+
+    def local(buf, d_sh, i_sh, pb_sh, dest_shard, dest_slot, src_of):
+        # buf local: (1, n, budget, D + nprobe) — my messages, one per dest.
+        n, budget = buf.shape[1], buf.shape[2]
+        B = dest_shard.shape[0]
+        recv = jax.lax.all_to_all(buf[0], axis, 0, 0, tiled=True)
+        Bl = n * budget  # received queries, flat index = src * budget + slot
+        Qr = recv[..., :D].reshape(Bl, D)
+        selr = jax.lax.bitcast_convert_type(
+            recv[..., D:], jnp.int32
+        ).reshape(Bl, nprobe)
+        # query q may scan local partition p iff p's bucket is one q selected
+        allowed = (selr[:, :, None] == pb_sh[None, None, :]).any(axis=1)
+
+        def body(state, inp):
+            tile, tids, allow_p = inp  # (D, C), (C,), (Bl,)
+            dmat = batched_distance_matmul(tile, Qr, metric)  # (Bl, C)
+            dmat = jnp.where(allow_p[:, None], dmat, _INF)
+            return jax.vmap(topk_merge, (0, 0, None))(state, dmat, tids), None
+
+        init = jax.vmap(lambda _: topk_init(k))(jnp.arange(Bl))
+        res, _ = jax.lax.scan(body, init, (d_sh, i_sh, allowed.T))
+
+        packed = jnp.concatenate(
+            [res.dists, jax.lax.bitcast_convert_type(res.ids, jnp.float32)],
+            axis=1,
+        )  # (Bl, 2k)
+        allp = jax.lax.all_gather(packed, axis)  # (n_dst, Bl, 2k)
+
+        # hierarchical merge (replicated): per query, only the candidate
+        # blocks from the shards it was routed to.
+        pad = dest_shard < 0                                     # (B, max_dest)
+        t = jnp.maximum(dest_shard, 0)
+        row = src_of[:, None] * budget + jnp.maximum(dest_slot, 0)
+        cand = allp[t, row]                                      # (B, md, 2k)
+        cd = jnp.where(pad[:, :, None], _INF, cand[..., :k]).reshape(B, -1)
+        ci = jnp.where(
+            pad[:, :, None], -1,
+            jax.lax.bitcast_convert_type(cand[..., k:], jnp.int32),
+        ).reshape(B, -1)
+        merge = lambda dd, ii: topk_merge(topk_init(k), dd, ii)  # noqa: E731
+        return jax.vmap(merge)(cd, ci)
+
+    fn = jax.jit(shard_map(
+        local,
+        mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(axis), P(), P(), P()),
+        out_specs=TopK(dists=P(), ids=P()),
+        check_rep=False,
+    ))
+    _ROUTED_CACHE[key] = fn
+    while len(_ROUTED_CACHE) > _ROUTED_CACHE_MAX:
+        _ROUTED_CACHE.popitem(last=False)
+    return fn
+
+
+def make_routed_fn(mesh, placement: Placement, rp: RoutingPlan, D: int,
+                   nprobe: int, k: int, metric: str = "l2"):
+    """Bind the cached jitted routed executor to one (placement, routing
+    plan): send_buffer -> (B, k) TopK.
+
+    Exactly two collectives per call — one all_to_all (query exchange) and
+    one packed all-gather (candidate merge) — independent of B and nprobe;
+    ``collective_counts`` gates this in tests.
+    """
+    fn = _routed_exec(mesh, placement.axis, D, nprobe, k, metric)
+    slot_bucket = jnp.asarray(placement.slot_bucket, jnp.int32)
+    dest_shard = jnp.asarray(rp.dest_shard)
+    dest_slot = jnp.asarray(rp.dest_slot)
+    src_of = jnp.asarray(rp.src_of)
+    return lambda buf: fn(
+        buf, placement.data, placement.ids, slot_bucket,
+        dest_shard, dest_slot, src_of,
+    )
+
+
+def search_routed_bucket(
+    mesh,
+    placement: Placement,
+    Q: jax.Array,
+    sel: np.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+) -> TopK:
+    """Routed batch search over a ``bucket`` placement.
+
+    ``Q`` (B, D) — pruner-transformed queries; ``sel`` (B, nprobe) — ranked
+    bucket ids per query (``IVFIndex.route_batch``).  Exact over the union
+    of each query's selected buckets: the masked scan computes full
+    distances (never prunes), so with nprobe == nlist this equals the exact
+    full scan.  Returns a replicated (B, k) TopK.
+    """
+    if placement.kind != "bucket":
+        raise ValueError(
+            f"routed search needs a 'bucket' placement, got {placement.kind!r}"
+        )
+    Qnp = np.asarray(Q, np.float32)
+    selnp = np.asarray(sel, np.int32)
+    rp = plan_routing(
+        selnp, placement.bucket_shard, placement.bucket_parts,
+        placement.n_shards,
+    )
+    buf = build_send_buffer(Qnp, selnp, rp)
+    fn = make_routed_fn(
+        mesh, placement, rp, Qnp.shape[1], selnp.shape[1], k, metric
+    )
+    return fn(jnp.asarray(buf))

@@ -24,14 +24,31 @@ from .kmeans import kmeans
 __all__ = ["IVFIndex", "build_ivf"]
 
 
-@functools.partial(jax.jit, static_argnames=("metric", "nlist"))
-def _rank_centroids(cdata: jax.Array, q: jax.Array, nlist: int, metric: str):
+def _rank_centroids_impl(cdata, q, nlist: int, metric: str):
     """One dimension-major scan of ALL centroid tiles -> ascending bucket
     order.  vmap over the (Pc, D, C) tile stack replaces the old
     per-partition Python loop, and the argsort happens on device so the
     whole ranking is a single dispatch with one host sync at the caller."""
     d = jax.vmap(lambda tile: pdx_distance(tile, q, metric))(cdata)
     return jnp.argsort(d.reshape(-1)[:nlist])
+
+
+_rank_centroids = jax.jit(
+    _rank_centroids_impl, static_argnames=("metric", "nlist")
+)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "nlist"))
+def _rank_centroids_batch(
+    cdata: jax.Array, Q: jax.Array, nlist: int, metric: str
+):
+    """``_rank_centroids`` vmapped over a (B, D) query batch -> (B, nlist)
+    ascending bucket orders in one dispatch.  Sharing the single-query body
+    keeps batched and per-query routing agreeing on bucket ranking by
+    construction."""
+    return jax.vmap(
+        lambda q: _rank_centroids_impl(cdata, q, nlist, metric)
+    )(Q)
 
 
 @jax.jit
@@ -74,6 +91,20 @@ class IVFIndex:
             for b in sel
         ]
         return np.concatenate(parts) if parts else np.zeros(0, np.int64)
+
+    def route_batch(
+        self, Qt: jax.Array, nprobe: int, metric: str = "l2"
+    ) -> np.ndarray:
+        """Query routing for the distributed bucket-routed executor: rank
+        buckets for a whole (B, D) batch of (already pruner-transformed)
+        queries -> (B, min(nprobe, nlist)) bucket ids, best first.  The
+        caller (``repro.dist.routing``) maps buckets onto owner shards via
+        the placement and exchanges queries with one all-to-all."""
+        Qt = jnp.atleast_2d(jnp.asarray(Qt, jnp.float32))
+        order = _rank_centroids_batch(
+            self.centroid_store.data, Qt, self.nlist, metric
+        )
+        return np.asarray(order[:, : min(nprobe, self.nlist)])
 
     def route(
         self, qt: jax.Array, nprobe: int, metric: str = "l2"

@@ -53,11 +53,20 @@ class RagPipeline:
         index: str = "flat",
         capacity: int = 256,
         retrieve_k: int = 1,
+        mesh=None,
+        routing: str = "bucket",
     ) -> "RagPipeline":
-        """Embed every document with the LM and build the PDX store."""
+        """Embed every document with the LM and build the PDX store.
+
+        ``mesh``/``routing`` flow into the search engine: with a
+        "data"-axis mesh and an IVF index, retrieval batches are
+        bucket-routed across shards (``routing="bucket"``, the default —
+        one all-to-all + one packed all-gather per batch) instead of
+        broadcast to a mirrored store."""
         X = _embed_docs(engine, doc_tokens)
         store = VectorSearchEngine.build(
-            X, pruner=pruner, index=index, capacity=capacity
+            X, pruner=pruner, index=index, capacity=capacity, mesh=mesh,
+            routing=routing,
         )
         return cls(
             engine=engine, store=store, doc_tokens=doc_tokens,

@@ -301,6 +301,107 @@ def test_sharded_executor_parity_under_churn_8dev():
     """)
 
 
+# ----------------------------------------------------- batch-delete satellite
+def test_batch_delete_10k_single_vectorized_pass(rng):
+    """delete() resolves the whole id array to coordinates up front and
+    poisons every slot in one fancy-indexed pass — 10k deletes across
+    sealed tiles AND the write-head in one call, with running moments,
+    counts, and the id map staying exact."""
+    X = rng.standard_normal((20000, 16)).astype(np.float32)
+    store = MutablePDXStore.from_store(
+        build_flat_store(X, capacity=256), head_capacity=64
+    )
+    head = rng.standard_normal((50, 16)).astype(np.float32)
+    store.insert(head)  # ids 20000..20049 live in the write-head
+    rows = {i: X[i] for i in range(20000)}
+    rows.update({20000 + r: head[r] for r in range(50)})
+
+    victims = rng.choice(20050, size=10000, replace=False)
+    # repeated + never-existing ids must not double-count
+    removed = store.delete(np.concatenate([victims, victims[:7], [10**6]]))
+    assert removed == 10000
+    for i in victims:
+        rows.pop(int(i))
+    assert store.num_vectors == len(rows) == 10050
+    expected = np.stack([rows[i] for i in sorted(rows)])
+    np.testing.assert_array_equal(pdx_to_nary(store), expected)
+    # tombstoned sealed slots are poisoned and re-usable
+    ids_arr = np.asarray(store.ids)
+    data_arr = np.asarray(store.data)
+    assert (data_arr[:, 0, :][ids_arr < 0] == PAD_VALUE).all()
+    assert int((ids_arr >= 0).sum()) == int(store._counts.sum())
+    # moments stayed in sync -> a repack reproduces identical metadata
+    before = np.asarray(store.dim_means).copy()
+    store.repack()
+    np.testing.assert_allclose(np.asarray(store.dim_means), before, atol=1e-4)
+    np.testing.assert_array_equal(pdx_to_nary(store), expected)
+
+
+# ------------------------------------------------------ BSA-recal satellite
+def test_bsa_recalibrated_on_compact():
+    """compact() refits BSA's PCA from a fresh survivor sample and
+    re-projects the live rows in place, so a churned-then-compacted engine
+    prunes like one freshly built from the survivors (ROADMAP follow-up:
+    previously only BOND metadata refreshed)."""
+    from repro.core.pdxearch import SearchStats
+    from repro.data.synthetic import ground_truth, recall_at_k
+
+    rng = np.random.default_rng(31)
+    X, Q = make_dataset(4096, 32, "clustered", n_queries=8, seed=31)
+    build_kw = dict(pruner="bsa", capacity=128)
+    eng = VectorSearchEngine.build(X, **build_kw)
+    fp0 = eng.pruner.fingerprint
+    oracle = Oracle(X)
+    # churn WITH distribution shift: the build-time PCA goes stale
+    shifted = (rng.standard_normal((600, 32)) * 0.5 + 4.0).astype(np.float32)
+    oracle.insert(eng, shifted)
+    oracle.delete(eng, rng.choice(4096, size=1500, replace=False))
+
+    eng.compact()
+    assert eng.pruner.fingerprint != fp0  # recalibrated -> new identity
+
+    fresh = VectorSearchEngine.build(oracle.surviving, **build_kw)
+    gt_ids, _ = ground_truth(oracle.surviving, Q, k=10)
+    im = oracle.live_ids
+    got = eng.search(Q, SearchSpec(k=10, executor="adaptive"))
+    want = fresh.search(Q, SearchSpec(k=10, executor="adaptive"))
+    r_got = recall_at_k(np.searchsorted(im, got.ids), gt_ids)
+    r_fresh = recall_at_k(want.ids, gt_ids)
+    assert abs(r_got - r_fresh) <= 0.02, (r_got, r_fresh)
+    # pruning power matches the freshly calibrated pruner too
+    s_got, s_fresh = SearchStats(), SearchStats()
+    eng.search(Q[0], SearchSpec(k=10), stats=s_got)
+    fresh.search(Q[0], SearchSpec(k=10), stats=s_fresh)
+    assert abs(s_got.pruning_power - s_fresh.pruning_power) <= 0.05
+
+
+def test_bsa_recal_keeps_ivf_centroids_consistent():
+    """The recalibration rotates the stored coordinates; IVF centroids must
+    rotate along (bucket membership is rotation-invariant), keeping
+    full-probe search exact after compact."""
+    from repro.data.synthetic import ground_truth, recall_at_k
+
+    rng = np.random.default_rng(32)
+    X, Q = make_dataset(2048, 24, "clustered", n_queries=6, seed=32)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="bsa", capacity=128, nlist=8,
+    )
+    oracle = Oracle(X)
+    oracle.insert(eng, rng.standard_normal((200, 24)).astype(np.float32))
+    oracle.delete(eng, rng.choice(2048, size=400, replace=False))
+    eng.compact()
+    assert eng.ivf.part_counts.sum() == eng.store.num_partitions
+    gt_ids, _ = ground_truth(oracle.surviving, Q, k=5)
+    got = eng.search(Q, SearchSpec(k=5, nprobe=8))
+    fresh = VectorSearchEngine.build(
+        oracle.surviving, index="ivf", pruner="bsa", capacity=128, nlist=8,
+    )
+    want = fresh.search(Q, SearchSpec(k=5, nprobe=8))
+    r_got = recall_at_k(np.searchsorted(oracle.live_ids, got.ids), gt_ids)
+    r_fresh = recall_at_k(want.ids, gt_ids)
+    assert abs(r_got - r_fresh) <= 0.05, (r_got, r_fresh)
+
+
 # ------------------------------------------------------- empty-bucket satellite
 def test_empty_buckets_cost_zero_partitions(rng):
     X = rng.standard_normal((50, 4)).astype(np.float32)

@@ -25,7 +25,7 @@ def test_spec_is_frozen_and_validated():
     for bad in (
         dict(k=0), dict(metric="cosine"), dict(schedule="geometric"),
         dict(sel_frac=0.0), dict(sel_frac=1.5), dict(nprobe=0),
-        dict(delta_d=0), dict(group=0),
+        dict(delta_d=0), dict(group=0), dict(routing="unicast"),
     ):
         with pytest.raises(ValueError):
             SearchSpec(**bad)
@@ -83,10 +83,14 @@ def test_planner_dispatch_rules():
     p = plan_search(spec, store, 4, mesh=_FakeMesh(model=7))
     assert p.executor == "batch-matmul" and "not divisible" in p.reason
 
-    # IVF is host-routed for now: a mesh is ignored, batches loop adaptive
+    # IVF + 'data' mesh routes by bucket ownership; "broadcast" opts out
+    # (full routed-executor coverage lives in tests/test_routing.py)
     ivf = object()
     p = plan_search(spec, store, 4, ivf=ivf, mesh=data_mesh)
-    assert p.executor == "adaptive" and "IVF" in p.reason
+    assert p.executor == "routed_bucket" and "bucket-owned" in p.reason
+    p = plan_search(spec.replace(routing="broadcast"), store, 4, ivf=ivf,
+                    mesh=data_mesh)
+    assert p.executor == "adaptive" and "broadcast" in p.reason
     assert plan_search(spec, store, 4, ivf=ivf).executor == "adaptive"
 
     # forced executor wins over everything
