@@ -1,22 +1,46 @@
-"""Paper Table 4: PDX vs N-ary (horizontal) distance kernels across
+"""Paper Table 4 + the fused-executor bandwidth gate -> BENCH_kernels.json.
+
+Part 1 (Table 4): PDX vs N-ary (horizontal) distance kernels across
 dimensionalities, L2/IP/L1.  Both are XLA-autovectorized jnp — the layout is
 the only variable, which is exactly the paper's claim (no intrinsics needed).
 Derived column: speedup of PDX over N-ary.
+
+Part 2 (fused executors): the megakernel (``fused-scan``) vs the jnp masked
+path (``jit-masked``) at f32/bf16/int8 scan dtypes.  On the CI CPU run the
+Pallas kernels execute in interpret mode, so wall-clock is meaningless for
+them; correctness is gated by comparing interpret-mode ids against the jnp
+body, and the throughput gate uses **demand bytes per query** as the proxy
+(the scan is bandwidth-bound — paper Section 7): the masked path needs
+every f32 dimension value of every partition, the megakernel needs a
+partition's d-tiles only until all its lanes are pruned, at mirror width
+(4/2/1 B).  Two components of that win have different status today: the
+**dtype factor** (2x/4x) is realized — the mirror IS bf16/int8 in HBM —
+while the **pruning factor** counts tiles whose loads the fused keep-mask
+makes unnecessary; the shipped kernel skips their VPU work but the
+automatic Pallas pipeline still streams them, so that factor is realized
+once tile fetches are hoisted behind the keep-mask (the manual-DMA /
+PrefetchScalarGridSpec follow-up in the kernel design notes and ROADMAP).
+Acceptance: fused f32 demands >= 1.5x fewer bytes than the masked path at
+equal recall.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.core.layout import device_mirror
+from repro.core.pdxearch import make_boundaries  # noqa: F401  (doc pointer)
+from repro.data.synthetic import ground_truth, make_dataset, recall_at_k
 from repro.core.distance import nary_distance, pdx_distance
 
-from .common import dataset, emit, timeit
+from .common import dataset, emit, timeit, write_json
 
 DIMS_FULL = [8, 16, 32, 64, 128, 192, 256, 384, 512, 768, 1024, 1536]
 DIMS_SMOKE = [8, 32, 128, 512, 1536]
 
 
-def run(scale: str = "smoke"):
+def _table4(scale: str, record: dict):
     dims = DIMS_SMOKE if scale == "smoke" else DIMS_FULL
     n = 16384 if scale == "smoke" else 131072
     rng = np.random.default_rng(0)
@@ -34,16 +58,167 @@ def run(scale: str = "smoke"):
                 f"table4/{metric}/D{d}/pdx", t_pdx * 1e6,
                 f"nary_us={t_nary*1e6:.2f};speedup={sp:.2f}",
             )
+    record["table4"] = {}
     for metric in ("l2", "ip", "l1"):
         lo = [v for (m, d), v in rows.items() if m == metric and d <= 32]
         hi = [v for (m, d), v in rows.items() if m == metric and d > 32]
         alls = [v for (m, d), v in rows.items() if m == metric]
+        gm = lambda xs: float(np.exp(np.mean(np.log(xs))))  # noqa: E731
+        record["table4"][metric] = {
+            "geomean_speedup_lowD": gm(lo),
+            "geomean_speedup_highD": gm(hi),
+            "geomean_speedup_all": gm(alls),
+        }
         emit(
             f"table4/{metric}/summary", 0.0,
-            f"geomean_speedup_D<=32={np.exp(np.mean(np.log(lo))):.2f};"
-            f"D>32={np.exp(np.mean(np.log(hi))):.2f};"
-            f"all={np.exp(np.mean(np.log(alls))):.2f}",
+            f"geomean_speedup_D<=32={gm(lo):.2f};"
+            f"D>32={gm(hi):.2f};all={gm(alls):.2f}",
         )
+
+
+def _scan_bytes_per_query(
+    store, pruner, Q, starts, thr_per_q, eps0, dtype, d_tile=64
+):
+    """Model the megakernel's DEMAND bytes for each query: the START
+    partition streams once at f32 (the exact threshold seed), then a
+    partition's d-tile is needed only while any of its lanes is alive, at
+    mirror width (see the module docstring: the dtype factor is realized
+    today, the pruning factor once fetches are hoisted behind the
+    keep-mask).  The walk replays the exact kernel arithmetic (on
+    dequantized mirror values) so per-dtype pruning differences are
+    accounted."""
+    mirror = device_mirror(store, dtype)
+    ids = np.asarray(store.ids)
+    T = np.asarray(mirror.data, dtype=np.float32)
+    if dtype == "int8":
+        sc = np.asarray(mirror.scale)
+        off = np.asarray(mirror.offset)
+        T = T * sc[None, :, None] + off[None, :, None]
+    # PAD columns hold the 3e18 sentinel whose square overflows f32; they
+    # are dead from the ids mask anyway, so zero them out of the model
+    T = np.where((ids >= 0)[:, None, :], T, 0.0)
+    P, D, C = T.shape
+    nd = -(-D // d_tile)
+    bpv = mirror.bytes_per_value
+    total = 0.0
+    for q, p0, thr in zip(Q, starts, thr_per_q):
+        qt = np.asarray(pruner.transform_query(jnp.asarray(q)))
+        total += D * C * 4  # START partition, exact f32
+        acc = np.zeros((P, C), np.float32)
+        alive = (ids >= 0).astype(np.float32)
+        alive[p0] = 0.0  # START covered exactly; megakernel skips it whole
+        for i in range(nd):
+            lo, hi = i * d_tile, min((i + 1) * d_tile, D)
+            fetch = alive.any(axis=1)            # partitions still streaming
+            total += fetch.sum() * (hi - lo) * C * bpv
+            blk = T[:, lo:hi, :] - qt[None, lo:hi, None]
+            acc += (blk * blk).sum(axis=1) * alive
+            d_seen = float(hi)
+            bound = thr * (1.0 + eps0 / np.sqrt(d_seen)) ** 2
+            alive *= (acc * (D / d_seen) <= bound).astype(np.float32)
+    return total / len(Q)
+
+
+def _fused(scale: str, record: dict):
+    # IVF-bucketed clustered store: the megakernel's unit of skip is the
+    # partition, and with buckets ≡ partitions a far bucket's lanes die at
+    # the first hypothesis test — the paper's IVF serving shape.
+    n, dim, cap, nq, nlist = (
+        (16384, 256, 256, 8, 64) if scale == "smoke"
+        else (131072, 256, 512, 32, 256)
+    )
+    k = 10
+    X, Q = dataset(n, dim, "clustered", n_queries=nq, seed=0)
+    gt_ids, _ = ground_truth(X, Q, k=k)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="adsampling", capacity=cap, nlist=nlist,
+    )
+    store, pruner = eng.store, eng.pruner
+    eps0 = float(pruner.aux["eps0"])
+    P, D, C = store.data.shape
+    store_bytes = P * D * C * 4  # what the jnp masked path streams, per query
+
+    # per-query START partition (IVF-routed, as the executor does) and the
+    # exact kth-distance threshold it seeds
+    starts, thrs = [], []
+    for q in Q:
+        qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+        order, _ = eng.ivf.route(qt, 1, "l2")
+        p0 = int(order[0]) if len(order) else 0
+        starts.append(p0)
+        d0 = np.asarray(pdx_distance(store.data[p0], qt, "l2"))
+        live = np.asarray(store.ids[p0]) >= 0
+        thrs.append(float(np.sort(d0[live])[min(k - 1, live.sum() - 1)]))
+
+    fused = {
+        "config": {"n": n, "dim": dim, "capacity": cap, "k": k,
+                   "nlist": nlist, "n_queries": nq, "d_tile": 64,
+                   "eps0": eps0},
+        "bytes_model": (
+            "demand bytes: d-tiles needed per the fused keep-mask, at "
+            "mirror width; dtype factor realized in HBM today, pruning "
+            "factor once fetches hoist behind the mask (see module doc)"
+        ),
+        "bytes_per_query": {"jnp-masked-f32": float(store_bytes)},
+        "bytes_speedup_vs_jnp_masked": {},
+        "throughput_us_per_query": {},
+        "recall_at_k": {},
+    }
+
+    # jnp masked baseline: correctness + wall clock (pdxearch_jit directly —
+    # the executor refuses IVF engines, but the masked scan itself is
+    # index-agnostic: every partition, every dimension row, masked)
+    from repro.core.pdxearch import pdxearch_jit
+
+    ids_masked = np.stack([
+        np.asarray(pdxearch_jit(store, q, k, pruner).ids) for q in Q
+    ])
+    fused["recall_at_k"]["jit-masked"] = recall_at_k(ids_masked, gt_ids)
+    t = timeit(lambda: pdxearch_jit(store, Q[0], k, pruner),
+               reps=3, warmup=1)
+    fused["throughput_us_per_query"]["jit-masked-f32"] = t * 1e6
+    emit(f"kernels/jit-masked/f32/n{n}/D{dim}", t * 1e6,
+         f"bytes_per_q={store_bytes:.0f}")
+
+    for dt in ("f32", "bf16", "int8"):
+        spec = SearchSpec(k=k, scan_dtype=dt, kernel="jnp",
+                          executor="fused-scan")
+        ids_j = np.stack([np.asarray(eng.search(q, spec).ids) for q in Q])
+        rec = recall_at_k(ids_j, gt_ids)
+        fused["recall_at_k"][f"fused-scan-{dt}"] = rec
+        # interpret-mode Pallas gates correctness (one query keeps CI fast)
+        ids_p = np.asarray(
+            eng.search(Q[0], spec.replace(kernel="pallas")).ids
+        )
+        assert np.array_equal(ids_p, ids_j[0]), (
+            "pallas interpret body disagrees with jnp body", dt)
+        bq = _scan_bytes_per_query(store, pruner, Q, starts, thrs, eps0, dt)
+        sp = store_bytes / bq
+        fused["bytes_per_query"][f"fused-scan-{dt}"] = bq
+        fused["bytes_speedup_vs_jnp_masked"][dt] = sp
+        t = timeit(lambda: eng.search(Q[0], spec), reps=3, warmup=1)
+        fused["throughput_us_per_query"][f"fused-scan-{dt}-jnp"] = t * 1e6
+        emit(f"kernels/fused-scan/{dt}/n{n}/D{dim}", t * 1e6,
+             f"bytes_per_q={bq:.0f};bytes_speedup={sp:.2f};recall={rec:.3f}")
+
+    fused["pallas_interpret_matches_jnp"] = True
+    record["fused"] = fused
+
+    # acceptance gates: >= 1.5x fewer bytes at equal recall; the bf16/int8
+    # mirrors cut the fused scan's bytes a further >= 1.9x / 3.5x
+    bq = fused["bytes_per_query"]
+    assert fused["bytes_speedup_vs_jnp_masked"]["f32"] >= 1.5, fused
+    assert fused["recall_at_k"]["fused-scan-f32"] >= \
+        fused["recall_at_k"]["jit-masked"], fused
+    assert bq["fused-scan-f32"] / bq["fused-scan-bf16"] >= 1.9, fused
+    assert bq["fused-scan-f32"] / bq["fused-scan-int8"] >= 3.5, fused
+
+
+def run(scale: str = "smoke"):
+    record = {"bench": "kernels", "scale": scale}
+    _table4(scale, record)
+    _fused(scale, record)
+    write_json("BENCH_kernels.json", record)
 
 
 if __name__ == "__main__":

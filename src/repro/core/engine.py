@@ -64,6 +64,18 @@ keyed on it, so no executor ever runs against stale tiles.
 Pruner *algorithm* selection (``pruner="adsampling"``, ``eps0``, ``bsa_m``,
 ``zone_size``) stays a build-time choice: those transforms are baked into
 the stored vectors.  Everything about a single query is a ``SearchSpec``.
+
+Device-scan precision is a *spec* knob, not store state: the store keeps
+f32 masters and lazily materializes a quantized device mirror per
+``tiles_version`` (see ``core.layout.device_mirror``), so
+
+    eng.search(Q, SearchSpec(scan_dtype="bf16"))   # 2x fewer scan bytes
+    eng.search(Q, SearchSpec(scan_dtype="int8"))   # 4x fewer scan bytes
+
+stream 2 or 1 bytes per dimension value through the hot loop (on a mesh,
+through every shard's scan) while the top ``rerank_mult * k`` candidates
+are re-ranked against the f32 masters — returned distances stay exact.
+``build(scan_dtype=..., kernel=...)`` seeds the engine's default spec.
 """
 from __future__ import annotations
 
@@ -154,6 +166,9 @@ class VectorSearchEngine:
         spec: Optional[SearchSpec] = None,
         mesh: Any = None,
         routing: str = "bucket",
+        scan_dtype: str = "f32",
+        kernel: str = "auto",
+        rerank_mult: int = 4,
     ) -> "VectorSearchEngine":
         X = np.ascontiguousarray(np.asarray(X, np.float32))
         pr = _make_pruner(
@@ -176,6 +191,8 @@ class VectorSearchEngine:
             spec = SearchSpec(
                 metric=metric, schedule=schedule, delta_d=delta_d,
                 sel_frac=sel_frac, group=group, routing=routing,
+                scan_dtype=scan_dtype, kernel=kernel,
+                rerank_mult=rerank_mult,
             )
         return cls(store=store, pruner=pr, spec=spec, ivf=ivf, mesh=mesh,
                    zone_size=zone_size)

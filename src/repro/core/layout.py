@@ -14,6 +14,13 @@ resulting arrays are device arrays consumed by jitted search code.
 
 Two store flavours share the tile format:
 
+Both flavours keep **f32 masters** and expose reduced-precision **device
+mirrors** (``device_mirror(store, "bf16"|"int8")``): the scan hot path is
+bandwidth-bound (paper Section 7), so the planner streams 1-2 bytes per
+dimension value and re-ranks the surviving candidates against the f32
+masters for exact returned distances.  Mirrors cache per ``tiles_version``
+exactly like the f32 upload — see the dtype-policy block below.
+
 * ``PDXStore`` — frozen build artifact (a dataclass of device arrays).
 * ``MutablePDXStore`` — the versioned, mutable serving store (the paper's
   closing pitch: PDX "can work on vector data as-is ... attractive for
@@ -39,6 +46,9 @@ __all__ = [
     "PDXPartition",
     "PDXStore",
     "MutablePDXStore",
+    "DeviceMirror",
+    "SCAN_DTYPES",
+    "device_mirror",
     "build_flat_store",
     "build_bucketed_store",
     "pdx_to_nary",
@@ -47,6 +57,109 @@ __all__ = [
 # Sentinel padding value: a coordinate far from any real data so padded slots
 # can never enter a top-k result (distances are monotone increasing in L2/L1).
 PAD_VALUE = np.float32(3.0e18)
+
+# ==========================================================================
+# Dtype policy — quantized device mirrors.
+#
+# Masters stay f32 NumPy/device arrays (exactness lives there: the planner
+# re-ranks candidates against them whenever the scan ran reduced-precision).
+# The *device mirror* the scan executors actually stream is materialized at
+# one of three precisions; the paper's Section 7 point is that the scan is
+# bandwidth-bound, so bytes-per-dimension-value is the lever:
+#
+#   f32   4 B/value — the master tiles themselves (today's behavior).
+#   bf16  2 B/value — plain downcast; same exponent range as f32, so the
+#         PAD_VALUE sentinel keeps its monotone hugeness.
+#   int8  1 B/value — per-dimension affine quantization
+#         q = clip(round((x - offset_d) / scale_d), -127, 127) with
+#         offset_d = dim_means[d] (the running moments the mutable store
+#         already maintains, so a repack re-centers the codebook for free)
+#         and scale_d sized to the *observed* max deviation of dimension d
+#         over live slots — one masked pass at mirror build.  A k·sigma
+#         range from dim_vars alone clips heavy tails (skewed datasets,
+#         rows correlated with a pruner rotation) hard enough to corrupt
+#         candidate selection, so the range is measured, not assumed; the
+#         moments still provide the centering.  PAD columns quantize to
+#         garbage by construction; every quantized consumer masks lanes
+#         with ``ids < 0``.
+#
+# Mirrors are cached on the store keyed on ``tiles_version`` (like the f32
+# upload): head-only inserts never re-quantize, a repack/flush invalidates.
+# ==========================================================================
+SCAN_DTYPES = ("f32", "bf16", "int8")
+_BYTES_PER_VALUE = {"f32": 4, "bf16": 2, "int8": 1}
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceMirror:
+    """One device-resident copy of a store's sealed tiles at a scan dtype.
+
+    ``data`` is (P, D, C) in the mirror dtype; ``scale``/``offset`` are the
+    (D,) f32 dequantization vectors (ones/zeros for f32 and bf16, so every
+    consumer can apply ``x * scale + offset`` unconditionally)."""
+
+    dtype: str           # "f32" | "bf16" | "int8"
+    data: jax.Array      # (P, D, C) mirror-dtype tiles
+    scale: jax.Array     # (D,) f32
+    offset: jax.Array    # (D,) f32
+    tiles_version: int
+
+    @property
+    def bytes_per_value(self) -> int:
+        return _BYTES_PER_VALUE[self.dtype]
+
+
+@jax.jit
+def _quantize_int8(data, ids, means):
+    live = (ids >= 0)[:, None, :]  # (P, 1, C)
+    dev = jnp.abs(data - means[None, :, None])
+    absmax = jnp.max(jnp.where(live, dev, 0.0), axis=(0, 2))  # (D,)
+    scale = jnp.maximum(absmax, 1e-6) / 127.0
+    offset = means
+    q = jnp.round((data - offset[None, :, None]) / scale[None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8), scale, offset
+
+
+def device_mirror(store, dtype: str = "f32") -> DeviceMirror:
+    """The store's device mirror at ``dtype``, cached per ``tiles_version``.
+
+    Works on frozen and mutable stores alike (frozen stores are version 0
+    forever and keep hitting one entry per dtype); stale-version entries are
+    evicted so churn never pins dead quantized tiles on device."""
+    if dtype not in SCAN_DTYPES:
+        raise ValueError(f"scan dtype must be one of {SCAN_DTYPES}, got {dtype!r}")
+    version = getattr(store, "tiles_version", 0)
+    cache = getattr(store, "_mirror_cache", None)
+    if cache is None:
+        cache = {}
+        try:
+            store._mirror_cache = cache
+        except AttributeError:  # exotic frozen store: build uncached
+            pass
+    key = (dtype, version)
+    mirror = cache.get(key)
+    if mirror is None:
+        data = store.data  # triggers the mutable store's lazy f32 sync
+        D = data.shape[1]
+        if dtype == "f32":
+            mdata = data
+            scale = jnp.ones((D,), jnp.float32)
+            offset = jnp.zeros((D,), jnp.float32)
+        elif dtype == "bf16":
+            mdata = data.astype(jnp.bfloat16)
+            scale = jnp.ones((D,), jnp.float32)
+            offset = jnp.zeros((D,), jnp.float32)
+        else:  # int8
+            means = jnp.asarray(store.dim_means, jnp.float32)
+            mdata, scale, offset = _quantize_int8(data, store.ids, means)
+        mirror = DeviceMirror(
+            dtype=dtype, data=mdata, scale=scale, offset=offset,
+            tiles_version=version,
+        )
+        for stale in [kk for kk in cache if kk[1] != version]:
+            del cache[stale]
+        cache[key] = mirror
+    return mirror
 
 
 @jax.tree_util.register_pytree_node_class

@@ -21,13 +21,31 @@ and differ only in execution strategy:
                        via one all-to-all, each shard scans only its owned
                        buckets (masked per query), candidates merge
                        hierarchically through one packed all-gather.
+  fused-scan           the ``repro.kernels`` megakernel: ONE Pallas grid
+                       over (partition, d-tile) with the ADSampling test
+                       fused per tile, streaming the store's device mirror
+                       at ``spec.scan_dtype`` width (bf16/int8 operands
+                       dequantized in-register).
+  fused-batch          the quantized MXU batch kernel over the mirror —
+                       the batched counterpart of fused-scan.
+
+Both fused executors re-rank the top ``rerank_mult * k`` candidates
+against the f32 master tiles whenever ``scan_dtype != "f32"``, so returned
+distances stay exact; ``spec.kernel`` picks the Pallas kernels or their
+jnp twin bodies (same contract, XLA-fused).
 
 Planner rules, in order: a forced ``spec.executor`` wins; a stats request
 pins the adaptive executor (only it accounts work); an IVF index on a
 "data"-axis mesh routes by bucket ownership (unless
 ``spec.routing="broadcast"`` keeps routing host-side); a usable mesh picks
-a sharded executor (batched when B > 1 and ``spec.batch_collectives``);
-otherwise batches take the MXU scan and single queries the adaptive (or,
+a sharded executor (batched when B > 1 and ``spec.batch_collectives``) —
+on the mesh, a non-f32 ``scan_dtype`` flows *into* the batched/routed
+sharded executors (quantized shard scan + on-shard f32 re-rank) rather
+than changing the dispatch, while the per-query block-/dim-sharded paths
+scan the f32 masters and say so in their plan reason;
+otherwise a Pallas-eligible spec (``kernel="pallas"``, a TPU backend with
+``kernel="auto"``, or any reduced-precision ``scan_dtype``) picks a fused
+executor, batches take the MXU scan and single queries the adaptive (or,
 with ``spec.prefer_static``, the masked) path.  Every fallback records its
 reason in the ``ExecutionPlan`` trace.
 
@@ -48,6 +66,7 @@ never falls off the sharded fast path just because a repack changed P.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from typing import Callable, Optional
 
@@ -55,11 +74,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .distance import nary_distance
-from .layout import MutablePDXStore, PDXStore
+from .distance import nary_distance, pdx_distance
+from .layout import DeviceMirror, MutablePDXStore, PDXStore, device_mirror
 from .pdxearch import SearchStats, pdxearch, pdxearch_jit, search_batch_matmul
 from .pruners import Pruner
 from .spec import SearchSpec
+from .topk import (
+    TopK,
+    rerank_positions,
+    topk_from_batch,
+    topk_init,
+    topk_merge,
+    topk_threshold,
+)
 
 __all__ = [
     "ExecutionPlan",
@@ -116,6 +143,20 @@ def plan_search(
     version = getattr(store, "version", 0)
 
     def plan(executor: str, reason: str) -> ExecutionPlan:
+        # don't drop spec knobs silently: record exactly what the chosen
+        # executor honors.  Only the fused executors run Pallas bodies,
+        # and only these four scan a reduced-precision device mirror.
+        mirror_ok = executor in (
+            "fused-scan", "fused-batch", "batch-block-sharded",
+            "routed_bucket",
+        )
+        if spec.kernel == "pallas" and not executor.startswith("fused"):
+            reason += " (kernel='pallas' noted: this executor runs jnp bodies)"
+        if spec.scan_dtype != "f32" and not mirror_ok:
+            reason += (
+                f" (scan_dtype={spec.scan_dtype!r} ignored: this executor "
+                "scans the f32 masters)"
+            )
         return ExecutionPlan(
             executor=executor, reason=reason, n_queries=n_queries,
             pruner=fp, mesh_axes=axes, store_version=version,
@@ -206,7 +247,43 @@ def plan_search(
     return _host_plan(spec, n_queries, ivf, plan)
 
 
+def _resolve_pallas(spec: SearchSpec) -> bool:
+    """Does ``spec.kernel`` resolve to the Pallas bodies here?"""
+    if spec.kernel == "pallas":
+        return True
+    if spec.kernel == "jnp":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _wants_fused(spec: SearchSpec) -> bool:
+    """A spec opts into the fused mirror-scanning executors by forcing the
+    Pallas kernels, by running on a TPU backend with ``kernel="auto"``, or
+    by requesting any reduced-precision scan (which only they honor
+    host-side)."""
+    return (
+        spec.kernel == "pallas"
+        or spec.scan_dtype != "f32"
+        or (spec.kernel == "auto" and jax.default_backend() == "tpu")
+    )
+
+
 def _host_plan(spec, n_queries, ivf, plan, note: str = "") -> ExecutionPlan:
+    if _wants_fused(spec):
+        body = "pallas" if _resolve_pallas(spec) else "jnp"
+        if n_queries == 1 and spec.metric == "l2":
+            where = "IVF-routed START, " if ivf is not None else ""
+            return plan(
+                "fused-scan",
+                note + f"fused megakernel mirror scan ({where}scan_dtype="
+                       f"{spec.scan_dtype}, kernel={body})",
+            )
+        extra = "; IVF store scanned exactly, all buckets" if ivf else ""
+        return plan(
+            "fused-batch",
+            note + f"fused batched mirror scan (scan_dtype={spec.scan_dtype}"
+                   f", kernel={body}, B={n_queries}){extra}",
+        )
     if n_queries > 1 and ivf is None:
         return plan("batch-matmul",
                     note + f"batch of {n_queries} on one host: exact MXU scan")
@@ -333,6 +410,162 @@ def _exec_batch_matmul(store, pruner, Q, spec, *, ivf, mesh, stats):
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
+# ------------------------------------------------- fused mirror executors
+# The merge of the kernel island into the serving stack: these are the only
+# executors that stream the store's reduced-precision device mirror
+# (core.layout.device_mirror) and the only callers of the repro.kernels
+# Pallas ops.  Candidates are tracked as flat tile POSITIONS (p * C + c),
+# not global ids, so the exact f32 re-rank can gather master columns with
+# one fancy index; positions map to ids only at the end.
+def _rerank_k(spec: SearchSpec, store) -> int:
+    if spec.scan_dtype == "f32":
+        return spec.k
+    cap = store.num_partitions * store.capacity
+    return min(spec.rerank_mult * spec.k, cap)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rk", "metric", "use_pallas", "quantized")
+)
+def _fused_batch_scan(
+    mdata, ids, Qt, scale, offset, rk, metric, use_pallas, quantized
+) -> TopK:
+    """Scan every mirror tile with the quantized batch kernel -> per-query
+    top-``rk`` flat positions (PAD lanes carry position -1)."""
+    from ..kernels.ops import batched_distance_quant_op
+    from ..kernels.ref import dequantize_ref
+
+    P, D, C = mdata.shape
+    sc = scale if quantized else None
+    off = offset if quantized else None
+    pos = jnp.arange(P * C, dtype=jnp.int32).reshape(P, C)
+    pos = jnp.where(ids >= 0, pos, -1)
+
+    def body(state: TopK, inp):
+        tile, tpos = inp
+        if metric == "l1":  # no matmul form; dequantize + vmapped VPU scan
+            t32 = dequantize_ref(tile, sc, off)
+            dmat = jax.vmap(lambda q: pdx_distance(t32, q, "l1"))(Qt)
+        else:
+            dmat = batched_distance_quant_op(
+                tile, Qt, sc, off, metric, use_pallas
+            )
+        return jax.vmap(topk_merge, (0, 0, None))(state, dmat, tpos), None
+
+    init = jax.vmap(lambda _: topk_init(rk))(jnp.arange(Qt.shape[0]))
+    state, _ = jax.lax.scan(body, init, (mdata, pos))
+    return state
+
+
+@jax.jit
+def _positions_to_ids(store_ids, cand: TopK) -> TopK:
+    safe = jnp.maximum(cand.ids, 0)
+    gids = jnp.where(cand.ids >= 0, store_ids.reshape(-1)[safe], -1)
+    return TopK(dists=cand.dists, ids=gids)
+
+
+@register_executor("fused-batch")
+def _exec_fused_batch(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Exact-over-store scan of the device mirror at ``spec.scan_dtype``
+    width (IVF engines included — all buckets, like batch-matmul), f32
+    re-ranked when the mirror is reduced-precision."""
+    mirror = device_mirror(store, spec.scan_dtype)
+    Qt = _transform_batch(pruner, jnp.asarray(Q, jnp.float32))
+    rk = _rerank_k(spec, store)
+    cand = _fused_batch_scan(
+        mirror.data, store.ids, Qt, mirror.scale, mirror.offset,
+        rk, spec.metric, _resolve_pallas(spec), mirror.dtype == "int8",
+    )
+    if spec.scan_dtype == "f32":
+        res = _positions_to_ids(store.ids, cand)
+    else:
+        res = rerank_positions(
+            store.data, store.ids, Qt, cand, spec.k, spec.metric
+        )
+    return np.asarray(res.ids), np.asarray(res.dists)
+
+
+@register_executor("fused-scan")
+def _exec_fused_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Single-query megakernel scan: ONE Pallas grid over (partition,
+    d-tile), ADSampling keep-mask fused per tile, mirror operands
+    dequantized in-register, dead partitions skipped whole-tile.
+
+    The threshold is seeded by an exact f32 START scan of one partition —
+    the IVF-routed nearest bucket's first partition when an index exists,
+    partition 0 otherwise.  The START partition is masked OUT of the
+    megakernel scan (its lanes would otherwise enter the merge pool twice
+    and crowd out the k-th distinct neighbour) and its candidates merge
+    exactly, unpruned — a hypothesis-test casualty there is impossible.
+    Pruners other than ADSampling scan unpruned (thr = inf): they get the
+    bandwidth win without a foreign predicate."""
+    if spec.metric != "l2":
+        raise ValueError(
+            "fused-scan is L2-only (ADSampling's domain); the planner "
+            "routes other metrics to fused-batch"
+        )
+    mirror = device_mirror(store, spec.scan_dtype)
+    use_pallas = _resolve_pallas(spec)
+    rk = _rerank_k(spec, store)
+    prune = pruner.name == "adsampling" and pruner.aux is not None
+    eps0 = float(pruner.aux["eps0"]) if prune else 2.1
+    sc = mirror.scale if mirror.dtype == "int8" else None
+    off = mirror.offset if mirror.dtype == "int8" else None
+    out_i, out_d = [], []
+    for q in Q:
+        qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+        p0 = 0
+        if ivf is not None:
+            order, _ = ivf.route(qt, 1, "l2")
+            if len(order):
+                p0 = int(order[0])
+        start = topk_from_batch(
+            pdx_distance(store.data[p0], qt, "l2"), store.ids[p0], spec.k
+        )
+        thr = topk_threshold(start) if prune else jnp.float32(np.inf)
+        res = _fused_scan_one(
+            mirror.data, store.data, store.ids, jnp.int32(p0), qt, thr,
+            sc, off, eps0, rk, spec.k, use_pallas,
+            spec.scan_dtype == "f32", start,
+        )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    return np.stack(out_i), np.stack(out_d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps0", "rk", "k", "use_pallas", "exact"),
+)
+def _fused_scan_one(
+    mdata, master, ids, p0, qt, thr, scale, offset, eps0, rk, k, use_pallas,
+    exact, start: TopK,
+) -> TopK:
+    from ..kernels.ops import pdx_prune_scan_multi_op
+
+    P, D, C = mdata.shape
+    # the START partition was scanned exactly already: kill its lanes so the
+    # megakernel whole-tile-skips it and its ids never enter the pool twice
+    ids_scan = ids.at[p0].set(-1)
+    dists, alive = pdx_prune_scan_multi_op(
+        mdata, ids_scan, qt, thr, scale, offset, eps0=eps0,
+        use_pallas=use_pallas,
+    )
+    flat_d = jnp.where(alive, dists, jnp.inf).reshape(-1)
+    cand = topk_from_batch(flat_d, jnp.arange(P * C, dtype=jnp.int32), rk)
+    # dead lanes carry +inf: only real survivors are selected unless fewer
+    # than rk survive, and PAD positions resolve to id -1 below either way
+    if exact:
+        res = _positions_to_ids(ids_scan, TopK(cand.dists, cand.ids))
+    else:
+        res = rerank_positions(
+            master, ids_scan, qt[None],
+            TopK(cand.dists[None], cand.ids[None]), k, "l2",
+        )
+        res = TopK(dists=res.dists[0], ids=res.ids[0])
+    return topk_merge(res, start.dists, start.ids)
+
+
 def _get_placement(store, n_shards: int, kind: str, *, ivf=None, axis="data"):
     """The store's tile->shard ``Placement``, cached per ``(tiles_version,
     n_shards, kind)`` — arranging/padding copies the tiles, which must cost
@@ -411,8 +644,13 @@ def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
 
     pl = _get_placement(store, mesh.shape["data"], "block")
     Qt = _transform_batch(pruner, Q)
+    mirror = (
+        device_mirror(store, spec.scan_dtype)
+        if spec.scan_dtype != "f32" else None
+    )
     res = search_batch_block_sharded(
         mesh, Q=Qt, k=spec.k, metric=spec.metric, placement=pl,
+        mirror=mirror, rerank_mult=spec.rerank_mult,
     )
     return np.asarray(res.ids), np.asarray(res.dists)
 
@@ -435,7 +673,12 @@ def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
     pl = _get_placement(store, mesh.shape["data"], "bucket", ivf=ivf)
     Qt = _transform_batch(pruner, Q)
     sel = ivf.route_batch(Qt, spec.nprobe, spec.metric)
+    mirror = (
+        device_mirror(store, spec.scan_dtype)
+        if spec.scan_dtype != "f32" else None
+    )
     res = search_routed_bucket(
         mesh, pl, Qt, sel, spec.k, metric=spec.metric,
+        mirror=mirror, rerank_mult=spec.rerank_mult,
     )
     return np.asarray(res.ids), np.asarray(res.dists)

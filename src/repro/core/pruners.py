@@ -144,6 +144,9 @@ def make_adsampling(dim: int, eps0: float = 2.1, seed: int = 0) -> Pruner:
         transform_query=lambda q: Pj @ q,
         keep_mask=keep_mask,
         fingerprint=pruner_fingerprint("adsampling", dim, eps0, seed),
+        # the fused Pallas scan executors bake the hypothesis test into the
+        # kernel; they need the raw eps0, not just the keep_mask closure
+        aux={"eps0": eps0, "dim": dim, "seed": seed},
     )
 
 

@@ -34,12 +34,14 @@ from typing import Optional
 import numpy as np
 
 from .distance import METRICS
+from .layout import SCAN_DTYPES
 from .pdxearch import SearchStats
 
 __all__ = ["SearchSpec", "SearchResult"]
 
 SCHEDULES = ("adaptive", "fixed")
 ROUTINGS = ("broadcast", "bucket")
+KERNELS = ("auto", "pallas", "jnp")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +69,28 @@ class SearchSpec:
                    routing host-side (the pre-placement behavior).  Without
                    a mesh or an IVF index the knob is inert.
 
+    Device-scan precision (the bandwidth lever; see ``core.layout``'s
+    dtype-policy block)
+      scan_dtype  — operand precision of the device scan: "f32" streams the
+                    master tiles; "bf16"/"int8" stream the quantized device
+                    mirror (2x/4x fewer bytes per dimension value) and the
+                    executor re-ranks the top ``rerank_mult * k`` candidates
+                    against the f32 masters, so *returned distances stay
+                    exact*.  On a mesh the batched/routed sharded
+                    executors scan their mirror slices the same way (the
+                    per-query block-/dim-sharded paths scan f32 masters
+                    and record that in the plan reason); queries and
+                    candidate distances stay f32 on the wire (rounding
+                    either breaks exact k-boundary ordering — see
+                    ``repro.dist.routing``).
+      kernel      — scan implementation: "pallas" forces the fused Pallas
+                    executors (``repro.kernels``; interpret mode off-TPU),
+                    "jnp" forces the XLA-fused jnp bodies, "auto" picks
+                    pallas on a TPU backend and jnp elsewhere.
+      rerank_mult — exact-re-rank candidate multiplier (top ``rerank_mult *
+                    k`` approximate candidates are re-scored in f32 when
+                    ``scan_dtype != "f32"``).
+
     Execution hints (planner inputs, never change *results* beyond the
     pruner's own approximation)
       executor          — force a registered executor by name (see
@@ -91,6 +115,9 @@ class SearchSpec:
     prefer_static: bool = False
     batch_collectives: bool = True
     routing: str = "bucket"
+    scan_dtype: str = "f32"
+    kernel: str = "auto"
+    rerank_mult: int = 4
 
     def __post_init__(self):
         if self.k < 1:
@@ -112,6 +139,19 @@ class SearchSpec:
         if self.routing not in ROUTINGS:
             raise ValueError(
                 f"routing must be one of {ROUTINGS}, got {self.routing!r}"
+            )
+        if self.scan_dtype not in SCAN_DTYPES:
+            raise ValueError(
+                f"scan_dtype must be one of {SCAN_DTYPES}, "
+                f"got {self.scan_dtype!r}"
+            )
+        if self.kernel not in KERNELS:
+            raise ValueError(
+                f"kernel must be one of {KERNELS}, got {self.kernel!r}"
+            )
+        if self.rerank_mult < 1:
+            raise ValueError(
+                f"rerank_mult must be >= 1, got {self.rerank_mult}"
             )
 
     def replace(self, **changes) -> "SearchSpec":

@@ -2,6 +2,14 @@
 max-heap.  State is a fixed-size (k,) pair of (distances, ids), merged with
 candidate batches via lax.top_k; the running threshold (paper: "current best
 k-th exact distance") is ``heap_dists[-1]`` since we keep it sorted ascending.
+
+Also home of ``rerank_positions``, the exact-f32 re-rank every quantized
+scan path shares: candidates selected from a reduced-precision mirror are
+tracked as flat tile *positions* (``p * C + c``, -1 = pad), their master
+columns are gathered, and the final top-k is rebuilt from exact distances
+with global ids.  Lives here (not in the executors) because the host fused
+executors and both shard_map bodies must agree on the PAD-position
+convention bit for bit.
 """
 from __future__ import annotations
 
@@ -11,7 +19,9 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["TopK", "topk_init", "topk_merge", "topk_threshold"]
+__all__ = [
+    "TopK", "topk_init", "topk_merge", "topk_threshold", "rerank_positions",
+]
 
 INF = jnp.float32(jnp.inf)
 
@@ -46,3 +56,28 @@ def topk_from_batch(cand_dists: jax.Array, cand_ids: jax.Array, k: int) -> TopK:
 def topk_threshold(state: TopK) -> jax.Array:
     """Pruning threshold: worst distance currently in the candidate set."""
     return state.dists[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric"))
+def rerank_positions(
+    master: jax.Array,
+    ids: jax.Array,
+    Q: jax.Array,
+    cand: TopK,
+    k: int,
+    metric: str = "l2",
+) -> TopK:
+    """Exact f32 re-rank: ``cand.ids`` are flat tile positions (-1 = pad)
+    into the (P, D, C) ``master`` tiles; gather those columns, recompute
+    their distances to the (B, D) queries, and keep the best ``k`` as
+    global ids from the (P, C) ``ids`` array."""
+    from .distance import nary_distance  # topk is imported by distance users
+
+    P, D, C = master.shape
+    safe = jnp.maximum(cand.ids, 0)                      # (B, rk) positions
+    vecs = master[safe // C, :, safe % C]                # (B, rk, D) f32
+    d = jax.vmap(lambda V_, q_: nary_distance(V_, q_, metric))(vecs, Q)
+    d = jnp.where(cand.ids >= 0, d, INF)
+    gids = jnp.where(cand.ids >= 0, ids.reshape(-1)[safe], -1)
+    merge = lambda dd, ii: topk_merge(topk_init(k), dd, ii)  # noqa: E731
+    return jax.vmap(merge)(d, gids)

@@ -42,9 +42,9 @@ from ..core.pdxearch import (
     make_boundaries,
     search_batch_matmul,
 )
-from ..core.distance import pdx_distance
+from ..core.distance import batched_distance_matmul, pdx_distance
 from ..core.pruners import Pruner, make_plain_pruner
-from ..core.topk import TopK, topk_init, topk_merge
+from ..core.topk import TopK, rerank_positions, topk_init, topk_merge
 from .placement import Placement
 
 __all__ = [
@@ -194,6 +194,8 @@ def search_batch_block_sharded(
     metric: str = "l2",
     axis: str = "data",
     placement: Placement | None = None,
+    mirror=None,
+    rerank_mult: int = 4,
 ) -> TopK:
     """Batched block-sharded exact search: the placement's tiles stripe
     partitions over ``axis``; the (B, D) query batch is replicated.  Each
@@ -201,20 +203,80 @@ def search_batch_block_sharded(
     (B, k) top-k sets are exchanged in a single all-gather for the whole
     batch — dists and ids are packed into one (B, 2k) buffer (int32 ids
     bitcast to float32, bit-exact) so exactly ONE collective crosses the
-    mesh per batch, versus 2·B for B per-query searches.  Returns a
-    replicated batched TopK with (B, k) leaves."""
+    mesh per batch, versus 2·B for B per-query searches.
+
+    With a reduced-precision ``mirror`` (``core.layout.DeviceMirror``) each
+    shard scans its *arranged mirror* slice instead (bf16/int8 bytes from
+    HBM, dequantized in-register) and re-ranks its local top
+    ``rerank_mult * k`` candidates against its f32 master slice before the
+    collective — still exactly ONE all-gather, carrying exact f32
+    candidate distances (a rounded wire would swap cross-shard near-ties
+    at the global k-boundary).  Returns a replicated batched TopK with
+    (B, k) leaves."""
     _require(Q=Q, k=k)
     pl = _block_placement(mesh, data, ids, axis, placement)
     data, ids = pl.data, pl.ids
     n_shards = pl.n_shards
     if Q.ndim != 2:
         raise ValueError(f"Q must be (B, D), got shape {Q.shape}")
+    quantized = mirror is not None and mirror.dtype != "f32"
+    if not quantized:
 
-    def local(d_sh, i_sh, Q_rep):
+        def local(d_sh, i_sh, Q_rep):
+            B = Q_rep.shape[0]
+            res = search_batch_matmul(d_sh, i_sh, Q_rep, k, metric)  # (B, k)
+            packed = jnp.concatenate(
+                [res.dists,
+                 jax.lax.bitcast_convert_type(res.ids, jnp.float32)],
+                axis=1,
+            )  # (B, 2k)
+            allp = jax.lax.all_gather(packed, axis, axis=1, tiled=True)
+            allp = allp.reshape(B, n_shards, 2 * k)
+            all_d = allp[:, :, :k].reshape(B, n_shards * k)
+            all_i = jax.lax.bitcast_convert_type(
+                allp[:, :, k:], jnp.int32
+            ).reshape(B, n_shards * k)
+            merge = lambda dd, ii: topk_merge(topk_init(k), dd, ii)  # noqa: E731
+            return jax.vmap(merge)(all_d, all_i)
+
+        fn = shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P()),
+            out_specs=TopK(dists=P(), ids=P()),
+            check_rep=False,
+        )
+        return fn(data, ids, Q.astype(jnp.float32))
+
+    qtiles = pl.arranged_mirror(mirror)
+    rk = min(max(rerank_mult * k, k), qtiles.shape[0] * qtiles.shape[2])
+    scale, offset = mirror.scale, mirror.offset
+
+    def local_q(d_sh, i_sh, qd_sh, Q_rep):
         B = Q_rep.shape[0]
-        res = search_batch_matmul(d_sh, i_sh, Q_rep, k, metric)  # (B, k)
+        W, _, C = qd_sh.shape
+        pos = jnp.arange(W * C, dtype=jnp.int32).reshape(W, C)
+        pos = jnp.where(i_sh >= 0, pos, -1)
+
+        def body(state, inp):
+            tileq, tpos = inp
+            t32 = tileq.astype(jnp.float32) * scale[:, None] + offset[:, None]
+            dmat = batched_distance_matmul(t32, Q_rep, metric)  # (B, C)
+            return jax.vmap(topk_merge, (0, 0, None))(state, dmat, tpos), None
+
+        init = jax.vmap(lambda _: topk_init(rk))(jnp.arange(B))
+        cand, _ = jax.lax.scan(body, init, (qd_sh, pos))
+        # exact f32 re-rank against the local MASTER slice, pre-collective
+        res = rerank_positions(d_sh, i_sh, Q_rep, cand, k, metric)
+        merge = lambda d_, i_: topk_merge(topk_init(k), d_, i_)  # noqa: E731
+
+        # candidate distances stay f32 on the wire: the hierarchical merge
+        # decides the global k-boundary, and a rounded wire (bf16) both
+        # swaps cross-shard near-ties there and rounds the distances the
+        # caller gets back — exactness is the re-rank's whole contract
         packed = jnp.concatenate(
-            [res.dists, jax.lax.bitcast_convert_type(res.ids, jnp.float32)],
+            [res.dists,
+             jax.lax.bitcast_convert_type(res.ids, jnp.float32)],
             axis=1,
         )  # (B, 2k)
         allp = jax.lax.all_gather(packed, axis, axis=1, tiled=True)
@@ -223,17 +285,16 @@ def search_batch_block_sharded(
         all_i = jax.lax.bitcast_convert_type(
             allp[:, :, k:], jnp.int32
         ).reshape(B, n_shards * k)
-        merge = lambda dd, ii: topk_merge(topk_init(k), dd, ii)  # noqa: E731
         return jax.vmap(merge)(all_d, all_i)
 
     fn = shard_map(
-        local,
+        local_q,
         mesh=mesh,
-        in_specs=(P(axis), P(axis), P()),
+        in_specs=(P(axis), P(axis), P(axis), P()),
         out_specs=TopK(dists=P(), ids=P()),
         check_rep=False,
     )
-    return fn(data, ids, Q.astype(jnp.float32))
+    return fn(data, ids, qtiles, Q.astype(jnp.float32))
 
 
 _COLLECTIVES = (

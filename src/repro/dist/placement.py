@@ -83,6 +83,12 @@ class Placement:
     bucket_shard: Optional[np.ndarray] = None   # (K,) owner shard per bucket
     slot_bucket: Optional[np.ndarray] = None    # (P',) bucket per slot, -1 pad
     bucket_parts: Optional[np.ndarray] = None   # (K,) partitions per bucket
+    # arranged quantized-mirror tiles, cached per mirror dtype (the dict is
+    # mutable inside the frozen dataclass by design: a placement is itself
+    # cached per tiles_version, so entries can never outlive their tiles)
+    _mirrors: dict = dataclasses.field(
+        default_factory=dict, compare=False, repr=False
+    )
 
     # ------------------------------------------------------------- properties
     @property
@@ -195,6 +201,36 @@ class Placement:
         )
         pl.check()
         return pl
+
+    # --------------------------------------------------------- mirror tiles
+    def arrange(self, tiles: jax.Array, pad_value=0) -> jax.Array:
+        """Apply this placement's slot permutation + padding to ANY (P, D, C)
+        tile stack — the primitive that lets a reduced-precision device
+        mirror (``core.layout.device_mirror``) ride the same tile->shard
+        mapping as the f32 masters.  Pad slots are filled with ``pad_value``
+        (their arranged ``ids`` are -1, which is what every quantized
+        consumer masks on — int8 has no monotone PAD sentinel)."""
+        if self.kind == "replicated":
+            return tiles
+        perm = self.part_perm
+        if len(perm) == tiles.shape[0] and (perm == np.arange(len(perm))).all():
+            return tiles  # already-divisible block placement: untouched
+        safe = np.maximum(perm, 0)
+        arranged = jnp.asarray(tiles)[jnp.asarray(safe)]
+        pad = jnp.asarray(perm < 0)
+        return jnp.where(
+            pad[:, None, None],
+            jnp.asarray(pad_value, tiles.dtype),
+            arranged,
+        )
+
+    def arranged_mirror(self, mirror) -> jax.Array:
+        """``arrange(mirror.data)``, cached per mirror dtype + version."""
+        got = self._mirrors.get(mirror.dtype)
+        if got is None or got[0] != mirror.tiles_version:
+            got = (mirror.tiles_version, self.arrange(mirror.data))
+            self._mirrors[mirror.dtype] = got
+        return got[1]
 
     # ------------------------------------------------------------ invariants
     def check(self) -> None:

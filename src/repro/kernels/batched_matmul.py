@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["batched_distance_pallas"]
+__all__ = ["batched_distance_pallas", "batched_distance_quant_pallas"]
 
 
 def _interpret() -> bool:
@@ -80,4 +80,81 @@ def batched_distance_pallas(
         out_shape=jax.ShapeDtypeStruct((B, V), jnp.float32),
         interpret=_interpret(),
     )(Q, T, qn, xn)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Quantized-operand variant: the tile streams at mirror width (bf16/int8),
+# dequantizes in-register, and accumulates both the MXU cross term and the
+# tile's own squared norm per K step (so no f32 norm array over the store
+# needs to exist anywhere — each stored byte is touched exactly once).
+# --------------------------------------------------------------------------
+def _bmm_quant_kernel(
+    q_ref, x_ref, qn_ref, scale_ref, offset_ref, o_ref,
+    *, nd: int, metric: str, quantized: bool,
+):
+    i = pl.program_id(2)  # K (dimension) tile, innermost
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (dt, vt)
+    if quantized:
+        x = x * scale_ref[...] + offset_ref[...]
+    q = q_ref[...].astype(jnp.float32)  # (bt, dt)
+    cross = jax.lax.dot_general(
+        q, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    if metric == "ip":
+        o_ref[...] += -cross
+    else:
+        xn = jnp.sum(x * x, axis=0, keepdims=True)  # (1, vt) this K tile
+        o_ref[...] += -2.0 * cross + xn
+
+        @pl.when(i == nd - 1)
+        def _epilogue():
+            o_ref[...] += qn_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "quantized", "b_tile", "d_tile", "v_tile"),
+)
+def batched_distance_quant_pallas(
+    T: jax.Array,
+    Q: jax.Array,
+    scale: jax.Array,
+    offset: jax.Array,
+    metric: str = "l2",
+    quantized: bool = False,
+    b_tile: int = 128,
+    d_tile: int = 256,
+    v_tile: int = 512,
+) -> jax.Array:
+    """(D, V) bf16/int8 tile + (D,) dequant vectors, (B, D) f32 -> (B, V)."""
+    D, V = T.shape
+    B = Q.shape[0]
+    b_tile = min(b_tile, B)
+    d_tile = min(d_tile, D)
+    v_tile = min(v_tile, V)
+    nb, nv, nd = pl.cdiv(B, b_tile), pl.cdiv(V, v_tile), pl.cdiv(D, d_tile)
+    Q32 = Q.astype(jnp.float32)
+    qn = jnp.sum(Q32 * Q32, axis=1, keepdims=True)  # (B, 1)
+    out = pl.pallas_call(
+        functools.partial(
+            _bmm_quant_kernel, nd=nd, metric=metric, quantized=quantized
+        ),
+        grid=(nb, nv, nd),
+        in_specs=[
+            pl.BlockSpec((b_tile, d_tile), lambda b, v, i: (b, i)),
+            pl.BlockSpec((d_tile, v_tile), lambda b, v, i: (i, v)),
+            pl.BlockSpec((b_tile, 1), lambda b, v, i: (b, 0)),
+            pl.BlockSpec((d_tile, 1), lambda b, v, i: (i, 0)),
+            pl.BlockSpec((d_tile, 1), lambda b, v, i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b_tile, v_tile), lambda b, v, i: (b, v)),
+        out_shape=jax.ShapeDtypeStruct((B, V), jnp.float32),
+        interpret=_interpret(),
+    )(Q32, T, qn, scale.reshape(D, 1), offset.reshape(D, 1))
     return out

@@ -1,5 +1,10 @@
 """Jitted public wrappers for the Pallas kernels: shape padding, dtype policy,
 tile-size selection.  Callers use these; the raw kernels stay minimal.
+
+Every executor-facing op takes a static ``use_pallas`` knob: True runs the
+Pallas kernel (interpret mode off-TPU — the correctness gate), False runs
+the pure-jnp oracle body from ``ref`` under the same contract (the XLA
+fallback the planner picks via ``SearchSpec.kernel="jnp"``).
 """
 from __future__ import annotations
 
@@ -8,26 +13,38 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .batched_matmul import batched_distance_pallas
+from . import ref
+from .batched_matmul import (
+    batched_distance_pallas,
+    batched_distance_quant_pallas,
+)
 from .nary_scan import nary_distance_pallas
-from .pdx_scan import pdx_distance_pallas, pdx_prune_scan_pallas
+from .pdx_scan import (
+    pdx_distance_pallas,
+    pdx_prune_scan_multi_pallas,
+    pdx_prune_scan_pallas,
+)
 
 __all__ = [
     "pdx_distance_op",
     "nary_distance_op",
     "batched_distance_op",
+    "batched_distance_quant_op",
     "pdx_prune_scan_op",
+    "pdx_prune_scan_multi_op",
 ]
 
 
-def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+def _pad_to(
+    x: jax.Array, axis: int, mult: int, value: float | int = 0
+) -> jax.Array:
     size = x.shape[axis]
     pad = (-size) % mult
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
 def _pick(size: int, pref: int, align: int) -> int:
@@ -73,14 +90,111 @@ def batched_distance_op(T: jax.Array, Q: jax.Array, metric: str = "l2") -> jax.A
 
 @functools.partial(jax.jit, static_argnames=("eps0", "d_tile"))
 def pdx_prune_scan_op(
-    T: jax.Array, q: jax.Array, thr: jax.Array, eps0: float = 2.1, d_tile: int = 64
+    T: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    ids: jax.Array | None = None,
+    eps0: float = 2.1,
+    d_tile: int = 64,
 ) -> tuple[jax.Array, jax.Array]:
-    """Fused PDXearch/ADSampling partition scan.  Zero-pads both axes; the
-    hypothesis test keeps counting in logical (un-padded) dimensions."""
+    """Fused PDXearch/ADSampling partition scan -> (dists f32, alive bool).
+
+    Zero-pads both axes; the hypothesis test keeps counting in logical
+    (un-padded) dimensions.  ``ids`` is the partition's (V,) id row: lanes
+    with ``ids < 0`` (PAD columns) start dead and can never surface as
+    candidates.  Padded lanes introduced here are masked the same way.
+    """
     D, V = T.shape
     vt = _pick(V, 1024, 128)
     dt = min(d_tile, D)
     Tp = _pad_to(_pad_to(T, 0, dt), 1, vt)
     qp = _pad_to(q, 0, dt)
-    dists, alive = pdx_prune_scan_pallas(Tp, qp, thr, eps0, dt, vt, logical_dim=D)
-    return dists[:V], alive[:V]
+    if ids is None:
+        ids = jnp.zeros((V,), jnp.int32)  # all lanes real
+    idp = _pad_to(ids, 0, vt, value=-1)
+    dists, alive = pdx_prune_scan_pallas(
+        Tp, qp, thr, idp, eps0, dt, vt, logical_dim=D
+    )
+    return dists[:V], alive[:V] != 0.0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps0", "d_tile", "use_pallas")
+)
+def pdx_prune_scan_multi_op(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    use_pallas: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Megakernel wrapper: whole-store fused scan -> ((P, V) dists f32,
+    (P, V) alive bool).
+
+    ``T`` is a device mirror at any scan dtype (f32/bf16/int8); ``scale``/
+    ``offset`` are the (D,) dequant vectors for int8 mirrors (None means the
+    operands are plain floats).  PAD lanes (``ids < 0``) start dead.
+    """
+    P, D, V = T.shape
+    quantized = scale is not None
+    if not use_pallas:
+        dists, alive = ref.pdx_prune_scan_multi_ref(
+            T, ids, q, thr, d_tile=min(d_tile, D), eps0=eps0,
+            scale=scale, offset=offset,
+        )
+        return dists, alive != 0.0
+    vt = _pick(V, 1024, 128)
+    dt = min(d_tile, D)
+    Tp = _pad_to(_pad_to(T, 1, dt), 2, vt)
+    qp = _pad_to(q, 0, dt)
+    idp = _pad_to(ids, 1, vt, value=-1)
+    if quantized:
+        sp = _pad_to(scale, 0, dt)
+        op = _pad_to(offset, 0, dt)
+    else:
+        sp = jnp.ones((Tp.shape[1],), jnp.float32)
+        op = jnp.zeros((Tp.shape[1],), jnp.float32)
+    dists, alive = pdx_prune_scan_multi_pallas(
+        Tp, idp, qp, thr, sp, op, eps0, dt,
+        logical_dim=D, quantized=quantized,
+    )
+    return dists[:, :V], alive[:, :V] != 0.0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "use_pallas")
+)
+def batched_distance_quant_op(
+    T: jax.Array,
+    Q: jax.Array,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    metric: str = "l2",
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Quantized-operand MXU batch scan: (D, V) mirror tile + (B, D) f32
+    queries -> (B, V) f32 distances, dequantizing in-register."""
+    if not use_pallas:
+        return ref.batched_distance_quant_ref(T, Q, scale, offset, metric)
+    D, V = T.shape
+    B = Q.shape[0]
+    quantized = scale is not None
+    bt = _pick(B, 128, 8)
+    dt = _pick(D, 256, 128)
+    vt = _pick(V, 512, 128)
+    Tp = _pad_to(_pad_to(T, 0, dt), 1, vt)
+    Qp = _pad_to(_pad_to(Q, 1, dt), 0, bt)
+    if quantized:
+        sp = _pad_to(scale, 0, dt)
+        op = _pad_to(offset, 0, dt)
+    else:
+        sp = jnp.ones((Tp.shape[0],), jnp.float32)
+        op = jnp.zeros((Tp.shape[0],), jnp.float32)
+    out = batched_distance_quant_pallas(
+        Tp, Qp, sp, op, metric, quantized, bt, dt, vt
+    )
+    return out[:B, :V]

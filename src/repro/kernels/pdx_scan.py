@@ -13,7 +13,12 @@ Kernels:
     ADSampling hypothesis test per dimension tile, with whole-tile compute
     skip once every lane is pruned (the PRUNE phase at tile granularity —
     VPU work is skipped; the HBM→VMEM fetch of later tiles is the remaining
-    cost, hoistable with manual DMA, see DESIGN.md).
+    cost, hoistable with manual DMA; design notes live in the
+    ``repro.kernels`` package docstring).
+  * ``pdx_prune_scan_multi_pallas`` — the *megakernel*: one grid over
+    (partition, d-tile) covering the whole store, quantized (bf16/int8)
+    operands dequantized in-register into an f32 VMEM accumulator, the
+    keep-mask seeded from ``ids >= 0`` so PAD lanes can never surface.
 """
 from __future__ import annotations
 
@@ -23,7 +28,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["pdx_distance_pallas", "pdx_prune_scan_pallas"]
+__all__ = [
+    "pdx_distance_pallas",
+    "pdx_prune_scan_pallas",
+    "pdx_prune_scan_multi_pallas",
+]
 
 
 def _interpret() -> bool:
@@ -33,7 +42,7 @@ def _interpret() -> bool:
 # --------------------------------------------------------------------------
 # Plain PDX distance scan.
 # --------------------------------------------------------------------------
-def _pdx_dist_kernel(q_ref, x_ref, o_ref, *, metric: str, nd: int):
+def _pdx_dist_kernel(q_ref, x_ref, o_ref, *, metric: str):
     i = pl.program_id(1)  # dimension-tile index (innermost => accumulation)
 
     @pl.when(i == 0)
@@ -68,7 +77,7 @@ def pdx_distance_pallas(
     q2 = q.reshape(D, 1)
     grid = (nv, nd)  # d innermost: each out block accumulates over all d-tiles
     out = pl.pallas_call(
-        functools.partial(_pdx_dist_kernel, metric=metric, nd=nd),
+        functools.partial(_pdx_dist_kernel, metric=metric),
         grid=grid,
         in_specs=[
             pl.BlockSpec((d_tile, 1), lambda j, i: (i, 0)),
@@ -85,14 +94,16 @@ def pdx_distance_pallas(
 # Fused PDXearch + ADSampling partition scan.
 # --------------------------------------------------------------------------
 def _prune_scan_kernel(
-    q_ref, x_ref, thr_ref, o_ref, alive_ref, *, dim: int, d_tile: int, eps0: float
+    q_ref, x_ref, ids_ref, thr_ref, o_ref, alive_ref,
+    *, dim: int, d_tile: int, eps0: float,
 ):
     i = pl.program_id(0)
 
     @pl.when(i == 0)
     def _init():
         o_ref[...] = jnp.zeros_like(o_ref)
-        alive_ref[...] = jnp.ones_like(alive_ref)
+        # PAD lanes (ids < 0) start dead: they can never surface as survivors
+        alive_ref[...] = (ids_ref[...] >= 0).astype(alive_ref.dtype)
 
     alive = alive_ref[...]
     any_alive = jnp.sum(alive) > 0.0
@@ -121,6 +132,7 @@ def pdx_prune_scan_pallas(
     T: jax.Array,
     q: jax.Array,
     thr: jax.Array,
+    ids: jax.Array,
     eps0: float = 2.1,
     d_tile: int = 64,
     v_tile: int = 1024,
@@ -128,10 +140,11 @@ def pdx_prune_scan_pallas(
 ) -> tuple[jax.Array, jax.Array]:
     """Fused distance+prune over one partition.
 
-    (D, V), (D,), scalar-thr -> (dists (V,) f32, alive (V,) f32 mask).
-    L2 metric (ADSampling's domain).  ``logical_dim`` is the un-padded D used
-    by the hypothesis test's dims-seen counter (padded dims contribute zero
-    distance but must not inflate the estimator's sample count).
+    (D, V), (D,), scalar-thr, (V,)-ids -> (dists (V,) f32, alive (V,) f32
+    mask).  L2 metric (ADSampling's domain).  Lanes whose ``ids`` entry is
+    negative (PAD columns) start dead.  ``logical_dim`` is the un-padded D
+    used by the hypothesis test's dims-seen counter (padded dims contribute
+    zero distance but must not inflate the estimator's sample count).
     """
     D, V = T.shape
     d_tile = min(d_tile, D)
@@ -139,6 +152,7 @@ def pdx_prune_scan_pallas(
     nd = pl.cdiv(D, d_tile)
     dim_for_test = logical_dim if logical_dim is not None else D
     q2 = q.reshape(D, 1)
+    ids2 = ids.reshape(1, V)
     thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
     grid = (nd,)
     dists, alive = pl.pallas_call(
@@ -149,6 +163,7 @@ def pdx_prune_scan_pallas(
         in_specs=[
             pl.BlockSpec((d_tile, 1), lambda i: (i, 0)),
             pl.BlockSpec((d_tile, V), lambda i: (i, 0)),
+            pl.BlockSpec((1, V), lambda i: (0, 0)),
             pl.BlockSpec((1, 1), lambda i: (0, 0)),
         ],
         out_specs=[
@@ -160,5 +175,102 @@ def pdx_prune_scan_pallas(
             jax.ShapeDtypeStruct((1, V), jnp.float32),
         ],
         interpret=_interpret(),
-    )(q2, T, thr2)
+    )(q2, T, ids2, thr2)
     return dists[0], alive[0]
+
+
+# --------------------------------------------------------------------------
+# Multi-partition megakernel: the whole store in ONE grid, quantized
+# operands dequantized in-register.
+# --------------------------------------------------------------------------
+def _prune_scan_multi_kernel(
+    q_ref, x_ref, ids_ref, thr_ref, scale_ref, offset_ref, o_ref, alive_ref,
+    *, dim: int, d_tile: int, eps0: float, quantized: bool,
+):
+    i = pl.program_id(1)  # d-tile index (innermost => accumulation)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        alive_ref[...] = (ids_ref[...] >= 0).astype(alive_ref.dtype)
+
+    alive = alive_ref[...]
+    any_alive = jnp.sum(alive) > 0.0
+
+    # Whole-tile compute skip: a partition whose lanes are all dead pays no
+    # VPU work for its remaining dimension tiles.
+    @pl.when(any_alive)
+    def _compute():
+        x = x_ref[0].astype(jnp.float32)                     # (dt, V)
+        if quantized:
+            # in-register dequantization: the f32 value never touches HBM
+            x = x * scale_ref[...] + offset_ref[...]
+        q = q_ref[...].astype(jnp.float32)                   # (dt, 1)
+        d = x - q
+        contrib = jnp.sum(d * d, axis=0, keepdims=True)      # (1, V)
+        acc = o_ref[...] + contrib * alive_ref[...]
+        o_ref[...] = acc
+        d_seen = jnp.minimum((i + 1) * d_tile, dim).astype(jnp.float32)
+        bound = thr_ref[0, 0] * (1.0 + eps0 / jnp.sqrt(d_seen)) ** 2
+        keep = (acc * (dim / d_seen) <= bound).astype(jnp.float32)
+        alive_ref[...] = alive_ref[...] * keep
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps0", "d_tile", "logical_dim", "quantized"),
+)
+def pdx_prune_scan_multi_pallas(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    scale: jax.Array,
+    offset: jax.Array,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    logical_dim: int | None = None,
+    quantized: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused distance+prune over EVERY partition of a store in one kernel.
+
+    (P, D, V) tiles (f32/bf16/int8), (P, V) ids, (D,) f32 query, scalar
+    threshold, (D,) scale/offset dequant vectors -> (dists (P, V) f32,
+    alive (P, V) f32 mask).  Grid is (partition, d-tile); the running
+    distances and keep-mask for one partition live in VMEM across its
+    d-tiles, so each stored byte is touched exactly once, at mirror width.
+    """
+    P, D, V = T.shape
+    d_tile = min(d_tile, D)
+    nd = pl.cdiv(D, d_tile)
+    dim_for_test = logical_dim if logical_dim is not None else D
+    q2 = q.reshape(D, 1)
+    thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    scale2 = scale.reshape(D, 1)
+    offset2 = offset.reshape(D, 1)
+    grid = (P, nd)
+    dists, alive = pl.pallas_call(
+        functools.partial(
+            _prune_scan_multi_kernel, dim=dim_for_test, d_tile=d_tile,
+            eps0=eps0, quantized=quantized,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((d_tile, 1), lambda p, i: (i, 0)),
+            pl.BlockSpec((1, d_tile, V), lambda p, i: (p, i, 0)),
+            pl.BlockSpec((1, V), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
+            pl.BlockSpec((d_tile, 1), lambda p, i: (i, 0)),
+            pl.BlockSpec((d_tile, 1), lambda p, i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, V), lambda p, i: (p, 0)),
+            pl.BlockSpec((1, V), lambda p, i: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((P, V), jnp.float32),
+            jax.ShapeDtypeStruct((P, V), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(q2, T, ids, thr2, scale2, offset2)
+    return dists, alive

@@ -13,8 +13,29 @@ __all__ = [
     "pdx_distance_ref",
     "nary_distance_ref",
     "batched_distance_ref",
+    "batched_distance_quant_ref",
     "pdx_prune_scan_ref",
+    "pdx_prune_scan_multi_ref",
+    "dequantize_ref",
 ]
+
+
+def dequantize_ref(
+    T: jax.Array,
+    scale: jax.Array | None,
+    offset: jax.Array | None,
+    dim_axis: int = 0,
+) -> jax.Array:
+    """Mirror-dtype tile -> f32, applying the per-dimension affine
+    dequantization when scale/offset are given (int8 mirrors; bf16/f32 pass
+    None and just upcast).  ``dim_axis`` is the axis holding the D
+    dimension values (0 for a (D, V) tile, 1 for (P, D, V) stacks)."""
+    T32 = T.astype(jnp.float32)
+    if scale is None:
+        return T32
+    shape = [1] * T.ndim
+    shape[dim_axis] = -1
+    return T32 * scale.reshape(shape) + offset.reshape(shape)
 
 
 def pdx_distance_ref(T: jax.Array, q: jax.Array, metric: str = "l2") -> jax.Array:
@@ -53,6 +74,18 @@ def batched_distance_ref(T: jax.Array, Q: jax.Array, metric: str = "l2") -> jax.
     return qn - 2.0 * cross + xn
 
 
+def batched_distance_quant_ref(
+    T: jax.Array,
+    Q: jax.Array,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    metric: str = "l2",
+) -> jax.Array:
+    """Oracle for the quantized batched kernel: dequantize, then the exact
+    ``batched_distance_ref`` arithmetic."""
+    return batched_distance_ref(dequantize_ref(T, scale, offset), Q, metric)
+
+
 def pdx_prune_scan_ref(
     T: jax.Array,
     q: jax.Array,
@@ -80,6 +113,43 @@ def pdx_prune_scan_ref(
         blk = T32[d_seen:hi] - q32[d_seen:hi, None]
         contrib = jnp.sum(blk * blk, axis=0)
         acc = acc + contrib * alive  # frozen lanes stay frozen
+        d_seen = hi
+        d = jnp.float32(d_seen)
+        bound = thr * (1.0 + eps0 / jnp.sqrt(d)) ** 2
+        keep = acc * (D / d) <= bound
+        alive = alive * keep.astype(jnp.float32)
+    return acc, alive
+
+
+def pdx_prune_scan_multi_ref(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    *,
+    d_tile: int,
+    eps0: float,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the multi-partition megakernel.
+
+    (P, D, V) mirror-dtype tiles, (P, V) ids -> (dists (P, V), alive (P, V)
+    f32 mask).  Matches the kernel's contract: lanes with ``ids < 0`` start
+    dead (and accumulate nothing), operands dequantize before the L2
+    accumulation, the hypothesis test runs once per d-tile.
+    """
+    P, D, V = T.shape
+    T32 = dequantize_ref(T, scale, offset, dim_axis=1)
+    q32 = q.astype(jnp.float32)
+    acc = jnp.zeros((P, V), jnp.float32)
+    alive = (ids >= 0).astype(jnp.float32)
+    d_seen = 0
+    while d_seen < D:
+        hi = min(d_seen + d_tile, D)
+        blk = T32[:, d_seen:hi, :] - q32[None, d_seen:hi, None]
+        contrib = jnp.sum(blk * blk, axis=1)
+        acc = acc + contrib * alive
         d_seen = hi
         d = jnp.float32(d_seen)
         bound = thr * (1.0 + eps0 / jnp.sqrt(d)) ** 2

@@ -145,6 +145,78 @@ def test_planner_routes_ivf_on_data_mesh():
     assert p.executor == "adaptive"
 
 
+# ----------------------------------------------------------- budget spill
+def test_plan_routing_spills_oversubscribed_budgets():
+    """Satellite: under skewed demand the exchange splits into two rounds
+    (b1, b2) whenever that moves fewer padded slots than one round at the
+    global max's pow2 ceiling; balanced demand stays single-round."""
+    from repro.dist.routing import _pow2_at_least, plan_routing
+
+    bucket_shard = np.asarray([0, 1, 2, 3])
+    bucket_parts = np.asarray([2, 2, 2, 2])
+
+    # balanced: every query to every shard -> equal demand, one round
+    sel = np.tile(np.arange(4), (16, 1))
+    rp = plan_routing(sel, bucket_shard, bucket_parts, 4)
+    assert rp.round_budgets[1] == 0
+    assert rp.budget == rp.round_budgets[0]
+
+    # high skew: all 33 queries select bucket 0 -> per-(src, dst) demand 9
+    # (the batch splits over 4 source shards); the padded single round
+    # would cost pow2(9) = 16 slots, the spilled plan (8, 4) = 12
+    sel = np.zeros((33, 1), np.int64)
+    rp = plan_routing(sel, bucket_shard, bucket_parts, 4)
+    assert rp.round_budgets == (8, 4)
+    assert rp.budget == 12 and rp.budget < _pow2_at_least(9)
+
+    # bytes moved are pinned by the budget: the send buffer is
+    # n * n * (b1 + b2) slots, not n * n * pow2(max demand)
+    from repro.dist.routing import build_send_buffer
+
+    Q = np.zeros((33, 8), np.float32)
+    buf = build_send_buffer(Q, sel, rp)
+    assert buf.shape == (4, 4, 12, 8 + 1)
+    single_round_bytes = 4 * 4 * 16 * (8 + 1) * 4
+    assert buf.nbytes == single_round_bytes * 3 // 4
+
+
+def test_spilled_routing_matches_single_round_8dev():
+    """A plan that spills into two all-to-all rounds returns exactly the
+    same top-k as the unspilled executor (the rounds are slices of one
+    buffer; concatenation reproduces the single-round layout)."""
+    run_devices("""
+    from repro.core.engine import SearchSpec, VectorSearchEngine
+    from repro.data.synthetic import make_dataset, ground_truth, recall_at_k
+    from repro.dist.routing import plan_routing
+    from repro.core.plan import _get_placement
+
+    # 24 near-copies of one vector: every query routes to the same bucket,
+    # so one owner shard absorbs the whole batch = maximally skewed demand
+    X, _ = make_dataset(2048, 32, "clustered", n_queries=1, seed=3)
+    rng = np.random.default_rng(11)
+    Q = (X[0][None] + rng.normal(0, 0.01, (24, 32))).astype(np.float32)
+    nlist = 16
+    mesh = jax.make_mesh((8,), ("data",))
+    eng = VectorSearchEngine.build(X, index="ivf", pruner="linear",
+                                   capacity=64, nlist=nlist, mesh=mesh)
+    gt_ids, _ = ground_truth(X, Q, k=5)
+
+    pl = _get_placement(eng.store, 8, "bucket", ivf=eng.ivf)
+    sel = eng.ivf.route_batch(jnp.asarray(Q), 1)
+    rp = plan_routing(sel, pl.bucket_shard, pl.bucket_parts, 8)
+    assert rp.round_budgets[1] > 0, rp.round_budgets  # the spill engaged
+
+    res = eng.search(Q, SearchSpec(k=5, nprobe=1))
+    assert res.plan.executor == "routed_bucket", res.plan
+    host = VectorSearchEngine.build(X, index="ivf", pruner="linear",
+                                    capacity=64, nlist=nlist)
+    want = host.search(Q, SearchSpec(k=5, nprobe=1, executor="adaptive"))
+    for qi in range(len(Q)):
+        assert set(res.ids[qi].tolist()) == set(want.ids[qi].tolist()), qi
+    print("OK")
+    """)
+
+
 # ------------------------------------------- routed executor (8 fake devices)
 def test_routed_bucket_matches_single_host_ivf_8dev():
     run_devices("""
