@@ -33,6 +33,7 @@ from repro.core.layout import device_mirror
 from repro.core.pdxearch import make_boundaries  # noqa: F401  (doc pointer)
 from repro.data.synthetic import ground_truth, make_dataset, recall_at_k
 from repro.core.distance import nary_distance, pdx_distance
+from repro.obs import meters
 
 from .common import dataset, emit, timeit, write_json
 
@@ -79,43 +80,19 @@ def _table4(scale: str, record: dict):
 def _scan_bytes_per_query(
     store, pruner, Q, starts, thr_per_q, eps0, dtype, d_tile=64
 ):
-    """Model the megakernel's DEMAND bytes for each query: the START
-    partition streams once at f32 (the exact threshold seed), then a
-    partition's d-tile is needed only while any of its lanes is alive, at
-    mirror width (see the module docstring: the dtype factor is realized
-    today, the pruning factor once fetches are hoisted behind the
-    keep-mask).  The walk replays the exact kernel arithmetic (on
-    dequantized mirror values) so per-dtype pruning differences are
-    accounted."""
+    """Mean DEMAND bytes per query via ``repro.obs.meters`` — the same
+    keep-mask replay the runtime records into
+    ``repro_device_bytes_total{component="scan"}``, so the bench gates and
+    the registry agree by construction (see the module docstring: the dtype
+    factor is realized today, the pruning factor once fetches are hoisted
+    behind the keep-mask)."""
     mirror = device_mirror(store, dtype)
-    ids = np.asarray(store.ids)
-    T = np.asarray(mirror.data, dtype=np.float32)
-    if dtype == "int8":
-        sc = np.asarray(mirror.scale)
-        off = np.asarray(mirror.offset)
-        T = T * sc[None, :, None] + off[None, :, None]
-    # PAD columns hold the 3e18 sentinel whose square overflows f32; they
-    # are dead from the ids mask anyway, so zero them out of the model
-    T = np.where((ids >= 0)[:, None, :], T, 0.0)
-    P, D, C = T.shape
-    nd = -(-D // d_tile)
-    bpv = mirror.bytes_per_value
     total = 0.0
     for q, p0, thr in zip(Q, starts, thr_per_q):
-        qt = np.asarray(pruner.transform_query(jnp.asarray(q)))
-        total += D * C * 4  # START partition, exact f32
-        acc = np.zeros((P, C), np.float32)
-        alive = (ids >= 0).astype(np.float32)
-        alive[p0] = 0.0  # START covered exactly; megakernel skips it whole
-        for i in range(nd):
-            lo, hi = i * d_tile, min((i + 1) * d_tile, D)
-            fetch = alive.any(axis=1)            # partitions still streaming
-            total += fetch.sum() * (hi - lo) * C * bpv
-            blk = T[:, lo:hi, :] - qt[None, lo:hi, None]
-            acc += (blk * blk).sum(axis=1) * alive
-            d_seen = float(hi)
-            bound = thr * (1.0 + eps0 / np.sqrt(d_seen)) ** 2
-            alive *= (acc * (D / d_seen) <= bound).astype(np.float32)
+        qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+        total += meters.fused_demand_bytes(
+            mirror, store.ids, qt, thr, p0=p0, eps0=eps0, d_tile=d_tile,
+        )
     return total / len(Q)
 
 
@@ -155,9 +132,10 @@ def _fused(scale: str, record: dict):
                    "nlist": nlist, "n_queries": nq, "d_tile": 64,
                    "eps0": eps0},
         "bytes_model": (
-            "demand bytes: d-tiles needed per the fused keep-mask, at "
-            "mirror width; dtype factor realized in HBM today, pruning "
-            "factor once fetches hoist behind the mask (see module doc)"
+            "demand bytes via repro.obs.meters.fused_demand_bytes: d-tiles "
+            "needed per the fused keep-mask, at mirror width; dtype factor "
+            "realized in HBM today, pruning factor once fetches hoist "
+            "behind the mask (see module doc)"
         ),
         "bytes_per_query": {"jnp-masked-f32": float(store_bytes)},
         "bytes_speedup_vs_jnp_masked": {},

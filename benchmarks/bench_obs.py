@@ -1,0 +1,237 @@
+"""Telemetry layer gates -> BENCH_obs.json + BENCH_obs_metrics.json.
+
+Three sections:
+
+* **overhead** — the same batched search timed with observability off and
+  on.  Acceptance: enabled overhead < 5% (disabled mode is the baseline —
+  its entire cost is one boolean check per instrumentation site).
+* **routed invariants** — 8-fake-device bucket-routed batches per scan
+  dtype, with every number read back FROM THE REGISTRY: the collective
+  gate (``rounds`` all-to-alls + exactly one packed all-gather per batch,
+  and runtime-issued == compile-time jaxpr count), and the quantized
+  bandwidth story (bf16 / int8 cut total device bytes per batch >= 1.9x /
+  3.5x vs f32).
+* **trace** — the last routed batch's ``QueryTrace`` must carry the full
+  plan -> route -> scan -> rerank -> merge taxonomy; the ring exports to
+  Chrome/Perfetto JSON.
+
+The structural gates are also compared against the committed
+``benchmarks/obs_baseline.json`` so a regression shows up as a CI
+diff, not just a local assert.  The registry snapshot is written to
+``BENCH_obs_metrics.json`` and uploaded as a CI artifact.
+
+Standalone only (NOT in run.py's MODULES): the XLA device-count flag is
+process-global and must be set before jax initializes.
+
+    PYTHONPATH=src python -m benchmarks.bench_obs [--scale paper]
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+os.environ.pop("REPRO_OBS", None)  # sections toggle the flag themselves
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.obs import metrics, trace
+
+from .common import dataset, emit, write_json
+
+BASELINE = os.path.join(os.path.dirname(__file__), "obs_baseline.json")
+
+
+def _tmin_pair(fn, reps: int = 21, warmup: int = 3) -> tuple[float, float]:
+    """Min wall time of ``fn`` with obs off and on.  Reps are interleaved
+    (order alternating each rep) so both modes see the same machine drift,
+    and min-of-many is robust to load spikes.  Always restores disabled."""
+    def once(on: bool) -> float:
+        metrics.set_enabled(on)
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    try:
+        for on in (False, True) * warmup:
+            once(on)
+        t_off = t_on = float("inf")
+        for i in range(reps):
+            first = bool(i % 2)
+            a, b = once(first), once(not first)
+            t_on = min(t_on, a if first else b)
+            t_off = min(t_off, b if first else a)
+    finally:
+        metrics.set_enabled(False)
+    return t_off, t_on
+
+
+def _overhead(scale: str, record: dict) -> None:
+    n, dim, nq = (65536, 64, 64) if scale == "smoke" else (262144, 128, 128)
+    X, Q = dataset(n, dim, "clustered", n_queries=nq, seed=0)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=256)
+    spec = SearchSpec(k=10)
+    run = lambda: eng.search(Q, spec)  # noqa: E731
+    assert run().plan.executor == "batch-matmul"
+
+    t_off, t_on = _tmin_pair(run)
+
+    frac = t_on / t_off - 1.0
+    emit(
+        f"obs/overhead/batch-matmul/n{n}/D{dim}/B{nq}",
+        t_on / nq * 1e6,
+        f"off_us_per_q={t_off / nq * 1e6:.2f};overhead_frac={frac:.4f}",
+    )
+    record["overhead"] = {
+        "executor": "batch-matmul", "n": n, "dim": dim, "batch": nq,
+        "enabled_us_per_query": t_on / nq * 1e6,
+        "disabled_us_per_query": t_off / nq * 1e6,
+        "overhead_frac": frac,
+    }
+    assert frac < 0.05, record["overhead"]
+
+
+def _routed(scale: str, record: dict) -> None:
+    n, dim, cap, nq, nlist, nprobe, rmult = (
+        (65536, 64, 128, 16, 256, 2, 2) if scale == "smoke"
+        else (262144, 128, 256, 32, 512, 4, 2)
+    )
+    n_dev = jax.device_count()
+    X, Q = dataset(n, dim, "clustered", n_queries=nq, seed=1)
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="linear", capacity=cap, nlist=nlist, mesh=mesh,
+    )
+    reg = metrics.get_registry()
+    reg.reset()
+    trace.get_tracer().clear()
+    metrics.set_enabled(True)
+    try:
+        n_batches = 3
+        ids_by_dt = {}
+        for dt in ("f32", "bf16", "int8"):
+            spec = SearchSpec(
+                k=10, nprobe=nprobe, scan_dtype=dt, rerank_mult=rmult,
+            )
+            for _ in range(n_batches):
+                res = eng.search(Q, spec)
+            assert res.plan.executor == "routed_bucket", res.plan
+            ids_by_dt[dt] = np.asarray(res.ids)
+
+        # on-shard f32 re-rank + exact f32 wire: quantized ids == f32 ids
+        for dt in ("bf16", "int8"):
+            assert np.array_equal(ids_by_dt[dt], ids_by_dt["f32"]), dt
+
+        g = lambda prim: reg.get(  # noqa: E731
+            "repro_collectives_issued_total",
+            executor="routed_bucket", primitive=prim,
+        )
+        pc = lambda prim: reg.get(  # noqa: E731
+            "repro_collectives_per_call",
+            executor="routed_bucket", primitive=prim,
+        )
+        total_batches = 3 * n_batches
+        coll = {
+            "all_to_all_per_call": pc("all_to_all"),
+            "all_gather_per_call": pc("all_gather"),
+            "all_to_all_issued": g("all_to_all"),
+            "all_gather_issued": g("all_gather"),
+            "batches": total_batches,
+        }
+        # the collective gate, straight from the registry: one packed
+        # all-gather per batch, `rounds` all-to-alls, and the runtime
+        # account equal to the compile-time jaxpr count x batches
+        assert coll["all_gather_per_call"] == 1.0, coll
+        assert coll["all_gather_issued"] == total_batches, coll
+        assert coll["all_to_all_issued"] == \
+            coll["all_to_all_per_call"] * total_batches, coll
+
+        bytes_by_dt = {
+            dt: reg.sum(
+                "repro_device_bytes_total", executor="routed_bucket",
+                dtype=dt,
+            ) / n_batches
+            for dt in ("f32", "bf16", "int8")
+        }
+        ratios = {
+            dt: bytes_by_dt["f32"] / bytes_by_dt[dt]
+            for dt in ("bf16", "int8")
+        }
+        for dt, floor in (("bf16", 1.9), ("int8", 3.5)):
+            emit(
+                f"obs/routed/{dt}/n{n}/D{dim}/B{nq}/dev{n_dev}",
+                0.0,
+                f"bytes_per_batch={bytes_by_dt[dt]:.0f};"
+                f"ratio_vs_f32={ratios[dt]:.2f}",
+            )
+            assert ratios[dt] >= floor, (dt, ratios)
+
+        # trace acceptance: full span taxonomy on the routed quantized path
+        qt = trace.get_tracer().last()
+        names = qt.span_names()
+        for phase in ("plan", "route", "scan", "rerank", "merge"):
+            assert phase in names, (phase, names)
+        doc = trace.get_tracer().export_chrome()
+        assert any(e["name"] == "query" for e in doc["traceEvents"])
+
+        record["routed"] = {
+            "config": {
+                "n": n, "dim": dim, "capacity": cap, "batch": nq,
+                "nlist": nlist, "nprobe": nprobe, "rerank_mult": rmult,
+                "n_devices": n_dev, "batches_per_dtype": n_batches,
+            },
+            "collectives": coll,
+            "bytes_per_batch": bytes_by_dt,
+            "bytes_ratio_vs_f32": ratios,
+            "trace_spans": list(names),
+            "quantized_ids_match_f32": True,
+        }
+        write_json("BENCH_obs_metrics.json", reg.snapshot())
+    finally:
+        metrics.set_enabled(False)
+
+
+def _check_baseline(record: dict) -> None:
+    """Structural gates vs the committed baseline (timings are machine-
+    dependent and only gated by the in-run 5% assert)."""
+    with open(BASELINE) as f:
+        base = json.load(f)
+    assert record["overhead"]["overhead_frac"] <= base["max_overhead_frac"], (
+        record["overhead"], base,
+    )
+    coll = record["routed"]["collectives"]
+    for key, want in base["collectives_per_call"].items():
+        assert coll[f"{key}_per_call"] == want, (key, coll, base)
+    for dt, floor in base["min_bytes_ratio_vs_f32"].items():
+        assert record["routed"]["bytes_ratio_vs_f32"][dt] >= floor, (
+            dt, record["routed"]["bytes_ratio_vs_f32"], base,
+        )
+    assert record["routed"]["trace_spans"] == base["trace_spans"], (
+        record["routed"]["trace_spans"], base["trace_spans"],
+    )
+    record["baseline_ok"] = True
+
+
+def run(scale: str = "smoke"):
+    record = {"bench": "obs", "scale": scale}
+    _overhead(scale, record)
+    _routed(scale, record)
+    _check_baseline(record)
+    write_json("BENCH_obs.json", record)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(scale=args.scale)
+
+
+if __name__ == "__main__":
+    main()

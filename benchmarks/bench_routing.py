@@ -41,6 +41,7 @@ from repro.core.engine import SearchSpec, VectorSearchEngine
 from repro.core.plan import _get_placement
 from repro.data.synthetic import ground_truth, recall_at_k
 from repro.dist.routing import build_send_buffer, plan_routing
+from repro.obs import meters
 
 from .common import dataset, emit, write_json
 
@@ -78,7 +79,10 @@ def run(scale: str = "smoke"):
     assert res.plan.executor == "batch-block-sharded", res.plan
     assert recall_at_k(res.ids, gt_ids) == 1.0
     t_bcast = _p50(lambda: eng.search(Q, spec_bcast))
-    bytes_bcast = (n_dev * B * dim + n_dev * B * 2 * k) * 4  # Q bcast + merge
+    # Q broadcast + packed merge, from the runtime's own wire model
+    bytes_bcast = sum(
+        meters.broadcast_batch_bytes(n_shards=n_dev, B=B, D=dim, k=k).values()
+    )
     emit(
         f"routing/broadcast/n{n}/D{dim}/B{B}/dev{n_dev}",
         t_bcast / B * 1e6,
@@ -109,9 +113,15 @@ def run(scale: str = "smoke"):
         sel = eng.ivf.route_batch(jnp.asarray(Q), nprobe)
         rp = plan_routing(sel, pl.bucket_shard, pl.bucket_parts, n_dev)
         buf = build_send_buffer(Q, sel, rp)
-        # actual collective payloads: padded all-to-all + packed all-gather
-        bytes_a2a = buf.nbytes
-        bytes_gather = n_dev * (n_dev * rp.budget) * 2 * k * 4
+        # collective payloads from the runtime's wire model — and the
+        # all-to-all entry must equal the actual padded send buffer
+        wire = meters.routed_batch_bytes(
+            rp, n_shards=n_dev, D=dim, C=pl.data.shape[2],
+            num_slots=pl.data.shape[0], nprobe=nprobe, k=k,
+        )
+        bytes_a2a = wire["all_to_all"]
+        bytes_gather = wire["all_gather"]
+        assert bytes_a2a == buf.nbytes, (bytes_a2a, buf.nbytes)
         bytes_q = (bytes_a2a + bytes_gather) / B
         emit(
             f"routing/bucket/nprobe{nprobe}/n{n}/D{dim}/B{B}/dev{n_dev}",
@@ -162,7 +172,6 @@ def _scan_dtypes(scale: str, k: int) -> dict:
 
     sel = eng.ivf.route_batch(jnp.asarray(Q), nprobe)
     rp = plan_routing(sel, pl.bucket_shard, pl.bucket_parts, n_dev)
-    n_dests = float((np.asarray(rp.dest_shard) >= 0).sum()) / B
 
     out = {"config": {
         "n": n, "dim": dim, "capacity": cap, "k": k, "batch": B,
@@ -198,14 +207,18 @@ def _scan_dtypes(scale: str, k: int) -> dict:
 
         quant = dt != "f32"
         mirror = device_mirror(eng.store, dt)  # authoritative byte width
-        # device-scan: every shard streams its mirror slice once per batch;
-        # quantized shards additionally gather rerank_mult*k f32 master
-        # columns per received query (the exact re-rank)
-        scan_b = slots * D * C * mirror.bytes_per_value / B
-        rerank_b = (n_dests * rmult * k * D * 4) if quant else 0.0
-        buf = build_send_buffer(Q, sel, rp)  # the wire stays f32 throughout
-        a2a_b = buf.nbytes / B
-        gather_b = n_dev * (n_dev * rp.budget) * 2 * k * 4 / B
+        # the runtime's wire model: mirror-slice scan + on-shard re-rank
+        # gathers + f32 collectives (the wire stays f32 throughout) — the
+        # same numbers dist.routing records into repro_device_bytes_total
+        comps = meters.routed_batch_bytes(
+            rp, n_shards=n_dev, D=D, C=C, num_slots=slots, nprobe=nprobe,
+            k=k, bytes_per_value=mirror.bytes_per_value, rerank_mult=rmult,
+            quantized=quant,
+        )
+        scan_b = comps["scan"] / B
+        rerank_b = comps["rerank"] / B
+        a2a_b = comps["all_to_all"] / B
+        gather_b = comps["all_gather"] / B
         total = scan_b + rerank_b + a2a_b + gather_b
         if dt == "f32":
             total_f32 = total

@@ -62,6 +62,29 @@ def main():
           f"{bytes16/1e6:.1f} MB (bf16, {bytes32/bytes16:.1f}x fewer) -> "
           f"{bytes8/1e6:.1f} MB (int8, {bytes32/bytes8:.1f}x fewer)")
 
+    # --- runtime telemetry: metrics registry + per-query trace spans ------
+    # Off by default (zero cost); flip it on (or export REPRO_OBS=1) and
+    # every search populates a process-wide registry and a per-call
+    # QueryTrace of plan -> route -> scan -> rerank -> merge spans.
+    from repro.obs import metrics
+
+    metrics.set_enabled(True)
+    try:
+        res = ads.search(Q, spec.replace(nprobe=16, scan_dtype="bf16"))
+        qt = res.trace
+        spans = ", ".join(
+            f"{s.name}={s.duration_s*1e3:.1f}ms" for s in qt.spans
+        )
+        print(f"trace #{qt.trace_id} ({qt.attrs['executor']}): {spans}")
+        snap = ads.metrics()               # deterministic dict snapshot
+        batches = snap["counters"]["repro_search_batches_total"]
+        print(f"registry: search batches by executor = {batches}")
+        ads.dump_trace("/tmp/quickstart_trace.json")  # open in ui.perfetto.dev
+        print("Perfetto trace -> /tmp/quickstart_trace.json; "
+              "Prometheus text via metrics.get_registry().prometheus_text()")
+    finally:
+        metrics.set_enabled(False)
+
 
 if __name__ == "__main__":
     main()

@@ -80,6 +80,7 @@ are re-ranked against the f32 masters — returned distances stay exact.
 from __future__ import annotations
 
 import dataclasses
+import time
 import warnings
 from typing import Any, Optional
 
@@ -87,6 +88,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..index.ivf import IVFIndex, build_ivf
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .layout import MutablePDXStore, PDXStore, build_flat_store, pdx_to_nary
 from .pdxearch import SearchStats
 from .plan import ExecutionPlan, execute, plan_search
@@ -230,18 +233,52 @@ class VectorSearchEngine:
         single = Q.ndim == 1
         Qb = Q[None, :] if single else Q
         use_mesh = mesh if mesh is not None else self.mesh
-        plan = plan_search(
-            base, self.store, Qb.shape[0], pruner=self.pruner,
-            ivf=self.ivf, mesh=use_mesh, wants_stats=stats is not None,
-        )
-        ids, dists = execute(
-            plan, base, self.store, self.pruner, Qb,
-            ivf=self.ivf, mesh=use_mesh, stats=stats,
-        )
+        t0 = time.perf_counter()
+        with _trace.query(n_queries=Qb.shape[0], k=base.k) as qtrace:
+            with _trace.span("plan"):
+                plan = plan_search(
+                    base, self.store, Qb.shape[0], pruner=self.pruner,
+                    ivf=self.ivf, mesh=use_mesh,
+                    wants_stats=stats is not None,
+                )
+            if qtrace is not None:
+                qtrace.attrs["executor"] = plan.executor
+            before = dataclasses.replace(stats) if (
+                stats is not None and _metrics.enabled()
+            ) else None
+            ids, dists = execute(
+                plan, base, self.store, self.pruner, Qb,
+                ivf=self.ivf, mesh=use_mesh, stats=stats,
+            )
+        if _metrics.enabled():
+            B = Qb.shape[0]
+            _metrics.counter(
+                "repro_search_batches_total", executor=plan.executor
+            )
+            _metrics.counter(
+                "repro_search_queries_total", float(B),
+                executor=plan.executor,
+            )
+            _metrics.observe(
+                "repro_search_latency_seconds", time.perf_counter() - t0,
+                executor=plan.executor,
+            )
+            if before is not None:
+                for kind, attr in (
+                    ("total", "values_total"),
+                    ("computed", "values_computed"),
+                    ("avoided", "values_avoided"),
+                ):
+                    delta = getattr(stats, attr) - getattr(before, attr)
+                    if delta:
+                        _metrics.counter(
+                            "repro_pruning_values_total", delta,
+                            executor=plan.executor, kind=kind,
+                        )
         if single:
             ids, dists = ids[0], dists[0]
         return SearchResult(ids=ids, dists=dists, spec=base, plan=plan,
-                            stats=stats)
+                            stats=stats, trace=qtrace)
 
     def plan(
         self,
@@ -379,6 +416,19 @@ class VectorSearchEngine:
             self.spec.replace(k=k, executor="batch-matmul"),
         )
         return res.ids, res.dists
+
+    # --------------------------------------------------------- observability
+    def metrics(self) -> dict:
+        """Deterministic snapshot of the process-wide metrics registry
+        (``repro.obs.metrics``) — counters, gauges, histograms.  Enable
+        recording with ``repro.obs.metrics.set_enabled(True)`` or
+        ``REPRO_OBS=1``; see the ``repro.obs`` docstring for the families."""
+        return _metrics.get_registry().snapshot()
+
+    def dump_trace(self, path: Optional[str] = None) -> dict:
+        """Recorded ``QueryTrace`` ring as Chrome/Perfetto trace JSON
+        (written to ``path`` when given; loadable at ui.perfetto.dev)."""
+        return _trace.get_tracer().export_chrome(path)
 
     # ------------------------------------------------------------------ util
     @property

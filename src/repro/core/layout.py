@@ -42,6 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
+
 __all__ = [
     "PDXPartition",
     "PDXStore",
@@ -138,7 +140,12 @@ def device_mirror(store, dtype: str = "f32") -> DeviceMirror:
             pass
     key = (dtype, version)
     mirror = cache.get(key)
+    _metrics.counter(
+        "repro_cache_events_total", cache="mirror",
+        event="hit" if mirror is not None else "miss",
+    )
     if mirror is None:
+        _metrics.counter("repro_mirror_builds_total", dtype=dtype)
         data = store.data  # triggers the mutable store's lazy f32 sync
         D = data.shape[1]
         if dtype == "f32":
@@ -512,12 +519,31 @@ class MutablePDXStore:
     # ------------------------------------------------------ PDXStore interface
     def _sync_device(self):
         if self._dev_version != self.tiles_version:
+            _metrics.counter("repro_store_device_uploads_total")
             self._dev = (
                 jnp.array(self._data),
                 jnp.array(self._ids),
                 jnp.array(self._counts),
             )
             self._dev_version = self.tiles_version
+
+    def _obs_mutation(self, op: str, rows: int) -> None:
+        """Record one mutation event plus the store-health gauges the
+        serving tier watches (live rows, write-head fill, metadata
+        staleness).  One enabled() check when observability is off."""
+        if not _metrics.enabled():
+            return
+        _metrics.counter("repro_store_mutations_total", op=op)
+        _metrics.counter("repro_store_rows_mutated_total", float(rows), op=op)
+        _metrics.gauge("repro_store_live_vectors", float(self._n_live))
+        _metrics.gauge(
+            "repro_store_head_fill",
+            self.head_count / max(self.head_capacity, 1),
+        )
+        _metrics.gauge(
+            "repro_store_meta_staleness",
+            self._mutations_since_meta / max(self._n_live, 1),
+        )
 
     @property
     def data(self) -> jax.Array:
@@ -638,6 +664,7 @@ class MutablePDXStore:
         self._mutations_since_meta += len(V)
         self._maybe_refresh_meta()
         self._bump()  # head-only: sealed tiles untouched (unless flush ran)
+        self._obs_mutation("insert", len(V))
         return new_ids
 
     def delete(self, ids) -> int:
@@ -681,6 +708,7 @@ class MutablePDXStore:
         self._mutations_since_meta += removed
         self._maybe_refresh_meta()
         self._bump(tiles=bool(sealed_p))
+        self._obs_mutation("delete", removed)
         return removed
 
     def flush(self) -> None:
@@ -703,6 +731,7 @@ class MutablePDXStore:
             self._id_loc[i] = ("s", p, int(c))
         self._reset_head()
         self._bump(tiles=True)
+        self._obs_mutation("flush", len(rows))
 
     def _plan_free_slot_fill(self, rows) -> Optional[list]:
         """(p, c) free slot per head row, or None if any row has no slot.
@@ -766,6 +795,7 @@ class MutablePDXStore:
         self._reset_head()
         self._refresh_meta()
         self._bump(tiles=True)
+        self._obs_mutation("repack", len(all_ids))
 
     def replace_live_vectors(self, X: np.ndarray) -> None:
         """Overwrite every live sealed vector, row ``r`` of ``X`` replacing

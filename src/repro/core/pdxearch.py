@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
 from .distance import batched_distance_matmul, pdx_distance
 from .layout import PDXStore
 from .pruners import Pruner
@@ -142,7 +143,9 @@ def _get_exec(pruner: Pruner, metric: str, version: int = 0):
     key = (pruner.fingerprint, metric, version)
     if key in _EXEC_CACHE:
         _EXEC_CACHE.move_to_end(key)
+        _metrics.counter("repro_cache_events_total", cache="exec", event="hit")
         return _EXEC_CACHE[key]
+    _metrics.counter("repro_cache_events_total", cache="exec", event="miss")
 
     @jax.jit
     def warmup_step(data, pids, dims, qdims, acc, alive, thr, b):
@@ -373,6 +376,60 @@ def _pdxearch_jit_impl(data, ids, q, perm, k, metric, bounds, keep_mask_fn):
     return state
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "metric", "bounds", "keep_mask_fn"),
+)
+def _pdxearch_jit_stats_impl(
+    data, ids, q, perm, k, metric, bounds, keep_mask_fn
+):
+    """``_pdxearch_jit_impl`` plus work accounting: also returns the scalar
+    count of dimension values computed (alive lanes entering each step ×
+    step width, START partition at full D) — the masked-path analogue of the
+    adaptive executor's ``SearchStats`` bookkeeping, kept as a separate
+    traced function so the stats-free path stays untouched."""
+    P, D, C = data.shape
+    dims_all = perm
+    steps = []
+    prev = 0
+    for b in bounds:
+        steps.append((prev, b))
+        prev = b
+
+    def scan_partition(carry, inputs):
+        state, computed = carry
+        tile, tids = inputs  # (D, C), (C,)
+        thr = topk_threshold(state)
+        acc = jnp.zeros((C,), jnp.float32)
+        alive = tids >= 0
+        for (d0, d1) in steps:
+            computed = computed + jnp.sum(alive) * jnp.float32(d1 - d0)
+            dd = jax.lax.dynamic_slice_in_dim(dims_all, d0, d1 - d0)
+            block = tile[dd, :]  # (d, C)
+            qd = q[dd]
+            if metric == "l2":
+                diff = block - qd[:, None]
+                acc = acc + jnp.sum(diff * diff, axis=0)
+            elif metric == "l1":
+                acc = acc + jnp.sum(jnp.abs(block - qd[:, None]), axis=0)
+            else:
+                acc = acc - jnp.sum(block * qd[:, None], axis=0)
+            alive = alive & keep_mask_fn(acc, jnp.float32(d1), thr)
+        cand = jnp.where(alive, acc, _INF)
+        return (topk_merge(state, cand, tids), computed), None
+
+    init = topk_merge(
+        topk_init(k),
+        pdx_distance(data[0], q, metric),
+        ids[0],
+    )
+    computed0 = jnp.sum(ids[0] >= 0) * jnp.float32(D)
+    (state, computed), _ = jax.lax.scan(
+        scan_partition, (init, computed0), (data[1:], ids[1:])
+    )
+    return state, computed
+
+
 def pdxearch_jit(
     store: PDXStore,
     q: jax.Array,
@@ -382,6 +439,7 @@ def pdxearch_jit(
     metric: str = "l2",
     schedule: str = "adaptive",
     delta_d: int = 32,
+    stats: Optional[SearchStats] = None,
 ) -> TopK:
     qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
     perm = (
@@ -390,9 +448,22 @@ def pdxearch_jit(
         else jnp.arange(store.dim, dtype=jnp.int32)
     )
     bounds = make_boundaries(store.dim, schedule, delta_d)
-    return _pdxearch_jit_impl(
+    if stats is None:
+        return _pdxearch_jit_impl(
+            store.data, store.ids, qt, perm, k, metric, bounds,
+            pruner.keep_mask,
+        )
+    state, computed = _pdxearch_jit_stats_impl(
         store.data, store.ids, qt, perm, k, metric, bounds, pruner.keep_mask
     )
+    D = store.dim
+    total = float(np.asarray(store.counts).sum()) * D
+    computed = float(computed)
+    stats.values_total += total
+    stats.values_computed += computed
+    stats.values_avoided += total - computed
+    stats.partitions_visited += store.num_partitions
+    return state
 
 
 # --------------------------------------------------------------------------

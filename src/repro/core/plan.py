@@ -6,7 +6,7 @@ answer the same question — top-k under the spec's metric/pruner config —
 and differ only in execution strategy:
 
   adaptive             host-orchestrated PDXearch (paper Section 4); the
-                       only executor with IVF routing and work accounting.
+                       only executor with per-query IVF routing.
   jit-masked           shape-static masked PDXearch (whole search jittable).
   batch-matmul         exact MXU scan of a (B, D) query batch.
   block-sharded        PDX partitions sharded over the mesh "data" axis;
@@ -34,9 +34,8 @@ against the f32 master tiles whenever ``scan_dtype != "f32"``, so returned
 distances stay exact; ``spec.kernel`` picks the Pallas kernels or their
 jnp twin bodies (same contract, XLA-fused).
 
-Planner rules, in order: a forced ``spec.executor`` wins; a stats request
-pins the adaptive executor (only it accounts work); an IVF index on a
-"data"-axis mesh routes by bucket ownership (unless
+Planner rules, in order: a forced ``spec.executor`` wins; an IVF index on
+a "data"-axis mesh routes by bucket ownership (unless
 ``spec.routing="broadcast"`` keeps routing host-side); a usable mesh picks
 a sharded executor (batched when B > 1 and ``spec.batch_collectives``) —
 on the mesh, a non-f32 ``scan_dtype`` flows *into* the batched/routed
@@ -47,7 +46,17 @@ otherwise a Pallas-eligible spec (``kernel="pallas"``, a TPU backend with
 ``kernel="auto"``, or any reduced-precision ``scan_dtype``) picks a fused
 executor, batches take the MXU scan and single queries the adaptive (or,
 with ``spec.prefer_static``, the masked) path.  Every fallback records its
-reason in the ``ExecutionPlan`` trace.
+reason in the ``ExecutionPlan`` trace.  A stats request no longer changes
+dispatch: every executor accounts ``SearchStats`` work now — exactly on
+the pruned paths (adaptive, jit-masked, block-sharded, fused-scan), as
+full-scan totals on the exact paths, and per selected bucket on the routed
+path — so ``pruning_power`` is observable wherever a query lands.
+
+When observability is on (``repro.obs``), ``execute`` wraps the executor
+body in a ``scan`` span and the write-head merge in a ``merge`` span,
+executors record ``repro_device_bytes_total`` from the mirror dtype and
+executed plan, and the placement cache counts hits/misses — see the
+``repro.obs`` package docstring for the full metric/span taxonomy.
 
 Tile->shard mappings are ``repro.dist.placement.Placement`` values, cached
 on the store per ``(tiles_version, n_shards, kind)`` — arranging + padding
@@ -67,13 +76,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import warnings
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .distance import nary_distance, pdx_distance
 from .layout import DeviceMirror, MutablePDXStore, PDXStore, device_mirror
 from .pdxearch import SearchStats, pdxearch, pdxearch_jit, search_batch_matmul
@@ -137,7 +147,12 @@ def plan_search(
     mesh=None,
     wants_stats: bool = False,
 ) -> ExecutionPlan:
-    """Choose an executor for ``n_queries`` queries against ``store``."""
+    """Choose an executor for ``n_queries`` queries against ``store``.
+
+    ``wants_stats`` is accepted for compatibility but no longer influences
+    dispatch: every registered executor populates ``SearchStats`` now.
+    """
+    del wants_stats
     fp = pruner.fingerprint if pruner is not None else ""
     axes = tuple(getattr(mesh, "axis_names", ())) if mesh is not None else ()
     version = getattr(store, "version", 0)
@@ -168,18 +183,7 @@ def plan_search(
                 f"unknown executor {spec.executor!r}; "
                 f"registered: {executor_names()}"
             )
-        if wants_stats and spec.executor != "adaptive":
-            warnings.warn(
-                f"stats requested but executor {spec.executor!r} is forced; "
-                "only the adaptive executor accounts pruning work — the "
-                "SearchStats will stay zero",
-                RuntimeWarning, stacklevel=3,
-            )
         return plan(spec.executor, "forced by spec.executor")
-
-    if wants_stats:
-        return plan("adaptive", "stats requested; only the adaptive "
-                                "executor accounts pruning work")
 
     if mesh is not None:
         if ivf is not None:
@@ -315,11 +319,16 @@ def execute(
     reachable through all executors, sharded paths included.
     """
     fn = _EXECUTORS[plan.executor]
-    ids, dists = fn(store, pruner, Q, spec, ivf=ivf, mesh=mesh, stats=stats)
-    return _merge_write_head(
-        store, pruner, Q, spec, np.asarray(ids), np.asarray(dists),
-        stats=stats,
-    )
+    with _trace.span("scan", executor=plan.executor,
+                     scan_dtype=spec.scan_dtype):
+        ids, dists = fn(
+            store, pruner, Q, spec, ivf=ivf, mesh=mesh, stats=stats
+        )
+    with _trace.span("merge", executor=plan.executor):
+        return _merge_write_head(
+            store, pruner, Q, spec, np.asarray(ids), np.asarray(dists),
+            stats=stats,
+        )
 
 
 def _merge_write_head(
@@ -356,13 +365,26 @@ def _merge_write_head(
     )
 
 
+def _exact_scan_stats(stats: Optional[SearchStats], store, B: int) -> None:
+    """Work accounting for the exact full-scan executors: every live value
+    is computed, nothing avoided — the honest baseline ``pruning_power``
+    compares against."""
+    if stats is None:
+        return
+    work = float(np.asarray(store.counts).sum()) * store.dim * B
+    stats.values_total += work
+    stats.values_computed += work
+    stats.partitions_visited += store.num_partitions * B
+
+
 @register_executor("adaptive")
 def _exec_adaptive(store, pruner, Q, spec, *, ivf, mesh, stats):
     out_i, out_d = [], []
     for q in Q:
         if ivf is not None:
-            qt = pruner.transform_query(q)
-            order, start_parts = ivf.route(qt, spec.nprobe, spec.metric)
+            with _trace.span("route", nprobe=spec.nprobe):
+                qt = pruner.transform_query(q)
+                order, start_parts = ivf.route(qt, spec.nprobe, spec.metric)
         else:
             order, start_parts = None, 1
         res = pdxearch(
@@ -387,7 +409,7 @@ def _exec_jit_masked(store, pruner, Q, spec, *, ivf, mesh, stats):
     for q in Q:
         res = pdxearch_jit(
             store, q, spec.k, pruner, metric=spec.metric,
-            schedule=spec.schedule, delta_d=spec.delta_d,
+            schedule=spec.schedule, delta_d=spec.delta_d, stats=stats,
         )
         out_i.append(np.asarray(res.ids))
         out_d.append(np.asarray(res.dists))
@@ -407,6 +429,14 @@ def _exec_batch_matmul(store, pruner, Q, spec, *, ivf, mesh, stats):
     # every bucket, so this is exact; nprobe does not apply).
     Qt = _transform_batch(pruner, Q)
     res = search_batch_matmul(store.data, store.ids, Qt, spec.k, spec.metric)
+    B = Q.shape[0]
+    _exact_scan_stats(stats, store, B)
+    if _metrics.enabled():
+        P, D, C = store.data.shape
+        _metrics.counter(
+            "repro_device_bytes_total", float(B) * P * D * C * 4,
+            executor="batch-matmul", component="scan", dtype="f32",
+        )
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
@@ -479,9 +509,24 @@ def _exec_fused_batch(store, pruner, Q, spec, *, ivf, mesh, stats):
     if spec.scan_dtype == "f32":
         res = _positions_to_ids(store.ids, cand)
     else:
-        res = rerank_positions(
-            store.data, store.ids, Qt, cand, spec.k, spec.metric
+        with _trace.span("rerank", rk=rk):
+            res = _trace.fence(rerank_positions(
+                store.data, store.ids, Qt, cand, spec.k, spec.metric
+            ))
+    B = Q.shape[0]
+    _exact_scan_stats(stats, store, B)
+    if _metrics.enabled():
+        P, D, C = mirror.data.shape
+        _metrics.counter(
+            "repro_device_bytes_total",
+            float(B) * P * D * C * mirror.bytes_per_value,
+            executor="fused-batch", component="scan", dtype=mirror.dtype,
         )
+        if spec.scan_dtype != "f32":
+            _metrics.counter(
+                "repro_device_bytes_total", float(B) * rk * D * 4,
+                executor="fused-batch", component="rerank", dtype="f32",
+            )
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
@@ -528,9 +573,54 @@ def _exec_fused_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
             sc, off, eps0, rk, spec.k, use_pallas,
             spec.scan_dtype == "f32", start,
         )
+        if stats is not None:
+            _fused_scan_stats(stats, store, mirror, p0, qt, thr, eps0)
         out_i.append(np.asarray(res.ids))
         out_d.append(np.asarray(res.dists))
+    if spec.scan_dtype != "f32":
+        # the exact re-rank runs fused inside _fused_scan_one — record it
+        # as a zero-width annotation span plus its gather bytes
+        with _trace.span("rerank", fused="in-kernel", rk=rk):
+            pass
+        _metrics.counter(
+            "repro_device_bytes_total",
+            float(len(Q)) * rk * store.dim * 4,
+            executor="fused-scan", component="rerank", dtype="f32",
+        )
     return np.stack(out_i), np.stack(out_d)
+
+
+def _fused_scan_stats(stats, store, mirror, p0, qt, thr, eps0) -> None:
+    """Work accounting for the megakernel: replay the per-d-tile keep-mask
+    walk (``obs.meters.fused_tile_counts``) to recover how many lanes each
+    tile computed — an explicit second pass over the mirror, paid only when
+    stats are requested (the fused kernel itself can't count without
+    spilling its mask).  The START partition is masked out of the walk and
+    charged at full D, exactly mirroring the executor."""
+    from ..obs import meters as _meters
+
+    counts = np.asarray(store.counts)
+    P, D, C = mirror.data.shape
+    ids_scan = store.ids.at[p0].set(-1)
+    lanes, parts = _meters.fused_tile_counts(
+        mirror.data, ids_scan, qt, thr, mirror.scale, mirror.offset,
+        eps0=eps0,
+    )
+    w = _meters.tile_widths(D)
+    total = float(counts.sum()) * D
+    computed = float(counts[p0]) * D + float((lanes * w).sum())
+    stats.values_total += total
+    stats.values_computed += computed
+    stats.values_avoided += total - computed
+    stats.partitions_visited += P
+    if _metrics.enabled():
+        demand = (
+            D * C * 4 + float((parts * w).sum()) * C * mirror.bytes_per_value
+        )
+        _metrics.counter(
+            "repro_device_bytes_total", demand,
+            executor="fused-scan", component="scan", dtype=mirror.dtype,
+        )
 
 
 @functools.partial(
@@ -582,6 +672,10 @@ def _get_placement(store, n_shards: int, kind: str, *, ivf=None, axis="data"):
         cache = {}
         store._placement_cache = cache
     pl = cache.get(key)
+    _metrics.counter(
+        "repro_cache_events_total", cache="placement",
+        event="hit" if pl is not None else "miss",
+    )
     if pl is None:
         if kind == "block":
             pl = Placement.block(store.data, store.ids, n_shards, axis=axis)
@@ -614,7 +708,7 @@ def _exec_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
         res = search_block_sharded(
             mesh, q=q, k=spec.k, metric=spec.metric,
             pruner=pruner, schedule=spec.schedule, delta_d=spec.delta_d,
-            placement=pl,
+            placement=pl, stats=stats,
         )
         out_i.append(np.asarray(res.ids))
         out_d.append(np.asarray(res.dists))
@@ -635,6 +729,7 @@ def _exec_dim_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
         )
         out_i.append(np.asarray(res.ids))
         out_d.append(np.asarray(res.dists))
+    _exact_scan_stats(stats, store, len(Q))
     return np.stack(out_i), np.stack(out_d)
 
 
@@ -652,6 +747,21 @@ def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
         mesh, Q=Qt, k=spec.k, metric=spec.metric, placement=pl,
         mirror=mirror, rerank_mult=spec.rerank_mult,
     )
+    B = Q.shape[0]
+    _exact_scan_stats(stats, store, B)
+    if _metrics.enabled():
+        from ..obs import meters as _meters
+
+        n_sh = mesh.shape["data"]
+        _meters.count_issued("batch-block-sharded", all_gather=1)
+        P, D, C = store.data.shape
+        bpv = mirror.bytes_per_value if mirror is not None else 4
+        dtype = mirror.dtype if mirror is not None else "f32"
+        wire = _meters.broadcast_batch_bytes(
+            n_shards=n_sh, B=B, D=store.dim, k=spec.k
+        )
+        wire["scan"] = float(P * D * C * bpv)
+        _meters.record_device_bytes("batch-block-sharded", dtype, wire)
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
@@ -681,4 +791,23 @@ def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
         mesh, pl, Qt, sel, spec.k, metric=spec.metric,
         mirror=mirror, rerank_mult=spec.rerank_mult,
     )
+    if stats is not None:
+        # exact over each query's selected buckets: every live value in a
+        # probed bucket is computed, everything outside is avoided by
+        # routing (not by a pruning predicate — values_total counts only
+        # visited partitions, matching the adaptive+IVF convention)
+        counts = np.asarray(store.counts)
+        po = np.asarray(ivf.part_offsets)
+        pc = np.asarray(ivf.part_counts)
+        bucket_rows = np.array(
+            [counts[po[b]: po[b] + pc[b]].sum() for b in range(ivf.nlist)],
+            dtype=np.float64,
+        )
+        sel_np = np.asarray(sel)
+        valid = sel_np >= 0
+        safe = np.where(valid, sel_np, 0)
+        work = float(np.where(valid, bucket_rows[safe], 0.0).sum()) * store.dim
+        stats.values_total += work
+        stats.values_computed += work
+        stats.partitions_visited += int(np.where(valid, pc[safe], 0).sum())
     return np.asarray(res.ids), np.asarray(res.dists)

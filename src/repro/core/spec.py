@@ -166,7 +166,8 @@ class SearchResult:
     ``ids``/``dists`` are (k,) for a single query, (B, k) for a batch.
     ``plan`` is the ``repro.core.plan.ExecutionPlan`` the planner chose
     (executor name + reason + the store version searched), ``stats`` the
-    work accounting when requested.
+    work accounting when requested, and ``trace`` the per-query span record
+    (``repro.obs.trace.QueryTrace``) when observability is enabled.
 
     Unpacks like the legacy ``(ids, dists)`` tuple::
 
@@ -178,6 +179,7 @@ class SearchResult:
     spec: SearchSpec
     plan: "ExecutionPlan"  # noqa: F821 — repro.core.plan (no import cycle)
     stats: Optional[SearchStats] = None
+    trace: Optional["QueryTrace"] = None  # noqa: F821 — repro.obs.trace
 
     def __iter__(self):
         yield self.ids

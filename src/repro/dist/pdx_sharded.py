@@ -39,6 +39,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.pdxearch import (
     _pdxearch_jit_impl,
+    _pdxearch_jit_stats_impl,
     make_boundaries,
     search_batch_matmul,
 )
@@ -111,15 +112,22 @@ def search_block_sharded(
     delta_d: int = 32,
     axis: str = "data",
     placement: Placement | None = None,
+    stats=None,
 ) -> TopK:
     """Partition-sharded PDXearch: the placement's (P', D, C) tiles and
     (P', C) ids shard their leading (partition) dim over ``axis``; the query
-    is replicated.  Returns a replicated TopK."""
+    is replicated.  Returns a replicated TopK.
+
+    With a ``SearchStats`` in ``stats``, each shard runs the stats-carrying
+    masked impl, the per-shard computed-values scalars psum across the
+    mesh, and the totals land in ``stats`` — pruning power stays observable
+    on the distributed path at the cost of one extra replicated scalar."""
     _require(q=q, k=k)
     pruner = pruner or make_plain_pruner()
     pl = _block_placement(mesh, data, ids, axis, placement)
     data, ids = pl.data, pl.ids
     bounds = make_boundaries(data.shape[1], schedule, delta_d)
+    with_stats = stats is not None
 
     def local(d_sh, i_sh, q_rep):
         qt = pruner.transform_query(q_rep.astype(jnp.float32))
@@ -128,21 +136,43 @@ def search_block_sharded(
             if pruner.dim_order is not None
             else jnp.arange(d_sh.shape[1], dtype=jnp.int32)
         )
-        res = _pdxearch_jit_impl(
-            d_sh, i_sh, qt, perm, k, metric, bounds, pruner.keep_mask
-        )
+        if with_stats:
+            res, computed = _pdxearch_jit_stats_impl(
+                d_sh, i_sh, qt, perm, k, metric, bounds, pruner.keep_mask
+            )
+            computed = jax.lax.psum(computed, axis)
+        else:
+            res = _pdxearch_jit_impl(
+                d_sh, i_sh, qt, perm, k, metric, bounds, pruner.keep_mask
+            )
         all_d = jax.lax.all_gather(res.dists, axis, tiled=True)
         all_i = jax.lax.all_gather(res.ids, axis, tiled=True)
-        return topk_merge(topk_init(k), all_d, all_i)
+        merged = topk_merge(topk_init(k), all_d, all_i)
+        return (merged, computed) if with_stats else merged
 
+    out_specs = (
+        (TopK(dists=P(), ids=P()), P()) if with_stats
+        else TopK(dists=P(), ids=P())
+    )
     fn = shard_map(
         local,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P()),
-        out_specs=TopK(dists=P(), ids=P()),
+        out_specs=out_specs,
         check_rep=False,
     )
-    return fn(data, ids, q)
+    out = fn(data, ids, q)
+    if not with_stats:
+        return out
+    res, computed = out
+    D = data.shape[1]
+    total = float(jnp.sum(ids >= 0)) * D
+    computed = float(computed)
+    stats.values_total += total
+    stats.values_computed += computed
+    stats.values_avoided += total - computed
+    stats.partitions_visited += data.shape[0]
+    return res
 
 
 def search_dim_sharded(
@@ -297,35 +327,7 @@ def search_batch_block_sharded(
     return fn(data, ids, qtiles, Q.astype(jnp.float32))
 
 
-_COLLECTIVES = (
-    "all_gather", "psum", "all_to_all", "ppermute", "reduce_scatter",
-)
-
-
-def collective_counts(fn, *args, **kwargs) -> dict[str, int]:
-    """Trace ``fn(*args, **kwargs)`` and count collective primitives in the
-    jaxpr (recursing into sub-jaxprs of pjit/shard_map/scan/...).  Used by
-    tests and benchmarks to assert e.g. the batched path issues exactly one
-    all-gather per batch, independent of batch size."""
-    counts: dict[str, int] = {}
-
-    def walk(jaxpr):
-        for eqn in jaxpr.eqns:
-            name = eqn.primitive.name
-            if name in _COLLECTIVES:
-                counts[name] = counts.get(name, 0) + 1
-            for v in eqn.params.values():
-                for sub in _subjaxprs(v):
-                    walk(sub)
-
-    def _subjaxprs(v):
-        if hasattr(v, "eqns"):            # Jaxpr
-            yield v
-        elif hasattr(v, "jaxpr"):         # ClosedJaxpr
-            yield v.jaxpr
-        elif isinstance(v, (tuple, list)):
-            for item in v:
-                yield from _subjaxprs(item)
-
-    walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
-    return counts
+# The jaxpr-walking collective meter moved to ``repro.obs.meters`` (it is
+# telemetry, consumed by the registry's compile-time gauges as well as by
+# tests); re-exported here because tests/benches import it from this module.
+from ..obs.meters import _COLLECTIVES, collective_counts  # noqa: E402,F401

@@ -65,6 +65,8 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.distance import batched_distance_matmul
 from ..core.topk import TopK, rerank_positions, topk_init, topk_merge
+from ..obs import metrics as _metrics
+from ..obs import trace as _trace
 from .placement import Placement
 
 __all__ = [
@@ -161,11 +163,24 @@ def plan_routing(
             send_slot[s, t, slot] = b
             dest_shard[b, j] = t
             dest_slot[b, j] = slot
-    return RoutingPlan(
+    rp = RoutingPlan(
         send_slot=send_slot, dest_shard=dest_shard, dest_slot=dest_slot,
         src_of=src_of.astype(np.int32), budget=budget,
         occupancy=int(fill.sum()), round_budgets=(b1, b2),
     )
+    if _metrics.enabled():
+        # the histogram's log2 buckets ARE the demand octaves: each compiled
+        # budget shape serves one bucket, so the bucket counts show exactly
+        # how batches spread over executor shapes
+        _metrics.observe("repro_routing_demand", float(m))
+        _metrics.counter(
+            "repro_routing_spill_rounds_total", rounds=2 if b2 else 1
+        )
+        _metrics.gauge(
+            "repro_routing_slot_occupancy",
+            rp.occupancy / max(n_shards * n_shards * budget, 1),
+        )
+    return rp
 
 
 def build_send_buffer(
@@ -215,7 +230,11 @@ def _routed_exec(mesh, axis: str, D: int, nprobe: int, k: int, metric: str,
     key = (mesh, axis, D, nprobe, k, metric, rounds, quantized, rk)
     if key in _ROUTED_CACHE:
         _ROUTED_CACHE.move_to_end(key)
+        _metrics.counter(
+            "repro_cache_events_total", cache="routed", event="hit"
+        )
         return _ROUTED_CACHE[key]
+    _metrics.counter("repro_cache_events_total", cache="routed", event="miss")
 
     def local(buf, d_sh, i_sh, pb_sh, dest_shard, dest_slot, src_of,
               qd_sh, scale, offset):
@@ -372,14 +391,46 @@ def search_routed_bucket(
         )
     Qnp = np.asarray(Q, np.float32)
     selnp = np.asarray(sel, np.int32)
-    rp = plan_routing(
-        selnp, placement.bucket_shard, placement.bucket_parts,
-        placement.n_shards,
-    )
     quantized = mirror is not None and mirror.dtype != "f32"
-    buf = build_send_buffer(Qnp, selnp, rp)
-    fn = make_routed_fn(
-        mesh, placement, rp, Qnp.shape[1], selnp.shape[1], k, metric,
-        mirror=mirror if quantized else None, rerank_mult=rerank_mult,
-    )
-    return fn(jnp.asarray(buf))
+    with _trace.span("route", nprobe=selnp.shape[1],
+                     n_shards=placement.n_shards):
+        rp = plan_routing(
+            selnp, placement.bucket_shard, placement.bucket_parts,
+            placement.n_shards,
+        )
+        buf = build_send_buffer(Qnp, selnp, rp)
+        fn = make_routed_fn(
+            mesh, placement, rp, Qnp.shape[1], selnp.shape[1], k, metric,
+            mirror=mirror if quantized else None, rerank_mult=rerank_mult,
+        )
+    bufj = jnp.asarray(buf)
+    if _metrics.enabled():
+        from ..obs import meters as _meters
+
+        rounds = 2 if rp.round_budgets[1] else 1
+        _meters.count_issued("routed_bucket", all_to_all=rounds, all_gather=1)
+        comps = _meters.routed_batch_bytes(
+            rp, n_shards=placement.n_shards, D=Qnp.shape[1],
+            C=placement.data.shape[2], num_slots=placement.num_slots,
+            nprobe=selnp.shape[1], k=k,
+            bytes_per_value=mirror.bytes_per_value if quantized else 4,
+            rerank_mult=rerank_mult, quantized=quantized,
+        )
+        _meters.record_device_bytes(
+            "routed_bucket", mirror.dtype if quantized else "f32", comps
+        )
+        # compile-time gauge: count the collectives in the traced jaxpr
+        # once per executor shape; parity with the issued counters above is
+        # a CI invariant (benchmarks/bench_obs.py)
+        _meters.record_compile_collectives(
+            "routed_bucket",
+            (buf.shape, rp.round_budgets, quantized, k, metric,
+             placement.n_shards),
+            fn, bufj,
+        )
+    if quantized:
+        # the exact f32 re-rank runs fused on-shard, pre-collective — a
+        # zero-width annotation span marks it in the trace
+        with _trace.span("rerank", fused="on-shard", rk=rerank_mult * k):
+            pass
+    return _trace.fence(fn(bufj))

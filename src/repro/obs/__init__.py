@@ -1,0 +1,90 @@
+"""repro.obs — runtime telemetry for the whole search stack.
+
+Three cooperating pieces, all behind one process-wide enable flag
+(``repro.obs.metrics.set_enabled`` / the ``REPRO_OBS=1`` environment
+variable).  Disabled is the default and costs one boolean check per
+instrumentation site: no registry mutation, no span objects, no extra
+device synchronization.
+
+``obs.metrics``
+    A process-wide, thread-safe ``MetricsRegistry`` of labeled counters,
+    gauges, and log2-bucketed histograms with a deterministic
+    ``snapshot()``, JSON dump, and Prometheus-style text exposition.
+
+``obs.trace``
+    A span tracer producing per-query ``QueryTrace`` records, kept in a
+    bounded ring buffer and exportable as Chrome/Perfetto trace JSON
+    (``chrome://tracing`` / https://ui.perfetto.dev).
+
+``obs.meters``
+    Bytes-moved and collective accounting: the demand-bytes model of the
+    fused keep-mask scan, the routed/broadcast wire-byte models (the single
+    source of truth the benchmarks consume), and the jaxpr-walking
+    ``collective_counts`` meter recorded per executor at compile time.
+    Imported on demand (``from repro.obs import meters``): it pulls in the
+    kernel oracles, which the always-imported registry/tracer must not.
+
+Metric naming scheme
+--------------------
+Every metric is ``repro_<subsystem>_<noun>[_<unit>]`` with counters
+suffixed ``_total``; label keys are lowercase identifiers.  The registered
+families:
+
+    repro_search_batches_total{executor}        search() calls per executor
+    repro_search_queries_total{executor}        queries per executor
+    repro_search_latency_seconds{executor}      per-batch wall time (histogram)
+    repro_pruning_values_total{executor,kind}   kind=total|computed|avoided —
+                                                the SearchStats work account,
+                                                mirrored into the registry
+    repro_cache_events_total{cache,event}       cache=exec|placement|routed|
+                                                mirror, event=hit|miss
+    repro_store_mutations_total{op}             op=insert|delete|flush|repack
+    repro_store_rows_mutated_total{op}          rows touched per op
+    repro_store_live_vectors                    gauge
+    repro_store_head_fill                       gauge, write-head occupancy 0..1
+    repro_store_meta_staleness                  gauge, mutations since last
+                                                dim_means/dim_vars refresh
+                                                over live rows
+    repro_store_device_uploads_total            full sealed-tile re-uploads
+    repro_mirror_builds_total{dtype}            mirror (re)quantize events
+    repro_routing_demand                        histogram of per-batch max
+                                                (src, dst) demand — the log2
+                                                buckets ARE the demand octaves
+    repro_routing_spill_rounds_total{rounds}    rounds=1|2 exchange rounds
+    repro_routing_slot_occupancy                gauge, real / padded send slots
+    repro_collectives_issued_total{executor,primitive}
+                                                collectives issued at runtime,
+                                                derived from the executed plan
+    repro_collectives_per_call{executor,primitive}
+                                                gauge, counted in the jaxpr at
+                                                compile time (obs.meters)
+    repro_device_bytes_total{executor,component,dtype}
+                                                component=scan|rerank|
+                                                all_to_all|all_gather|
+                                                broadcast
+    repro_rag_retrievals_total{executor}        serve-layer retrieval queries
+
+Span taxonomy
+-------------
+One ``QueryTrace`` per ``VectorSearchEngine.search`` call (the root covers
+the whole call); phases nest under it:
+
+    plan    planner dispatch (``core.plan.plan_search``)
+    route   IVF bucket ranking + exchange planning (adaptive per-query
+            routing, or ``route_batch``/``plan_routing``/send-buffer packing
+            on the routed path)
+    scan    executor body — device work fenced by ``block_until_ready``
+            (every executor returns host arrays, so the span wall includes
+            device completion)
+    rerank  exact f32 re-rank of reduced-precision candidates; on sharded
+            quantized paths it runs fused on-shard inside the scan and is
+            recorded as a zero-width annotation span (``fused="on-shard"``)
+    merge   write-head merge + final top-k assembly
+
+``SearchResult.trace`` carries the ``QueryTrace``;
+``VectorSearchEngine.metrics()`` / ``dump_trace(path)`` surface the registry
+snapshot and the Perfetto export.
+"""
+from . import metrics, trace
+
+__all__ = ["metrics", "trace", "meters"]

@@ -1,0 +1,249 @@
+"""Bytes-moved and collective accounting — the single source of truth the
+executors record at runtime and the benchmarks consume offline.
+
+Three families:
+
+* **Keep-mask demand model** (``fused_tile_counts`` /
+  ``fused_demand_bytes``): replays the fused megakernel's exact per-d-tile
+  ADSampling arithmetic (``kernels.ref.pdx_prune_scan_multi_ref``) and
+  returns, per tile, how many lanes and partitions were still alive when
+  the tile was reached.  Lanes × tile width is the ``SearchStats``
+  ``values_computed`` account; partitions × tile width × capacity × mirror
+  byte width is the demand-bytes model ``benchmarks/bench_kernels.py``
+  gates on (the dtype factor is realized in HBM today, the pruning factor
+  once tile fetches hoist behind the mask — see the kernel design notes).
+
+* **Wire models** (``routed_batch_bytes`` / ``broadcast_batch_bytes``):
+  per-batch byte totals of the routed all-to-all / packed all-gather and
+  the mirrored-broadcast baseline, derived from the executed
+  ``RoutingPlan`` — ``dist.routing`` records them into the registry and
+  ``benchmarks/bench_routing.py`` reports the same numbers.
+
+* **Collective meters**: ``collective_counts`` walks a traced jaxpr and
+  counts collective primitives (lifted here from ``dist.pdx_sharded``,
+  which re-exports it for compatibility);
+  ``record_compile_collectives`` runs it once per (executor, shape key)
+  and publishes ``repro_collectives_per_call`` gauges, while
+  ``count_issued`` accumulates ``repro_collectives_issued_total`` from the
+  executed plan — the parity of the two is a CI invariant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metrics
+from ..kernels.ref import dequantize_ref
+
+__all__ = [
+    "collective_counts",
+    "record_compile_collectives",
+    "count_issued",
+    "tile_widths",
+    "fused_tile_counts",
+    "fused_demand_bytes",
+    "routed_batch_bytes",
+    "broadcast_batch_bytes",
+    "record_device_bytes",
+]
+
+
+# ------------------------------------------------------------ collectives
+_COLLECTIVES = (
+    "all_gather", "psum", "all_to_all", "ppermute", "reduce_scatter",
+)
+
+
+def collective_counts(fn, *args, **kwargs) -> dict[str, int]:
+    """Trace ``fn(*args, **kwargs)`` and count collective primitives in the
+    jaxpr (recursing into sub-jaxprs of pjit/shard_map/scan/...).  Used by
+    tests and benchmarks to assert e.g. the batched path issues exactly one
+    all-gather per batch, independent of batch size."""
+    counts: dict[str, int] = {}
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            name = eqn.primitive.name
+            if name in _COLLECTIVES:
+                counts[name] = counts.get(name, 0) + 1
+            for v in eqn.params.values():
+                for sub in _subjaxprs(v):
+                    walk(sub)
+
+    def _subjaxprs(v):
+        if hasattr(v, "eqns"):            # Jaxpr
+            yield v
+        elif hasattr(v, "jaxpr"):         # ClosedJaxpr
+            yield v.jaxpr
+        elif isinstance(v, (tuple, list)):
+            for item in v:
+                yield from _subjaxprs(item)
+
+    walk(jax.make_jaxpr(fn)(*args, **kwargs).jaxpr)
+    return counts
+
+
+_COMPILE_METERED: set = set()
+
+
+def record_compile_collectives(
+    executor: str, key: tuple, fn, *args
+) -> Optional[dict]:
+    """Count ``fn``'s collectives once per (executor, shape ``key``) and
+    publish them as ``repro_collectives_per_call`` gauges — the
+    compile-time side of the collective invariant (``count_issued`` is the
+    runtime side).  The abstract trace costs once per new executor shape,
+    exactly when a compile happens anyway; no-op when disabled or already
+    metered."""
+    if not metrics.enabled():
+        return None
+    full = (executor,) + tuple(key)
+    if full in _COMPILE_METERED:
+        return None
+    counts = collective_counts(fn, *args)
+    for prim, n in counts.items():
+        metrics.gauge(
+            "repro_collectives_per_call", n, executor=executor,
+            primitive=prim,
+        )
+    _COMPILE_METERED.add(full)
+    return counts
+
+
+def count_issued(executor: str, **primitives: int) -> None:
+    """Accumulate ``repro_collectives_issued_total`` counters from the
+    executed plan (e.g. ``count_issued("routed_bucket", all_to_all=rounds,
+    all_gather=1)`` per batch)."""
+    if not metrics.enabled():
+        return
+    for prim, n in primitives.items():
+        metrics.counter(
+            "repro_collectives_issued_total", float(n), executor=executor,
+            primitive=prim,
+        )
+
+
+# ------------------------------------------------- keep-mask demand model
+def tile_widths(D: int, d_tile: int = 64) -> np.ndarray:
+    """Widths of the megakernel's d-tiles over a D-dimensional store."""
+    edges = np.arange(0, D, d_tile)
+    return np.minimum(edges + d_tile, D) - edges
+
+
+@functools.partial(jax.jit, static_argnames=("d_tile", "eps0"))
+def _tile_walk(T, ids, q, thr, scale, offset, d_tile, eps0):
+    """Replay of ``kernels.ref.pdx_prune_scan_multi_ref`` that returns the
+    per-tile survivor counts instead of the distances: for each d-tile,
+    how many lanes and how many partitions were alive when it was reached
+    (lanes with ``ids < 0`` start dead; the hypothesis test runs once per
+    tile on dequantized operands, so per-dtype rounding differences in the
+    keep-mask are accounted)."""
+    P, D, V = T.shape
+    T32 = dequantize_ref(T, scale, offset, dim_axis=1)
+    q32 = q.astype(jnp.float32)
+    acc = jnp.zeros((P, V), jnp.float32)
+    alive = (ids >= 0).astype(jnp.float32)
+    lanes, parts = [], []
+    d_seen = 0
+    while d_seen < D:
+        hi = min(d_seen + d_tile, D)
+        lanes.append(jnp.sum(alive))
+        parts.append(jnp.sum(jnp.any(alive > 0, axis=1)))
+        blk = T32[:, d_seen:hi, :] - q32[None, d_seen:hi, None]
+        contrib = jnp.sum(blk * blk, axis=1)
+        acc = acc + contrib * alive
+        d_seen = hi
+        d = jnp.float32(d_seen)
+        bound = thr * (1.0 + eps0 / jnp.sqrt(d)) ** 2
+        keep = acc * (D / d) <= bound
+        alive = alive * keep.astype(jnp.float32)
+    return jnp.stack(lanes), jnp.stack(parts)
+
+
+def fused_tile_counts(
+    mdata, ids, qt, thr, scale=None, offset=None, *,
+    eps0: float, d_tile: int = 64,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-d-tile (lanes alive, partitions alive) entering each tile of a
+    fused keep-mask scan of the (P, D, V) mirror tiles ``mdata``.
+    ``scale``/``offset`` are the mirror's dequantization vectors (pass
+    ``None`` for f32/bf16 mirrors).  Returns two (n_tiles,) float arrays.
+    """
+    D = mdata.shape[1]
+    if scale is None:
+        scale = jnp.ones((D,), jnp.float32)
+    if offset is None:
+        offset = jnp.zeros((D,), jnp.float32)
+    lanes, parts = _tile_walk(
+        mdata, jnp.asarray(ids), jnp.asarray(qt, jnp.float32),
+        jnp.float32(thr), scale, offset, d_tile, float(eps0),
+    )
+    return np.asarray(lanes), np.asarray(parts)
+
+
+def fused_demand_bytes(
+    mirror, ids, qt, thr, *, p0: int, eps0: float, d_tile: int = 64
+) -> float:
+    """Demand bytes of one fused-scan query: the START partition streams
+    once at f32 (the exact threshold seed), then a partition's d-tile is
+    needed only while any of its lanes is alive, at mirror width.
+    ``mirror`` is a ``core.layout.DeviceMirror``; ``p0`` the START
+    partition (masked out of the pruned scan, exactly as the executor does).
+    """
+    P, D, C = mirror.data.shape
+    ids_scan = jnp.asarray(ids).at[p0].set(-1)
+    _, parts = fused_tile_counts(
+        mirror.data, ids_scan, qt, thr, mirror.scale, mirror.offset,
+        eps0=eps0, d_tile=d_tile,
+    )
+    w = tile_widths(D, d_tile)
+    return float(D * C * 4 + (parts * w).sum() * C * mirror.bytes_per_value)
+
+
+# --------------------------------------------------------------- wire models
+def routed_batch_bytes(
+    rp, *, n_shards: int, D: int, C: int, num_slots: int, nprobe: int,
+    k: int, bytes_per_value: int = 4, rerank_mult: int = 4,
+    quantized: bool = False,
+) -> dict[str, float]:
+    """Per-batch byte totals of one routed-bucket search under
+    ``RoutingPlan`` ``rp``: the padded all-to-all payload (queries ‖
+    bitcast bucket ids, f32 wire), the packed candidate all-gather, each
+    shard's one mirror-slice scan, and — when quantized — the f32 master
+    columns the on-shard re-rank gathers per delivered query."""
+    n_dests = float((np.asarray(rp.dest_shard) >= 0).sum())
+    return {
+        "scan": float(num_slots * D * C * bytes_per_value),
+        "rerank": (n_dests * rerank_mult * k * D * 4.0) if quantized else 0.0,
+        "all_to_all": float(n_shards * n_shards * rp.budget * (D + nprobe) * 4),
+        "all_gather": float(n_shards * (n_shards * rp.budget) * 2 * k * 4),
+    }
+
+
+def broadcast_batch_bytes(
+    *, n_shards: int, B: int, D: int, k: int
+) -> dict[str, float]:
+    """Per-batch wire bytes of the mirrored-broadcast baseline: every query
+    replicates to every shard, one packed (B, 2k) all-gather merges."""
+    return {
+        "all_to_all": 0.0,
+        "broadcast": float(n_shards * B * D * 4),
+        "all_gather": float(n_shards * B * 2 * k * 4),
+    }
+
+
+def record_device_bytes(executor: str, dtype: str, components: dict) -> None:
+    """Accumulate a components dict (as returned by the wire models) into
+    ``repro_device_bytes_total{executor, component, dtype}`` counters."""
+    if not metrics.enabled():
+        return
+    for comp, nbytes in components.items():
+        if nbytes:
+            metrics.counter(
+                "repro_device_bytes_total", float(nbytes),
+                executor=executor, component=comp, dtype=dtype,
+            )

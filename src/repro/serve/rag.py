@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.engine import VectorSearchEngine
+from ..obs import metrics as _metrics
 from .engine import GenerationEngine
 
 __all__ = ["RagPipeline"]
@@ -95,6 +96,10 @@ class RagPipeline:
         carries a mesh, batched-sharded) executor instead of a per-query loop."""
         q_emb = np.atleast_2d(np.asarray(self.engine.embed(query_batch)))
         res = self.store.search(q_emb, self.store.spec.replace(k=self.retrieve_k))
+        _metrics.counter(
+            "repro_rag_retrievals_total", float(len(q_emb)),
+            executor=res.plan.executor,
+        )
         return np.asarray(res.ids)
 
     def answer(

@@ -1,0 +1,319 @@
+"""repro.obs telemetry tests: registry semantics (snapshot determinism,
+log2 bucket edges, label-cardinality bound), tracer ring + disabled-mode
+no-op guarantees, SearchStats on every executor, and the collective-meter
+parity invariant on the routed 8-fake-device path (subprocess, see
+tests/test_dist.py for why)."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.core.pdxearch import SearchStats
+from repro.data.synthetic import make_dataset
+from repro.obs import metrics, trace
+from repro.obs.metrics import MetricsRegistry, bucket_edge, bucket_index
+from repro.obs.trace import Tracer
+
+from test_dist import run_devices
+
+
+@pytest.fixture
+def obs():
+    """Enable telemetry on a clean registry/ring; always restore disabled."""
+    reg = metrics.get_registry()
+    tr = trace.get_tracer()
+    reg.reset()
+    tr.clear()
+    metrics.set_enabled(True)
+    try:
+        yield reg
+    finally:
+        metrics.set_enabled(False)
+        reg.reset()
+        tr.clear()
+
+
+# ------------------------------------------------------------------- registry
+def test_histogram_bucket_edges():
+    # bucket i holds (2**(i-1), 2**i]; exact powers land on their own edge
+    assert bucket_index(0.0) is None and bucket_index(-3.0) is None
+    assert bucket_index(1.0) == 0
+    assert bucket_index(1.0001) == 1
+    assert bucket_index(2.0) == 1
+    assert bucket_index(3.0) == 2
+    assert bucket_index(4.0) == 2
+    assert bucket_index(0.5) == -1
+    assert bucket_index(0.3) == -1       # (0.25, 0.5]
+    assert bucket_index(1e-30) == -64    # clamped underflow floor
+    assert bucket_edge(None) == 0.0
+    assert bucket_edge(3) == 8.0 and bucket_edge(-2) == 0.25
+
+
+def test_snapshot_determinism():
+    # same events, different arrival order and label kwarg order -> the
+    # serialized snapshots are byte-identical
+    events = [
+        ("counter", "repro_x_total", 2.0, {"a": "1", "b": "2"}),
+        ("counter", "repro_x_total", 1.0, {"b": "2", "a": "1"}),
+        ("counter", "repro_x_total", 5.0, {"a": "9"}),
+        ("gauge", "repro_g", 7.0, {"z": "q"}),
+        ("observe", "repro_h", 3.0, {}),
+        ("observe", "repro_h", 0.4, {}),
+        ("observe", "repro_h", 1000.0, {}),
+    ]
+    r1, r2 = MetricsRegistry(), MetricsRegistry()
+    for kind, name, v, labels in events:
+        getattr(r1, kind)(name, v, **labels)
+    for kind, name, v, labels in reversed(events):
+        getattr(r2, kind)(name, v, **labels)
+    assert r1.dump_json() == r2.dump_json()
+    snap = r1.snapshot()
+    assert snap["counters"]["repro_x_total"]["a=1,b=2"] == 3.0
+    assert snap["histograms"]["repro_h"][""]["count"] == 3
+
+
+def test_label_cardinality_bound():
+    reg = MetricsRegistry(max_series_per_metric=4)
+    for i in range(10):
+        reg.counter("repro_leak_total", 1.0, qid=str(i))
+    series = reg.snapshot()["counters"]["repro_leak_total"]
+    assert len(series) == 5                      # 4 real + the overflow sink
+    assert series["other=true"] == 6.0
+    assert reg.dropped_series == 6
+    # existing series keep accumulating past the cap
+    reg.counter("repro_leak_total", 1.0, qid="0")
+    assert reg.get("repro_leak_total", qid="0") == 2.0
+
+
+def test_get_sum_and_prometheus_text():
+    reg = MetricsRegistry()
+    reg.counter("repro_bytes_total", 100.0, executor="a", component="scan")
+    reg.counter("repro_bytes_total", 50.0, executor="a", component="wire")
+    reg.counter("repro_bytes_total", 7.0, executor="b", component="scan")
+    reg.gauge("repro_fill", 0.5)
+    reg.observe("repro_lat_seconds", 0.3, executor="a")
+    reg.observe("repro_lat_seconds", 0.6, executor="a")
+    assert reg.get("repro_bytes_total", executor="b", component="scan") == 7.0
+    assert reg.sum("repro_bytes_total", executor="a") == 150.0
+    assert reg.sum("repro_bytes_total") == 157.0
+    text = reg.prometheus_text()
+    assert "# TYPE repro_bytes_total counter" in text
+    assert 'repro_bytes_total{component="scan",executor="a"} 100' in text
+    assert "# TYPE repro_lat_seconds histogram" in text
+    # cumulative buckets: 0.3 -> le=0.5, 0.6 -> le=1; +Inf == count
+    assert 'repro_lat_seconds_bucket{executor="a",le="0.5"} 1' in text
+    assert 'repro_lat_seconds_bucket{executor="a",le="1"} 2' in text
+    assert 'repro_lat_seconds_bucket{executor="a",le="+Inf"} 2' in text
+    assert 'repro_lat_seconds_count{executor="a"} 2' in text
+
+
+# --------------------------------------------------------------------- tracer
+def test_tracer_ring_eviction(obs):
+    tr = Tracer(capacity=3)
+    for i in range(5):
+        with tr.query(i=i):
+            with tr.span("scan"):
+                pass
+    kept = tr.traces()
+    assert len(kept) == 3
+    assert [t.attrs["i"] for t in kept] == [2, 3, 4]
+    assert kept[-1].span_names() == ("scan",)
+    assert tr.last().attrs["i"] == 4
+
+
+def test_tracer_no_nested_query_traces(obs):
+    tr = trace.get_tracer()
+    with trace.query(outer=True) as outer:
+        with trace.query(inner=True) as inner:
+            assert inner is None          # nested call records nothing
+        with trace.span("scan"):
+            pass
+    assert len(tr.traces()) == 1
+    assert outer.span_names() == ("scan",)
+
+
+def test_disabled_mode_is_noop():
+    assert not metrics.enabled()
+    reg = metrics.get_registry()
+    before = reg.dump_json()
+    metrics.counter("repro_x_total", 1.0)
+    metrics.gauge("repro_g", 1.0)
+    metrics.observe("repro_h", 1.0)
+    with trace.query(a=1) as t:
+        assert t is None
+        with trace.span("scan") as s:
+            assert s is None
+    assert trace.current_trace() is None
+    assert trace.get_tracer().last() is None
+    assert reg.dump_json() == before
+
+    # a full engine search mutates neither registry nor ring, and the
+    # result carries no trace
+    X, Q = make_dataset(512, 16, "normal", n_queries=2, seed=0)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    res = eng.search(Q, SearchSpec(k=3))
+    assert res.trace is None
+    assert reg.dump_json() == before
+    assert trace.get_tracer().last() is None
+
+
+# ------------------------------------------------------------ engine telemetry
+def test_engine_metrics_trace_and_stats_parity(obs, tmp_path):
+    X, Q = make_dataset(2048, 32, "clustered", n_queries=4, seed=1)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="adsampling", capacity=128, nlist=16,
+    )
+    stats = SearchStats()
+    res = eng.search(Q[0], SearchSpec(k=5), stats=stats)
+    assert res.plan.executor == "adaptive"
+    qt = res.trace
+    assert qt is not None and qt.attrs["executor"] == "adaptive"
+    names = qt.span_names()
+    assert names.index("plan") < names.index("route") < names.index("scan")
+    assert "merge" in names
+    assert qt.duration_s > 0 and all(s.duration_s >= 0 for s in qt.spans)
+
+    snap = eng.metrics()
+    assert snap["counters"]["repro_search_batches_total"]["executor=adaptive"] \
+        == 1.0
+    assert snap["counters"]["repro_search_queries_total"]["executor=adaptive"] \
+        == 1.0
+    # the registry mirrors the SearchStats work account exactly
+    reg = metrics.get_registry()
+    for kind, want in (
+        ("total", stats.values_total),
+        ("computed", stats.values_computed),
+        ("avoided", stats.values_avoided),
+    ):
+        got = reg.get(
+            "repro_pruning_values_total", executor="adaptive", kind=kind,
+        )
+        assert got == pytest.approx(want), (kind, got, want)
+    hist = snap["histograms"]["repro_search_latency_seconds"]
+    assert hist["executor=adaptive"]["count"] == 1
+
+    # Perfetto export round-trips through engine.dump_trace
+    path = tmp_path / "trace.json"
+    doc = eng.dump_trace(str(path))
+    names = [e["name"] for e in doc["traceEvents"]]
+    assert "query" in names and "scan" in names
+    assert json.loads(path.read_text()) == doc
+
+
+def test_stats_populated_on_every_single_device_executor(obs):
+    X, Q = make_dataset(2048, 32, "clustered", n_queries=4, seed=2)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="adsampling", capacity=128, nlist=16,
+    )
+    total_1 = float(np.asarray(eng.store.counts).sum()) * eng.store.dim
+    # exact=True: the executor scans the whole store at full width, so the
+    # work account must be saturated (computed == total == live * D * B);
+    # exact=False paths account only what they visit/compute
+    flat = VectorSearchEngine.build(X, pruner="adsampling", capacity=128)
+    cases = [
+        (eng, "adaptive", SearchSpec(k=5), Q[0], False),
+        (flat, "batch-matmul", SearchSpec(k=5), Q, True),
+        (eng, "fused-scan", SearchSpec(k=5, scan_dtype="int8", kernel="jnp",
+                                       executor="fused-scan"), Q[0], False),
+        (eng, "fused-batch", SearchSpec(k=5, scan_dtype="bf16",
+                                        executor="fused-batch"), Q, True),
+    ]
+    for e, name, spec, q, exact in cases:
+        stats = SearchStats()
+        res = e.search(q, spec, stats=stats)
+        assert res.plan.executor == name, res.plan
+        B = 1 if q.ndim == 1 else len(q)
+        assert 0 < stats.values_total <= total_1 * B + 1e-6, name
+        assert 0 < stats.values_computed <= stats.values_total, name
+        if exact:
+            assert stats.values_total == pytest.approx(total_1 * B), name
+            assert stats.values_computed == stats.values_total, name
+        assert stats.values_avoided == pytest.approx(
+            stats.values_total - stats.values_computed
+        ), name
+        assert stats.partitions_visited > 0, name
+    # jit-masked (flat store) obeys the same identity
+    stats = SearchStats()
+    res = flat.search(Q[0], SearchSpec(k=5, prefer_static=True), stats=stats)
+    assert res.plan.executor == "jit-masked", res.plan
+    assert stats.values_total > 0
+    assert stats.values_avoided == pytest.approx(
+        stats.values_total - stats.values_computed
+    )
+
+
+def test_cache_and_mutation_metrics(obs):
+    X, _ = make_dataset(1024, 16, "normal", n_queries=1, seed=3)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    reg = metrics.get_registry()
+    eng.insert(X[:8] + 0.5)
+    assert reg.get("repro_store_mutations_total", op="insert") == 1.0
+    assert reg.get("repro_store_rows_mutated_total", op="insert") == 8.0
+    assert reg.get("repro_store_live_vectors") == 1032.0
+    assert 0.0 < reg.get("repro_store_head_fill") <= 1.0
+    eng.delete(np.arange(4))
+    assert reg.get("repro_store_mutations_total", op="delete") == 1.0
+    assert reg.get("repro_store_live_vectors") == 1028.0
+
+
+# ----------------------------------------------- routed-path meter invariants
+def test_routed_collective_meters_and_trace_8dev():
+    run_devices("""
+    from repro.core.engine import SearchSpec, VectorSearchEngine
+    from repro.core.pdxearch import SearchStats
+    from repro.data.synthetic import make_dataset
+    from repro.obs import metrics, trace
+
+    metrics.set_enabled(True)
+    X, Q = make_dataset(8192, 32, "clustered", n_queries=16, seed=0)
+    mesh = jax.make_mesh((8,), ("data",))
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="linear", capacity=128, nlist=32, mesh=mesh,
+    )
+    reg = metrics.get_registry()
+    n_batches = 3
+    stats = SearchStats()
+    for _ in range(n_batches):
+        res = eng.search(Q, SearchSpec(k=5, nprobe=4, scan_dtype="bf16"),
+                         stats=stats)
+        assert res.plan.executor == "routed_bucket", res.plan
+
+    # routed stats: work accounted over the selected buckets only
+    full = float(np.asarray(eng.store.counts).sum()) * eng.store.dim
+    assert 0 < stats.values_total <= full * len(Q) * n_batches
+    assert stats.values_computed == stats.values_total  # no pruning on-shard
+    assert stats.partitions_visited > 0
+
+    # acceptance trace: plan -> route -> scan with rerank + merge recorded
+    qt = res.trace
+    names = qt.span_names()
+    assert "plan" in names and "route" in names and "scan" in names, names
+    assert "rerank" in names and "merge" in names, names
+    assert qt.find("rerank").attrs.get("fused") == "on-shard"
+
+    # collective gate: the issued account is exactly per-batch rounds
+    # all-to-alls + ONE packed all-gather, and it matches what the compile
+    # -time jaxpr meter counted per call
+    issued_a2a = reg.get("repro_collectives_issued_total",
+                         executor="routed_bucket", primitive="all_to_all")
+    issued_ag = reg.get("repro_collectives_issued_total",
+                        executor="routed_bucket", primitive="all_gather")
+    per_call_a2a = reg.get("repro_collectives_per_call",
+                           executor="routed_bucket", primitive="all_to_all")
+    per_call_ag = reg.get("repro_collectives_per_call",
+                          executor="routed_bucket", primitive="all_gather")
+    assert issued_ag == n_batches, (issued_ag, n_batches)
+    assert per_call_ag == 1.0, per_call_ag
+    assert issued_a2a == per_call_a2a * n_batches, (issued_a2a, per_call_a2a)
+
+    # wire/scan bytes recorded per component at the mirror dtype
+    scan_b = reg.get("repro_device_bytes_total", executor="routed_bucket",
+                     component="scan", dtype="bf16")
+    a2a_b = reg.get("repro_device_bytes_total", executor="routed_bucket",
+                    component="all_to_all", dtype="bf16")
+    rr_b = reg.get("repro_device_bytes_total", executor="routed_bucket",
+                   component="rerank", dtype="bf16")
+    assert scan_b > 0 and a2a_b > 0 and rr_b > 0
+    print("OK")
+    """)

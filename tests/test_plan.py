@@ -63,8 +63,10 @@ def test_planner_dispatch_rules():
     assert plan_search(spec, store, 8).executor == "batch-matmul"
     assert plan_search(spec.replace(prefer_static=True), store, 1).executor \
         == "jit-masked"
+    # stats no longer pin the executor — every path populates SearchStats
     assert plan_search(spec, store, 1, wants_stats=True).executor == "adaptive"
-    assert plan_search(spec, store, 8, wants_stats=True).executor == "adaptive"
+    assert plan_search(spec, store, 8, wants_stats=True).executor \
+        == "batch-matmul"
 
     data_mesh = _FakeMesh(data=8)
     assert plan_search(spec, store, 1, mesh=data_mesh).executor \
@@ -283,11 +285,21 @@ def test_directly_constructed_pruners_never_share_cache_entries():
     assert a.fingerprint != b.fingerprint  # no factory => unique fallback
 
 
-def test_stats_with_forced_non_adaptive_executor_warns():
+def test_stats_populated_on_forced_non_adaptive_executor():
+    # every executor now fills the SearchStats work account (exact scans
+    # report computed == total); the old adaptive-pinning warning is gone
     from repro.core.pdxearch import SearchStats
 
     X, Q = make_dataset(400, 16, "normal", n_queries=2, seed=8)
     eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
-    with pytest.warns(RuntimeWarning, match="adaptive executor"):
-        eng.search(Q, SearchSpec(k=3, executor="batch-matmul"),
-                   stats=SearchStats())
+    stats = SearchStats()
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        eng.search(Q, SearchSpec(k=3, executor="batch-matmul"), stats=stats)
+    total = float(np.asarray(eng.store.counts).sum()) * eng.store.dim * len(Q)
+    assert stats.values_total == total
+    assert stats.values_computed == total      # exact scan: nothing avoided
+    assert stats.values_avoided == 0.0
+    assert stats.partitions_visited == eng.store.data.shape[0] * len(Q)

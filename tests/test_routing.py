@@ -140,9 +140,10 @@ def test_planner_routes_ivf_on_data_mesh():
     # no data axis -> cannot route
     p = plan_search(spec, store, 1, ivf=ivf, mesh=_FakeMesh(model=8))
     assert p.executor == "adaptive" and "'data' axis" in p.reason
-    # stats still pin the adaptive executor
+    # stats no longer pin the executor — the routed path fills SearchStats
+    # from the selected buckets' host-side metadata
     p = plan_search(spec, store, 4, ivf=ivf, mesh=mesh, wants_stats=True)
-    assert p.executor == "adaptive"
+    assert p.executor == "routed_bucket"
 
 
 # ----------------------------------------------------------- budget spill
