@@ -1,0 +1,226 @@
+"""Online serving tier gates -> BENCH_serve.json.
+
+One scenario, mirroring how the tier will actually run: a ``VectorServer``
+over a flat adsampling engine takes a *skewed open-loop* arrival process
+(lognormal inter-arrival gaps at ~3x the serial engine's throughput) while
+a churn thread runs balanced insert/delete through the server and the
+background maintenance thread repacks behind the version fence.
+
+Acceptance (asserted, so a regression fails CI):
+
+* sustained QPS >= 2x the serial blocking ``engine.search`` baseline
+* p99 latency <= 5x p50 (continuous batching must not starve the tail)
+* ZERO XLA compiles after ``warmup()`` — read from the
+  ``repro_serve_jit_compiles`` obs gauge — i.e. the pow2 shape buckets,
+  the static-shape write-head merge, and the shape-keyed batch executor
+  really do absorb drifting batch sizes + concurrent churn without
+  minting executables.
+
+The collection size is chosen to leave more free sealed slots than the
+churn batch, so background repacks never change the partition count (the
+batch executor is shape-keyed; a growing tile grid would be a recompile).
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--scale paper]
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.core.engine import VectorSearchEngine
+from repro.obs import metrics
+from repro.serve.batcher import ServerOverloaded
+from repro.serve.vector import VectorServer
+
+from .common import dataset, emit, write_json
+
+DIM = 64
+K = 10
+CHURN_ROWS = 8
+
+
+def _serial_qps(eng, Q, reps: int) -> float:
+    """Blocking one-query-at-a-time engine.search — the pre-serving story."""
+    for q in Q[:4]:                      # warm the serial path's own jits
+        eng.search(q, k=K)
+    t0 = time.perf_counter()
+    for i in range(reps):
+        eng.search(Q[i % len(Q)], k=K)
+    return reps / (time.perf_counter() - t0)
+
+
+def _churn_loop(srv, dim, stop: threading.Event) -> int:
+    """Balanced insert/delete through the server (live count returns to the
+    baseline each cycle, so repacks keep the tile grid shape)."""
+    rng = np.random.default_rng(7)
+    cycles = 0
+    while not stop.is_set():
+        ids = srv.insert(
+            rng.standard_normal((CHURN_ROWS, dim)).astype(np.float32)
+        ).result(timeout=60)
+        srv.delete([int(i) for i in ids]).result(timeout=60)
+        cycles += 1
+        # leave mutation-free gaps wider than a repack (~10ms at this scale)
+        # so some version-fenced swaps actually land; back-to-back churn
+        # would discard every clone — also worth observing, but the bench
+        # asserts the maintenance path end to end
+        time.sleep(0.03)
+    return cycles
+
+
+def run(scale: str = "smoke") -> None:
+    # n deliberately NOT a multiple of capacity: ~5% of sealed slots stay
+    # free, so churn (+CHURN_ROWS transient rows) never grows a partition.
+    n = 63488 if scale == "paper" else 8000
+    n_open = 2000 if scale == "paper" else 400
+    serial_reps = 60 if scale == "paper" else 40
+
+    metrics.set_enabled(True)
+    X, Q = dataset(n, DIM, "clustered", n_queries=64, seed=0)
+    eng = VectorSearchEngine.build(
+        X, pruner="adsampling", capacity=1024, metric="l2"
+    )
+
+    # 1) serial blocking baseline (before the compile snapshot: its jits are
+    # part of process history, not of the serving steady state)
+    serial_qps = _serial_qps(eng, Q, serial_reps)
+    emit("serve_serial_qps", 1e6 / serial_qps, f"qps={serial_qps:.1f}")
+
+    # serving implies churn: upgrade to the mutable store NOW so warmup can
+    # pre-compile the (bucket, head_capacity) write-head merge shapes too
+    eng._ensure_mutable()
+
+    spec = eng.spec.replace(k=K, executor="batch-matmul")
+    srv = VectorServer(
+        eng, spec=spec, max_batch=64, queue_depth=512,
+        flush_interval_s=0.002,
+        maintenance_interval_s=0.25, head_fill_threshold=0.02,
+        fragmentation_threshold=0.01,
+    )
+    try:
+        srv.warmup()
+        compiles_at_warmup = metrics.get_registry().get(
+            "repro_serve_jit_compiles"
+        )
+
+        # 2) skewed open-loop arrivals at ~3x the serial rate + churn
+        rate = 3.0 * serial_qps
+        rng = np.random.default_rng(1)
+        # lognormal gaps, mean 1/rate: sigma=1 gives the heavy-tailed
+        # burstiness ("skewed") an open-loop client actually produces
+        sigma = 1.0
+        gaps = rng.lognormal(
+            mean=np.log(1.0 / rate) - sigma**2 / 2, sigma=sigma, size=n_open
+        )
+        stop = threading.Event()
+        churn_out = {}
+        churn = threading.Thread(
+            target=lambda: churn_out.setdefault(
+                "cycles", _churn_loop(srv, DIM, stop)
+            ),
+            daemon=True,
+        )
+        churn.start()
+
+        done_at = {}
+        lock = threading.Lock()
+
+        def _mark(i):
+            def cb(fut):
+                with lock:
+                    done_at[i] = time.perf_counter()
+            return cb
+
+        submitted_at = {}
+        rejected = 0
+        futs = {}
+        t_start = time.perf_counter()
+        next_at = t_start
+        for i in range(n_open):
+            next_at += gaps[i]
+            delay = next_at - time.perf_counter()
+            if delay > 0:
+                time.sleep(delay)
+            try:
+                f = srv.submit(Q[i % len(Q)])
+            except ServerOverloaded:
+                rejected += 1
+                continue
+            submitted_at[i] = time.perf_counter()
+            futs[i] = f
+            f.add_done_callback(_mark(i))
+        for f in futs.values():
+            f.result(timeout=120)
+        t_end = max(done_at.values())
+        stop.set()
+        churn.join(timeout=60)
+
+        lat = np.array(
+            sorted(done_at[i] - submitted_at[i] for i in futs)
+        )
+        served_qps = len(futs) / (t_end - t_start)
+        p50 = float(np.percentile(lat, 50))
+        p99 = float(np.percentile(lat, 99))
+        compiles_at_end = metrics.get_registry().get(
+            "repro_serve_jit_compiles"
+        )
+        compiles_after_warmup = int(compiles_at_end - compiles_at_warmup)
+
+        snap = metrics.get_registry().snapshot()
+        maint = snap["counters"].get("repro_serve_maintenance_total", {})
+        swaps = sum(v for k, v in maint.items() if "event=swap" in k)
+        discards = sum(v for k, v in maint.items() if "event=discard" in k)
+        buckets = sorted(
+            snap["counters"].get("repro_serve_batches_total", {})
+        )
+
+        ratio = served_qps / serial_qps
+        emit("serve_sustained_qps", 1e6 / served_qps,
+             f"qps={served_qps:.1f},ratio={ratio:.2f}x")
+        emit("serve_latency_p50", p50 * 1e6, f"p99={p99*1e6:.0f}us")
+        emit("serve_compiles_after_warmup", float(compiles_after_warmup),
+             f"swaps={swaps:.0f},discards={discards:.0f}")
+
+        record = {
+            "scale": scale,
+            "n_vectors": n,
+            "n_open_loop": n_open,
+            "serial_qps": serial_qps,
+            "served_qps": served_qps,
+            "qps_ratio": ratio,
+            "p50_s": p50,
+            "p99_s": p99,
+            "p99_over_p50": p99 / p50,
+            "rejected": rejected,
+            "churn_cycles": churn_out.get("cycles", 0),
+            "maintenance_swaps": swaps,
+            "maintenance_discards": discards,
+            "compiles_after_warmup": compiles_after_warmup,
+            "shape_buckets_used": buckets,
+        }
+        write_json("BENCH_serve.json", record)
+
+        assert ratio >= 2.0, (
+            f"sustained QPS only {ratio:.2f}x serial (need >= 2x)"
+        )
+        assert p99 <= 5.0 * p50, (
+            f"p99 {p99*1e3:.2f}ms > 5x p50 {p50*1e3:.2f}ms"
+        )
+        assert compiles_after_warmup == 0, (
+            f"{compiles_after_warmup} XLA compiles after warmup "
+            "(shape buckets leaked)"
+        )
+        assert churn_out.get("cycles", 0) > 0, "churn thread never cycled"
+        assert swaps + discards > 0, "maintenance thread never attempted"
+    finally:
+        srv.close(drain=True)
+    metrics.set_enabled(False)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="smoke", choices=["smoke", "paper"])
+    run(scale=ap.parse_args().scale)

@@ -23,6 +23,7 @@ MODULES = [
     ("table7", "benchmarks.bench_breakdown"),
     ("fig12", "benchmarks.bench_gather"),
     ("roofline", "benchmarks.roofline"),
+    ("serve", "benchmarks.bench_serve"),
 ]
 
 

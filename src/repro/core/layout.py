@@ -618,6 +618,15 @@ class MutablePDXStore:
         mask = self._head_ids >= 0
         return self._head_ids[mask].copy(), self._head_data[mask].copy()
 
+    def head_snapshot(self) -> tuple[np.ndarray, np.ndarray]:
+        """The FULL write-head buffer -> ((head_capacity,) ids, (head_capacity,
+        D) vectors), dead slots included (id -1, data ``PAD_VALUE``).  Unlike
+        ``head_live`` the returned shapes never change, so the merge kernel in
+        ``core.plan`` compiles once per (batch bucket, head_capacity) instead
+        of once per fill level — the serving tier's zero-recompile contract
+        under churn."""
+        return self._head_ids.copy(), self._head_data.copy()
+
     # --------------------------------------------------------------- mutation
     def insert(
         self, V: np.ndarray, assignments: Optional[np.ndarray] = None
@@ -840,3 +849,67 @@ class MutablePDXStore:
             np.float32
         )
         self._mutations_since_meta = 0
+
+    # ------------------------------------------- background maintenance
+    @property
+    def fragmentation(self) -> float:
+        """Fraction of sealed slots that are pad/tombstone holes — the
+        maintenance thread's repack trigger."""
+        P, _, C = self._data.shape
+        return 1.0 - float(self._counts.sum()) / float(P * C)
+
+    def clone(self) -> "MutablePDXStore":
+        """Deep, independent copy of all host-side state (device cache
+        excluded — the clone re-uploads lazily on first read).  The serving
+        tier's maintenance thread clones under the store lock, repacks the
+        clone unlocked off the serving path, and swaps it back in with
+        ``adopt``."""
+        other = MutablePDXStore.__new__(MutablePDXStore)
+        other._data = self._data.copy()
+        other._ids = self._ids.copy()
+        other._counts = self._counts.copy()
+        other._dim_means = self._dim_means.copy()
+        other._dim_vars = self._dim_vars.copy()
+        other.meta_staleness = self.meta_staleness
+        other.version = self.version
+        other.tiles_version = self.tiles_version
+        other.head_capacity = self.head_capacity
+        other._head_data = self._head_data.copy()
+        other._head_ids = self._head_ids.copy()
+        other._head_assign = self._head_assign.copy()
+        other._head_n = self._head_n
+        other.num_buckets = self.num_buckets
+        other._part_bucket = self._part_bucket.copy()
+        other._id_loc = dict(self._id_loc)
+        other._next_id = self._next_id
+        other._sum = self._sum.copy()
+        other._sumsq = self._sumsq.copy()
+        other._n_live = self._n_live
+        other._mutations_since_meta = self._mutations_since_meta
+        other._dev = None
+        other._dev_version = -1
+        return other
+
+    def adopt(self, other: "MutablePDXStore", *, expect_version: int) -> bool:
+        """Version-fenced swap: take ``other``'s state iff this store is
+        still at ``expect_version`` (i.e. no mutation landed since ``other``
+        was cloned from it).  Returns False — and changes nothing — when the
+        fence fails; the caller just discards the stale clone and re-clones
+        later.  On success the device cache is dropped (the adopted tiles
+        re-upload lazily) and both versions bump past every prior value, so
+        every version-keyed cache (executors, placements, mirrors)
+        invalidates."""
+        if self.version != expect_version:
+            return False
+        for attr in (
+            "_data", "_ids", "_counts", "_dim_means", "_dim_vars",
+            "_head_data", "_head_ids", "_head_assign", "_head_n",
+            "_part_bucket", "_id_loc", "_next_id",
+            "_sum", "_sumsq", "_n_live", "_mutations_since_meta",
+        ):
+            setattr(self, attr, getattr(other, attr))
+        self._dev = None
+        self._dev_version = -1
+        self._bump(tiles=True)
+        self._obs_mutation("adopt", self._n_live)
+        return True

@@ -100,9 +100,13 @@ from .topk import (
 
 __all__ = [
     "ExecutionPlan",
+    "PreparedSearch",
     "executor_names",
     "plan_search",
     "execute",
+    "prepare_execute",
+    "pow2_bucket",
+    "warm_shapes",
     "register_executor",
 ]
 
@@ -134,6 +138,20 @@ def register_executor(name: str):
 
 def executor_names() -> tuple[str, ...]:
     return tuple(_EXECUTORS)
+
+
+def pow2_bucket(n: int, cap: Optional[int] = None) -> int:
+    """Smallest power of two >= ``n`` (clamped to ``cap`` when given) — the
+    compiled-shape batch buckets of the serving tier, the same demand-octave
+    discipline ``dist.routing.plan_routing`` applies to send budgets: a
+    drifting load cycles through at most ``log2(cap) + 1`` distinct executor
+    shapes instead of minting one per batch size."""
+    if n < 1:
+        raise ValueError(f"batch size must be >= 1, got {n}")
+    b = 1
+    while b < n:
+        b *= 2
+    return b if cap is None else min(b, cap)
 
 
 # --------------------------------------------------------------------- planner
@@ -331,26 +349,146 @@ def execute(
         )
 
 
+@dataclasses.dataclass
+class PreparedSearch:
+    """The host half of one planned batch; ``run()`` performs the device
+    half.  Produced by ``prepare_execute`` so a serving loop can overlap
+    batch N+1's host-side planning (routing, send-buffer packing,
+    placement/cache lookups) with batch N's device collectives — the
+    double-buffering in ``repro.serve.vector``.  ``run()`` must be called
+    exactly once, and the store must not be mutated between ``prepare``
+    and ``run`` (the serving loop serializes both under its store lock /
+    executor thread)."""
+
+    plan: ExecutionPlan
+    spec: SearchSpec
+    _run: Callable[[], tuple[np.ndarray, np.ndarray]]
+
+    def run(self) -> tuple[np.ndarray, np.ndarray]:
+        return self._run()
+
+
+def prepare_execute(
+    plan: ExecutionPlan,
+    spec: SearchSpec,
+    store: PDXStore,
+    pruner: Pruner,
+    Q: jax.Array,
+    *,
+    ivf=None,
+    mesh=None,
+    stats: Optional[SearchStats] = None,
+) -> PreparedSearch:
+    """Split ``execute`` into host preparation (now) and device execution
+    (``PreparedSearch.run()``, later).
+
+    For ``routed_bucket`` the split is genuine: placement lookup, batch
+    transform, bucket ranking, exchange planning, and send-buffer packing
+    all happen here, and ``run()`` only fires the collectives.  For every
+    other executor the host share is negligible, so the whole ``execute``
+    is deferred into ``run()`` — callers get one uniform contract."""
+    if plan.executor == "routed_bucket":
+        launch, sel = _prepare_routed_host(
+            store, pruner, Q, spec, ivf=ivf, mesh=mesh
+        )
+
+        def _run():
+            with _trace.span("scan", executor=plan.executor,
+                             scan_dtype=spec.scan_dtype):
+                ids, dists = _run_routed_device(
+                    launch, sel, store, spec, ivf=ivf, stats=stats
+                )
+            with _trace.span("merge", executor=plan.executor):
+                return _merge_write_head(
+                    store, pruner, Q, spec, ids, dists, stats=stats
+                )
+
+        return PreparedSearch(plan=plan, spec=spec, _run=_run)
+
+    return PreparedSearch(
+        plan=plan, spec=spec,
+        _run=lambda: execute(
+            plan, spec, store, pruner, Q, ivf=ivf, mesh=mesh, stats=stats
+        ),
+    )
+
+
+def warm_shapes(
+    spec: SearchSpec,
+    store: PDXStore,
+    pruner: Pruner,
+    buckets,
+    *,
+    ivf=None,
+    mesh=None,
+) -> dict:
+    """Pre-compile the executor for each batch-shape bucket by pushing one
+    real synthetic batch per bucket through ``prepare_execute().run()`` —
+    seeding the jit shape caches, the placement/mirror caches, and (for
+    mutable stores) the static-shape write-head merge, so a serving loop's
+    steady state mints no new executables.  Returns {bucket: executor}.
+
+    On a routed mesh the all-to-all budget is data-dependent (a demand
+    octave per skew level); the warmup batch spreads queries across the
+    batch index, which warms the common low-demand octave — the first
+    heavily skewed batch may still compile its (single) spilled shape."""
+    out = {}
+    D = store.dim
+    rng = np.random.default_rng(0)
+    for b in sorted(set(int(x) for x in buckets)):
+        Qb = rng.standard_normal((b, D)).astype(np.float32)
+        plan = plan_search(
+            spec, store, b, pruner=pruner, ivf=ivf, mesh=mesh
+        )
+        prepare_execute(
+            plan, spec, store, pruner, jnp.asarray(Qb), ivf=ivf, mesh=mesh
+        ).run()
+        if getattr(store, "head_capacity", None):
+            # churn serving inserts into the head mid-stream: warm the
+            # (bucket, head_capacity) merge executable even while empty
+            H = jnp.full((store.head_capacity, D), 0.0, jnp.float32)
+            Qt = _transform_batch(pruner, jnp.asarray(Qb))
+            _head_distances(H, Qt, spec.metric)
+        out[b] = plan.executor
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("metric",))
+def _head_distances(H, Qt, metric):
+    """(H_cap, D) full head buffer x (B, D) queries -> (B, H_cap) distances.
+    Shape-static in the head CAPACITY, not the live count: under serving
+    churn the fill level changes every insert, and a fill-shaped trace
+    would mint one executable per distinct fill — this is one executable
+    per (B, head_capacity) pair, warmed once by ``warm_shapes``."""
+    return jax.vmap(lambda q: nary_distance(H, q, metric))(Qt)
+
+
 def _merge_write_head(
     store, pruner: Pruner, Q: jax.Array, spec: SearchSpec,
     ids: np.ndarray, dists: np.ndarray,
     stats: Optional[SearchStats] = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Merge the store's live write-head rows into the (B, k) top-k — exact,
-    unpruned, in the pruner-transformed space the sealed tiles live in."""
-    head_live = getattr(store, "head_live", None)
-    if head_live is None:
+    unpruned, in the pruner-transformed space the sealed tiles live in.
+
+    The distance pass runs over the FULL head buffer (dead rows masked to
+    +inf host-side) so its compiled shape depends only on ``head_capacity``
+    and the batch bucket — never on the drifting fill level."""
+    head_snapshot = getattr(store, "head_snapshot", None)
+    if head_snapshot is None:
         return ids, dists
-    hids, hvecs = head_live()
-    if len(hids) == 0:
+    hids, hvecs = head_snapshot()                    # full (H,), (H, D)
+    live = hids >= 0
+    m = int(live.sum())
+    if m == 0:
         return ids, dists
     Qt = _transform_batch(pruner, Q)                             # (B, D)
-    H = jnp.asarray(hvecs, jnp.float32)                          # (m, D)
     hd = np.asarray(
-        jax.vmap(lambda q: nary_distance(H, q, spec.metric))(Qt)
-    )  # (B, m)
-    if stats is not None:  # the head is scanned in full, never pruned
-        work = float(hd.size * H.shape[1])
+        _head_distances(jnp.asarray(hvecs, jnp.float32), Qt, spec.metric)
+    )  # (B, H)
+    hd = np.where(live[None, :], hd, np.inf)
+    if stats is not None:  # the LIVE head rows are scanned in full, unpruned
+        work = float(len(Q) * m * hvecs.shape[1])
         stats.values_total += work
         stats.values_computed += work
     all_d = np.concatenate([dists.astype(np.float32), hd.astype(np.float32)],
@@ -765,12 +903,10 @@ def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
     return np.asarray(res.ids), np.asarray(res.dists)
 
 
-@register_executor("routed_bucket")
-def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
-    """Bucket-routed distributed search: queries travel to the shards that
-    own their top-nprobe buckets (one all-to-all + one packed all-gather
-    per batch — see ``repro.dist.routing``).  Exact over each query's
-    selected buckets; with nprobe >= nlist it equals the exact full scan."""
+def _prepare_routed_host(store, pruner, Q, spec, *, ivf, mesh):
+    """Host half of the routed executor: placement lookup, batch transform,
+    bucket ranking, exchange planning, send-buffer packing.  No collective
+    fires here — that's ``_run_routed_device``'s job."""
     if ivf is None:
         raise ValueError("routed_bucket executor needs an IVF index")
     if mesh is None or "data" not in getattr(mesh, "axis_names", ()):
@@ -778,7 +914,7 @@ def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
             "routed_bucket executor needs a mesh with a 'data' axis, got "
             f"{mesh!r}"
         )
-    from ..dist.routing import search_routed_bucket
+    from ..dist.routing import prepare_routed
 
     pl = _get_placement(store, mesh.shape["data"], "bucket", ivf=ivf)
     Qt = _transform_batch(pruner, Q)
@@ -787,10 +923,19 @@ def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
         device_mirror(store, spec.scan_dtype)
         if spec.scan_dtype != "f32" else None
     )
-    res = search_routed_bucket(
+    launch = prepare_routed(
         mesh, pl, Qt, sel, spec.k, metric=spec.metric,
         mirror=mirror, rerank_mult=spec.rerank_mult,
     )
+    return launch, sel
+
+
+def _run_routed_device(launch, sel, store, spec, *, ivf, stats):
+    """Device half: fire the prepared exchange + scan + merge collectives,
+    then account the selected-bucket work."""
+    from ..dist.routing import launch_routed
+
+    res = launch_routed(launch)
     if stats is not None:
         # exact over each query's selected buckets: every live value in a
         # probed bucket is computed, everything outside is avoided by
@@ -811,3 +956,20 @@ def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
         stats.values_computed += work
         stats.partitions_visited += int(np.where(valid, pc[safe], 0).sum())
     return np.asarray(res.ids), np.asarray(res.dists)
+
+
+@register_executor("routed_bucket")
+def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Bucket-routed distributed search: queries travel to the shards that
+    own their top-nprobe buckets (one all-to-all + one packed all-gather
+    per batch — see ``repro.dist.routing``).  Exact over each query's
+    selected buckets; with nprobe >= nlist it equals the exact full scan.
+
+    Split into ``_prepare_routed_host`` (placement, routing plan, buffer
+    packing) and ``_run_routed_device`` (collectives) so a serving loop can
+    overlap batch N+1's host planning with batch N's device work — the
+    blocking path here is simply the two halves back to back."""
+    launch, sel = _prepare_routed_host(
+        store, pruner, Q, spec, ivf=ivf, mesh=mesh
+    )
+    return _run_routed_device(launch, sel, store, spec, ivf=ivf, stats=stats)

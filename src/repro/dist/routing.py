@@ -71,9 +71,12 @@ from .placement import Placement
 
 __all__ = [
     "RoutingPlan",
+    "RoutedLaunch",
     "plan_routing",
     "build_send_buffer",
     "make_routed_fn",
+    "prepare_routed",
+    "launch_routed",
     "search_routed_bucket",
 ]
 
@@ -362,7 +365,32 @@ def make_routed_fn(mesh, placement: Placement, rp: RoutingPlan, D: int,
     )
 
 
-def search_routed_bucket(
+@dataclasses.dataclass
+class RoutedLaunch:
+    """Host-side product of ``prepare_routed``: everything needed to fire
+    the device half of one routed batch.  Splitting lets a serving loop
+    overlap batch N+1's host work (``plan_routing`` + send-buffer packing +
+    executor-cache lookup) with batch N's device collectives — the
+    double-buffering in ``repro.serve.vector``."""
+
+    fn: object           # bound routed executor: send buffer -> (B, k) TopK
+    buf: jax.Array       # packed send buffer, already on device
+    buf_shape: tuple     # host buffer shape (compile-collectives cache key)
+    rp: RoutingPlan
+    n_shards: int
+    D: int
+    C: int
+    num_slots: int
+    nprobe: int
+    k: int
+    metric: str
+    quantized: bool
+    mirror_dtype: str
+    mirror_bpv: int
+    rerank_mult: int
+
+
+def prepare_routed(
     mesh,
     placement: Placement,
     Q: jax.Array,
@@ -372,19 +400,13 @@ def search_routed_bucket(
     metric: str = "l2",
     mirror=None,
     rerank_mult: int = 4,
-) -> TopK:
-    """Routed batch search over a ``bucket`` placement.
+) -> RoutedLaunch:
+    """The HOST half of a routed batch search: exchange planning, send-
+    buffer packing, executor-cache binding, and the (async) device upload.
+    No collective is issued here — ``launch_routed`` fires the exchange.
 
     ``Q`` (B, D) — pruner-transformed queries; ``sel`` (B, nprobe) — ranked
-    bucket ids per query (``IVFIndex.route_batch``).  Exact over the union
-    of each query's selected buckets: the masked scan computes full
-    distances (never prunes), so with nprobe == nlist this equals the exact
-    full scan.  With a reduced-precision ``mirror`` the shard scan streams
-    mirror-width bytes; the on-shard f32 re-rank keeps the merged
-    candidates exact, and the wire stays f32 (see the module docstring for
-    why rounding it breaks the k-boundary).  Returns a replicated (B, k)
-    TopK.
-    """
+    bucket ids per query (``IVFIndex.route_batch``)."""
     if placement.kind != "bucket":
         raise ValueError(
             f"routed search needs a 'bucket' placement, got {placement.kind!r}"
@@ -403,34 +425,78 @@ def search_routed_bucket(
             mesh, placement, rp, Qnp.shape[1], selnp.shape[1], k, metric,
             mirror=mirror if quantized else None, rerank_mult=rerank_mult,
         )
-    bufj = jnp.asarray(buf)
+    return RoutedLaunch(
+        fn=fn, buf=jnp.asarray(buf), buf_shape=buf.shape, rp=rp,
+        n_shards=placement.n_shards, D=Qnp.shape[1],
+        C=placement.data.shape[2], num_slots=placement.num_slots,
+        nprobe=selnp.shape[1], k=k, metric=metric, quantized=quantized,
+        mirror_dtype=mirror.dtype if quantized else "f32",
+        mirror_bpv=mirror.bytes_per_value if quantized else 4,
+        rerank_mult=rerank_mult,
+    )
+
+
+def launch_routed(launch: RoutedLaunch) -> TopK:
+    """The DEVICE half: issue the all-to-all exchange + masked shard scan +
+    packed all-gather merge for a prepared batch; returns the replicated
+    (B, k) TopK.  Also the metrics point — bytes/collectives are recorded
+    when the exchange actually fires, not when it is planned."""
     if _metrics.enabled():
         from ..obs import meters as _meters
 
-        rounds = 2 if rp.round_budgets[1] else 1
+        rounds = 2 if launch.rp.round_budgets[1] else 1
         _meters.count_issued("routed_bucket", all_to_all=rounds, all_gather=1)
         comps = _meters.routed_batch_bytes(
-            rp, n_shards=placement.n_shards, D=Qnp.shape[1],
-            C=placement.data.shape[2], num_slots=placement.num_slots,
-            nprobe=selnp.shape[1], k=k,
-            bytes_per_value=mirror.bytes_per_value if quantized else 4,
-            rerank_mult=rerank_mult, quantized=quantized,
+            launch.rp, n_shards=launch.n_shards, D=launch.D,
+            C=launch.C, num_slots=launch.num_slots,
+            nprobe=launch.nprobe, k=launch.k,
+            bytes_per_value=launch.mirror_bpv,
+            rerank_mult=launch.rerank_mult, quantized=launch.quantized,
         )
         _meters.record_device_bytes(
-            "routed_bucket", mirror.dtype if quantized else "f32", comps
+            "routed_bucket", launch.mirror_dtype, comps
         )
         # compile-time gauge: count the collectives in the traced jaxpr
         # once per executor shape; parity with the issued counters above is
         # a CI invariant (benchmarks/bench_obs.py)
         _meters.record_compile_collectives(
             "routed_bucket",
-            (buf.shape, rp.round_budgets, quantized, k, metric,
-             placement.n_shards),
-            fn, bufj,
+            (launch.buf_shape, launch.rp.round_budgets, launch.quantized,
+             launch.k, launch.metric, launch.n_shards),
+            launch.fn, launch.buf,
         )
-    if quantized:
+    if launch.quantized:
         # the exact f32 re-rank runs fused on-shard, pre-collective — a
         # zero-width annotation span marks it in the trace
-        with _trace.span("rerank", fused="on-shard", rk=rerank_mult * k):
+        with _trace.span("rerank", fused="on-shard",
+                         rk=launch.rerank_mult * launch.k):
             pass
-    return _trace.fence(fn(bufj))
+    return _trace.fence(launch.fn(launch.buf))
+
+
+def search_routed_bucket(
+    mesh,
+    placement: Placement,
+    Q: jax.Array,
+    sel: np.ndarray,
+    k: int,
+    *,
+    metric: str = "l2",
+    mirror=None,
+    rerank_mult: int = 4,
+) -> TopK:
+    """Routed batch search over a ``bucket`` placement — the synchronous
+    composition ``launch_routed(prepare_routed(...))``.
+
+    Exact over the union of each query's selected buckets: the masked scan
+    computes full distances (never prunes), so with nprobe == nlist this
+    equals the exact full scan.  With a reduced-precision ``mirror`` the
+    shard scan streams mirror-width bytes; the on-shard f32 re-rank keeps
+    the merged candidates exact, and the wire stays f32 (see the module
+    docstring for why rounding it breaks the k-boundary).  Returns a
+    replicated (B, k) TopK.
+    """
+    return launch_routed(prepare_routed(
+        mesh, placement, Q, sel, k, metric=metric, mirror=mirror,
+        rerank_mult=rerank_mult,
+    ))

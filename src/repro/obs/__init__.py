@@ -63,6 +63,27 @@ families:
                                                 all_to_all|all_gather|
                                                 broadcast
     repro_rag_retrievals_total{executor}        serve-layer retrieval queries
+    repro_serve_batches_total{bucket,executor,shed}
+                                                executed serving batches per
+                                                pow2 shape bucket
+    repro_serve_queries_total                   queries completed by the server
+    repro_serve_rejected_total                  submits refused (queue full)
+    repro_serve_shed_total{action}              overload sheds (action=nprobe)
+    repro_serve_deadline_expired_total{where}   where=queue|result
+    repro_serve_maintenance_total{event}        event=swap|discard — version-
+                                                fenced background repack
+                                                adoptions vs stale clones
+    repro_serve_queue_depth                     gauge, admission queue depth
+    repro_serve_jit_compiles                    gauge, process-wide XLA
+                                                compiles observed (the
+                                                zero-recompile-after-warmup
+                                                gate)
+    repro_serve_batch_fill{bucket}              histogram, real / padded lanes
+    repro_serve_queue_wait_seconds              histogram, submit -> execution
+    repro_serve_latency_seconds                 histogram, submit -> result
+
+(``repro_store_mutations_total`` also records ``op=adopt`` — a background
+repack swapped in by ``MutablePDXStore.adopt``.)
 
 Span taxonomy
 -------------
@@ -80,6 +101,13 @@ the whole call); phases nest under it:
             quantized paths it runs fused on-shard inside the scan and is
             recorded as a zero-width annotation span (``fused="on-shard"``)
     merge   write-head merge + final top-k assembly
+
+Served queries (``repro.serve.vector``) cross threads: the trace is opened
+with ``trace.start_query`` where the batch forms, bound on the executor
+thread with ``trace.use``, and prefixed with a ``queue`` span
+(``trace.span_at``) covering the admission wait — the per-thread current
+trace plus the shared finished-trace ring make concurrent worker traces
+land in one place.
 
 ``SearchResult.trace`` carries the ``QueryTrace``;
 ``VectorSearchEngine.metrics()`` / ``dump_trace(path)`` surface the registry

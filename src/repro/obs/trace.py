@@ -12,6 +12,25 @@ Disabled mode (``obs.metrics.enabled() == False``) is a strict no-op: the
 module-level ``query``/``span`` helpers return shared null context
 managers, allocate nothing, touch no thread-local state, and never force a
 device sync.
+
+Threading model
+---------------
+The *current* trace is thread-local: concurrent searches on different
+threads each record into their own ``QueryTrace`` and all finished traces
+land in the one shared, lock-guarded ring — ``engine.metrics()`` /
+``dump_trace()`` aggregate across every thread.  For serving loops where a
+query's lifecycle crosses threads (enqueued on a caller thread, executed on
+a worker), the context-manager API splits into explicit halves:
+
+    trace = tracer.start_query(bucket=8)      # any thread, no binding
+    with tracer.use(trace):                   # bind on the worker thread
+        tracer.span_at("queue", t_enq, t_run) # record the already-elapsed wait
+        ... spans recorded by the engine land on `trace` ...
+    tracer.finish_query(trace)                # any thread -> shared ring
+
+``finish_query`` unbinds the trace only from threads where it is current
+(via ``use``), so finishing on thread B never leaves thread A's
+thread-local pointing at a dead trace.
 """
 from __future__ import annotations
 
@@ -31,6 +50,10 @@ __all__ = [
     "get_tracer",
     "query",
     "span",
+    "span_at",
+    "start_query",
+    "finish_query",
+    "use",
     "fence",
     "current_trace",
 ]
@@ -133,6 +156,33 @@ class _QueryCtx:
         return False
 
 
+class _UseCtx:
+    """Binds an explicitly started trace as the calling thread's current
+    trace for the duration of the block, restoring the previous binding on
+    exit — a worker thread in a pool never inherits a stale current trace
+    from an earlier query it executed."""
+
+    __slots__ = ("_tracer", "_trace", "_prev", "_prev_depth")
+
+    def __init__(self, tracer: "Tracer", trace: QueryTrace):
+        self._tracer = tracer
+        self._trace = trace
+
+    def __enter__(self) -> QueryTrace:
+        tl = self._tracer._tl
+        self._prev = getattr(tl, "current", None)
+        self._prev_depth = getattr(tl, "depth", 0)
+        tl.current = self._trace
+        tl.depth = 0
+        return self._trace
+
+    def __exit__(self, *exc):
+        tl = self._tracer._tl
+        tl.current = self._prev
+        tl.depth = self._prev_depth
+        return False
+
+
 class Tracer:
     """Span recorder: per-thread current trace, bounded ring of finished
     traces, Chrome/Perfetto JSON export."""
@@ -164,6 +214,49 @@ class Tracer:
             return _NULL_CTX
         return _SpanCtx(self, trace, name, attrs)
 
+    def span_at(self, name: str, t0: float, t1: float, **attrs) -> None:
+        """Record an already-elapsed interval as a span on the current trace
+        (e.g. the queue wait a batcher measured before the worker thread
+        bound the trace).  No-op when disabled or outside a trace."""
+        trace = getattr(self._tl, "current", None)
+        if trace is None or not _metrics.enabled():
+            return
+        trace.spans.append(Span(
+            name=name, t0=float(t0), t1=float(t1),
+            depth=getattr(self._tl, "depth", 0), attrs=attrs,
+        ))
+
+    # -------------------------------------------- cross-thread serving API
+    def start_query(self, **attrs) -> Optional[QueryTrace]:
+        """Allocate an open ``QueryTrace`` WITHOUT binding it to the calling
+        thread — the first half of the cross-thread lifecycle (a serving
+        loop starts the trace where the batch is formed and binds it on the
+        worker that executes it, via ``use``).  Returns ``None`` when
+        observability is disabled; every other API accepts that ``None``."""
+        if not _metrics.enabled():
+            return None
+        with self._lock:
+            tid = self._next_id
+            self._next_id += 1
+        return QueryTrace(trace_id=tid, t0=time.perf_counter(), attrs=attrs)
+
+    def use(self, trace: Optional[QueryTrace]):
+        """Context manager binding ``trace`` as the calling thread's current
+        trace: ``span``/``span_at`` (and everything the engine records under
+        an existing trace) land on it.  A shared no-op for ``trace=None``."""
+        if trace is None:
+            return _NULL_CTX
+        return _UseCtx(self, trace)
+
+    def finish_query(self, trace: Optional[QueryTrace]) -> None:
+        """Close an explicitly started trace and append it to the shared
+        ring.  Callable from any thread: the trace is unbound only where it
+        is actually current, so finishing on a worker thread never leaves
+        the starting thread's thread-local pointing at a dead trace."""
+        if trace is None:
+            return
+        self._finish(trace)
+
     def _start(self, attrs: dict) -> QueryTrace:
         with self._lock:
             tid = self._next_id
@@ -175,7 +268,11 @@ class Tracer:
 
     def _finish(self, trace: QueryTrace) -> None:
         trace.t1 = time.perf_counter()
-        self._tl.current = None
+        # unbind only if current HERE: a trace finished on thread B must not
+        # clobber thread A's binding (the pre-serving code unconditionally
+        # cleared the finisher's slot, which dangled cross-thread traces)
+        if getattr(self._tl, "current", None) is trace:
+            self._tl.current = None
         with self._lock:
             self._ring.append(trace)
 
@@ -230,6 +327,22 @@ def query(**attrs):
 
 def span(name: str, **attrs):
     return _TRACER.span(name, **attrs)
+
+
+def span_at(name: str, t0: float, t1: float, **attrs) -> None:
+    _TRACER.span_at(name, t0, t1, **attrs)
+
+
+def start_query(**attrs) -> Optional[QueryTrace]:
+    return _TRACER.start_query(**attrs)
+
+
+def use(trace: Optional[QueryTrace]):
+    return _TRACER.use(trace)
+
+
+def finish_query(trace: Optional[QueryTrace]) -> None:
+    _TRACER.finish_query(trace)
 
 
 def current_trace() -> Optional[QueryTrace]:

@@ -1,0 +1,38 @@
+"""Online serving tier.
+
+Two serving paths live here:
+
+* **Vector search** (the PDX side): ``VectorServer`` in
+  :mod:`repro.serve.vector` — continuous batching over a
+  ``VectorSearchEngine`` with pow2 compiled-shape buckets, deadline /
+  backpressure admission (:mod:`repro.serve.batcher`), host-plan /
+  device-run overlap, and background store maintenance behind a version
+  fence.
+* **LM generation**: ``GenerationEngine`` in :mod:`repro.serve.engine`
+  (prefill + jitted decode loop) and the retrieval-augmented pipeline in
+  :mod:`repro.serve.rag` that joins the two.
+"""
+from .batcher import (
+    AdmissionQueue,
+    DeadlineExceeded,
+    QueryItem,
+    ServeError,
+    ServerClosed,
+    ServerOverloaded,
+    pad_batch,
+    shape_bucket,
+)
+from .vector import VectorServer, jit_compile_count
+
+__all__ = [
+    "VectorServer",
+    "jit_compile_count",
+    "AdmissionQueue",
+    "QueryItem",
+    "ServeError",
+    "ServerOverloaded",
+    "ServerClosed",
+    "DeadlineExceeded",
+    "shape_bucket",
+    "pad_batch",
+]

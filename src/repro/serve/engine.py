@@ -1,8 +1,14 @@
-"""Batched serving engine: prefill + jitted greedy/temperature decode loop.
+"""Batched LM serving engine: prefill + jitted greedy/temperature decode.
 
-The serve-side counterpart of the dry-run's ``prefill``/``decode`` steps; on
-a real mesh the same functions run under jit with the sharding rules from
-repro.dist.sharding (decode caches batch- or sequence-sharded).
+One of the package's two serving paths — this module is the *generation*
+side (the serve-side counterpart of the dry-run's ``prefill``/``decode``
+steps; on a real mesh the same functions run under jit with the sharding
+rules from repro.dist.sharding, decode caches batch- or sequence-sharded).
+The *vector-search* side is ``repro.serve.vector.VectorServer``: an async
+continuous-batching front end over ``VectorSearchEngine`` with pow2
+compiled-shape buckets, deadline/backpressure admission, and background
+store maintenance — ``repro.serve.rag`` joins the two into a
+retrieval-augmented pipeline.
 """
 from __future__ import annotations
 

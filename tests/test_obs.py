@@ -317,3 +317,100 @@ def test_routed_collective_meters_and_trace_8dev():
     assert scan_b > 0 and a2a_b > 0 and rr_b > 0
     print("OK")
     """)
+
+
+# ---------------------------------------------------------------------------
+# Thread-locality: concurrent worker traces + cross-thread query lifecycle
+# ---------------------------------------------------------------------------
+def test_concurrent_worker_traces_land_in_shared_ring(obs):
+    """N worker threads x M searches each: every query trace must land in
+    the one shared ring with the full span taxonomy, and the aggregated
+    registry (engine.metrics()) must account every query."""
+    import threading
+
+    X, Q = make_dataset(n=512, dim=16, n_queries=8, seed=0)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=128)
+    tr = trace.get_tracer()
+    tr.clear()
+    n_threads, per_thread = 4, 5
+    errs = []
+
+    def worker(t):
+        try:
+            for i in range(per_thread):
+                eng.search(Q[(t + i) % len(Q)], k=3)
+        except Exception as e:  # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs
+    traces = tr.traces()
+    assert len(traces) == n_threads * per_thread
+    for qt in traces:
+        assert qt.t1 > qt.t0
+        assert "plan" in qt.span_names() and "scan" in qt.span_names()
+    snap = eng.metrics()
+    total = sum(
+        snap["counters"]["repro_search_queries_total"].values()
+    )
+    assert total == n_threads * per_thread
+
+
+def test_cross_thread_query_lifecycle_no_dangling_current(obs):
+    """start_query on one thread, use/span on a worker, finish on a third:
+    the trace lands in the ring with its spans, and NO thread is left with
+    a dangling current trace."""
+    import threading
+
+    tr = trace.get_tracer()
+    tr.clear()
+    qt = tr.start_query(bucket=4)
+    assert qt is not None and trace.current_trace() is None  # not bound here
+
+    def worker():
+        with tr.use(qt):
+            assert trace.current_trace() is qt
+            tr.span_at("queue", qt.t0, qt.t0 + 0.001, depth_at_drain=3)
+            with tr.span("scan", executor="batch-matmul"):
+                pass
+        assert trace.current_trace() is None
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+
+    def finisher():
+        tr.finish_query(qt)
+
+    th2 = threading.Thread(target=finisher)
+    th2.start()
+    th2.join()
+    assert trace.current_trace() is None        # starter thread not clobbered
+    assert tr.last() is qt
+    assert qt.span_names() == ("queue", "scan")
+    assert qt.find("queue").attrs["depth_at_drain"] == 3
+    # a new query on this thread still traces normally (no stale binding)
+    with tr.query(n_queries=1) as q2:
+        assert q2 is not None and q2 is not qt
+    assert len(tr.traces()) == 2
+
+
+def test_use_restores_previous_binding(obs):
+    """A worker interleaving a served trace inside its own query context
+    gets its own binding back afterwards (use() is re-entrant-safe)."""
+    tr = trace.get_tracer()
+    tr.clear()
+    served = tr.start_query()
+    with tr.query() as outer:
+        with tr.use(served):
+            assert trace.current_trace() is served
+        assert trace.current_trace() is outer
+    tr.finish_query(served)
+    assert {t.trace_id for t in tr.traces()} == {
+        served.trace_id, outer.trace_id
+    }

@@ -74,3 +74,234 @@ def test_rag_add_documents_live():
     # the full pipeline prepends the right doc tokens
     out, doc_ids = rag.answer({"tokens": extra[1:2]}, max_new_tokens=2)
     assert doc_ids[0, 0] == 13 and out.shape == (1, 2)
+
+
+# ---------------------------------------------------------------------------
+# Vector-serving tier: batcher primitives + VectorServer
+# ---------------------------------------------------------------------------
+import threading
+import time
+from concurrent.futures import Future
+
+import pytest
+
+from repro.core.engine import VectorSearchEngine
+from repro.serve.batcher import (
+    AdmissionQueue,
+    DeadlineExceeded,
+    QueryItem,
+    ServerClosed,
+    ServerOverloaded,
+    pad_batch,
+    shape_bucket,
+)
+from repro.serve.vector import VectorServer, jit_compile_count
+
+
+def _item(spec="s", deadline=None, q=None):
+    return QueryItem(
+        query=q if q is not None else np.zeros(4, np.float32),
+        spec=spec,
+        future=Future(),
+        t_enqueue=time.perf_counter(),
+        deadline=deadline,
+    )
+
+
+def _vec_engine(n=1024, dim=32, seed=0, **kw):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((n, dim)).astype(np.float32)
+    eng = VectorSearchEngine.build(
+        X, pruner=kw.pop("pruner", "adsampling"),
+        capacity=kw.pop("capacity", 256), **kw,
+    )
+    return eng, X
+
+
+def test_shape_bucket_pow2():
+    assert [shape_bucket(n, 64) for n in (1, 2, 3, 5, 8, 9, 64)] == [
+        1, 2, 4, 8, 8, 16, 64
+    ]
+    assert shape_bucket(100, 64) == 64
+    with pytest.raises(ValueError):
+        shape_bucket(0, 64)
+
+
+def test_pad_batch_repeats_last_row():
+    Q = np.arange(12, dtype=np.float32).reshape(3, 4)
+    P = pad_batch(Q, 8)
+    assert P.shape == (8, 4)
+    np.testing.assert_array_equal(P[3:], np.repeat(Q[-1:], 5, axis=0))
+    assert pad_batch(Q, 3) is Q
+    with pytest.raises(ValueError):
+        pad_batch(Q, 2)
+
+
+def test_admission_queue_empty_flush_times_out():
+    q = AdmissionQueue(8)
+    t0 = time.perf_counter()
+    batch, expired = q.drain(4, window_s=0.0, timeout_s=0.02)
+    assert batch == [] and expired == []
+    assert time.perf_counter() - t0 < 1.0
+
+
+def test_admission_queue_deadline_expiry_mid_queue():
+    q = AdmissionQueue(8)
+    live = _item()
+    dead = _item(deadline=time.perf_counter() - 1.0)
+    live2 = _item()
+    for it in (live, dead, live2):
+        assert q.put(it)
+    batch, expired = q.drain(4, timeout_s=0.1)
+    assert batch == [live, live2]
+    assert expired == [dead]
+    assert len(q) == 0
+
+
+def test_admission_queue_groups_by_spec_preserving_order():
+    q = AdmissionQueue(8)
+    a1, b1, a2 = _item("a"), _item("b"), _item("a")
+    for it in (a1, b1, a2):
+        q.put(it)
+    batch, _ = q.drain(4, timeout_s=0.1)
+    assert batch == [a1, a2]          # same-spec coalesced
+    batch2, _ = q.drain(4, timeout_s=0.1)
+    assert batch2 == [b1]             # different spec waited its turn
+
+
+def test_admission_queue_backpressure_and_close():
+    q = AdmissionQueue(2)
+    assert q.put(_item()) and q.put(_item())
+    assert not q.put(_item())          # full -> reject, never block
+    q.close()
+    with pytest.raises(ServerClosed):
+        q.put(_item())
+    # closed but non-empty: drain still returns the queued work
+    batch, _ = q.drain(4, timeout_s=0.1)
+    assert len(batch) == 2
+    assert q.drain(4, timeout_s=0.1) == ([], [])
+
+
+def test_server_single_query_smallest_bucket_no_recompile():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=5, executor="batch-matmul")
+    with VectorServer(eng, spec=spec, max_batch=8) as srv:
+        srv.warmup()
+        ids, dists = srv.search(X[3])
+        assert ids.shape == (5,) and ids[0] == 3
+        assert srv.jit_compiles_since_warmup() == 0
+
+
+def test_server_matches_engine_results():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=10, executor="batch-matmul")
+    ref = eng.search(X[:6], spec)
+    with VectorServer(eng, spec=spec, max_batch=8) as srv:
+        futs = [srv.submit(X[i]) for i in range(6)]
+        for i, f in enumerate(futs):
+            ids, dists = f.result(timeout=30)
+            np.testing.assert_array_equal(ids, np.asarray(ref.ids)[i])
+
+
+def test_server_shutdown_drains_in_flight():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=5, executor="batch-matmul")
+    srv = VectorServer(eng, spec=spec, max_batch=4, flush_interval_s=0.0)
+    futs = [srv.submit(X[i]) for i in range(12)]
+    srv.close(drain=True)
+    for i, f in enumerate(futs):
+        ids, _ = f.result(timeout=1)   # already done: drain completed them
+        assert ids[0] == i
+    with pytest.raises(ServerClosed):
+        srv.submit(X[0])
+
+
+def test_server_close_without_drain_fails_queued():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=5, executor="batch-matmul")
+    srv = VectorServer(eng, spec=spec, max_batch=4)
+    futs = [srv.submit(X[i]) for i in range(8)]
+    srv.close(drain=False)
+    outcomes = set()
+    for f in futs:
+        try:
+            f.result(timeout=1)
+            outcomes.add("ok")
+        except ServerClosed:
+            outcomes.add("closed")
+    assert "closed" in outcomes        # at least the still-queued ones failed
+
+
+def test_server_deadline_exceeded():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=5, executor="batch-matmul")
+    with VectorServer(eng, spec=spec, max_batch=4) as srv:
+        fut = srv.submit(X[0], timeout_s=-0.001)   # already expired
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=30)
+
+
+def test_server_overload_rejects():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=5, executor="batch-matmul")
+    srv = VectorServer(eng, spec=spec, max_batch=1, queue_depth=1,
+                       flush_interval_s=0.0)
+    # stall the executor stage so submissions pile up in the bounded queue
+    rejected = 0
+    try:
+        for i in range(200):
+            try:
+                srv.submit(X[i % len(X)])
+            except ServerOverloaded:
+                rejected += 1
+                break
+        assert rejected >= 1
+    finally:
+        srv.close(drain=True)
+
+
+def test_server_mutations_and_version_fenced_maintenance():
+    eng, X = _vec_engine()
+    spec = eng.spec.replace(k=5, executor="batch-matmul")
+    with VectorServer(eng, spec=spec, max_batch=8,
+                      maintenance_interval_s=0.02,
+                      head_fill_threshold=0.0) as srv:
+        rng = np.random.default_rng(1)
+        V = rng.standard_normal((4, X.shape[1])).astype(np.float32)
+        new_ids = srv.insert(V).result(timeout=30)
+        assert len(new_ids) == 4
+        # a freshly inserted vector is immediately searchable via the server
+        ids, _ = srv.search(V[2])
+        assert ids[0] == new_ids[2]
+        assert srv.delete([int(new_ids[0])]).result(timeout=30) == 1
+        deadline = time.time() + 10
+        while time.time() < deadline:
+            if getattr(eng.store, "head_count", 1) == 0:
+                break                   # background repack drained the head
+            time.sleep(0.02)
+        assert eng.store.head_count == 0
+        ids, _ = srv.search(V[2])       # survives the adopted repack
+        assert ids[0] == new_ids[2]
+
+
+def test_store_adopt_version_fence():
+    from repro.core.layout import MutablePDXStore, build_flat_store
+
+    rng = np.random.default_rng(0)
+    X = rng.standard_normal((100, 8)).astype(np.float32)
+    ms = MutablePDXStore.from_store(build_flat_store(X, capacity=32),
+                                    head_capacity=16)
+    ms.insert(rng.standard_normal((2, 8)).astype(np.float32))
+    base = ms.version
+    clone = ms.clone()
+    clone.repack()
+    # a mutation lands between clone and adopt -> the swap must be refused
+    ms.insert(rng.standard_normal((1, 8)).astype(np.float32))
+    assert not ms.adopt(clone, expect_version=base)
+    assert ms.num_vectors == 103
+    # retry against the now-current version succeeds
+    base2 = ms.version
+    clone2 = ms.clone()
+    clone2.repack()
+    assert ms.adopt(clone2, expect_version=base2)
+    assert ms.num_vectors == 103 and ms.head_count == 0
