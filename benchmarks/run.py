@@ -14,6 +14,7 @@ import traceback
 
 MODULES = [
     ("table4", "benchmarks.bench_kernels"),
+    ("cascade", "benchmarks.bench_cascade"),
     ("table5", "benchmarks.bench_blocksize"),
     ("fig6", "benchmarks.bench_ivf_ads"),
     ("fig7", "benchmarks.bench_adaptive"),

@@ -25,8 +25,8 @@ into host-side routing):
     eng = VectorSearchEngine.build(X, index="ivf", mesh=mesh)
     res = eng.search(Q, SearchSpec(k=10, nprobe=4))  # -> "routed_bucket"
 
-Migration from the pre-spec API (old entry points remain as deprecated
-shims for one release):
+Migration from the pre-spec API (the deprecated ``search_jit``/
+``search_batch`` shims have been removed; equivalents below):
 
     old call / kwarg                        spec/plan equivalent
     --------------------------------------  --------------------------------
@@ -76,12 +76,22 @@ stream 2 or 1 bytes per dimension value through the hot loop (on a mesh,
 through every shard's scan) while the top ``rerank_mult * k`` candidates
 are re-ranked against the f32 masters — returned distances stay exact.
 ``build(scan_dtype=..., kernel=...)`` seeds the engine's default spec.
+
+Multi-resolution cascades compose those precisions per query
+(``SearchSpec.cascade``): a skinny projection mirror scans first, a packed
+int4/int8 full-dimension pass covers its survivors (HBM traffic for pruned
+partitions is skipped outright on the Pallas path), and the exact f32
+re-rank terminates the pipeline —
+
+    eng.search(Q, SearchSpec(cascade=("proj32:int8", "int4", "f32")))
+
+``SearchSpec.route_dtype`` applies the same dtype policy to the IVF
+centroid-routing scan.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-import warnings
 from typing import Any, Optional
 
 import jax.numpy as jnp
@@ -172,6 +182,8 @@ class VectorSearchEngine:
         scan_dtype: str = "f32",
         kernel: str = "auto",
         rerank_mult: int = 4,
+        cascade: Optional[tuple] = None,
+        route_dtype: str = "f32",
     ) -> "VectorSearchEngine":
         X = np.ascontiguousarray(np.asarray(X, np.float32))
         pr = _make_pruner(
@@ -195,7 +207,8 @@ class VectorSearchEngine:
                 metric=metric, schedule=schedule, delta_d=delta_d,
                 sel_frac=sel_frac, group=group, routing=routing,
                 scan_dtype=scan_dtype, kernel=kernel,
-                rerank_mult=rerank_mult,
+                rerank_mult=rerank_mult, cascade=cascade,
+                route_dtype=route_dtype,
             )
         return cls(store=store, pruner=pr, spec=spec, ivf=ivf, mesh=mesh,
                    zone_size=zone_size)
@@ -239,7 +252,6 @@ class VectorSearchEngine:
                 plan = plan_search(
                     base, self.store, Qb.shape[0], pruner=self.pruner,
                     ivf=self.ivf, mesh=use_mesh,
-                    wants_stats=stats is not None,
                 )
             if qtrace is not None:
                 qtrace.attrs["executor"] = plan.executor
@@ -286,7 +298,6 @@ class VectorSearchEngine:
         spec: Optional[SearchSpec] = None,
         *,
         mesh: Any = None,
-        wants_stats: bool = False,
     ) -> ExecutionPlan:
         """Dry-run the planner: which executor would ``search(q, spec)`` use."""
         Q = jnp.asarray(q, jnp.float32)
@@ -295,7 +306,6 @@ class VectorSearchEngine:
             spec if spec is not None else self.spec, self.store, n_queries,
             pruner=self.pruner, ivf=self.ivf,
             mesh=mesh if mesh is not None else self.mesh,
-            wants_stats=wants_stats,
         )
 
     # --------------------------------------------------------------- mutation
@@ -392,30 +402,6 @@ class VectorSearchEngine:
                 cents, capacity=self.ivf.centroid_store.capacity
             )
         self.pruner = new_pruner
-
-    # ------------------------------------------- deprecated one-release shims
-    def search_jit(self, q: np.ndarray, k: int = 10):
-        """Deprecated: use ``search(q, spec.replace(prefer_static=True))``."""
-        warnings.warn(
-            "VectorSearchEngine.search_jit is deprecated; use search() with "
-            "SearchSpec(prefer_static=True) or executor='jit-masked'",
-            DeprecationWarning, stacklevel=2,
-        )
-        res = self.search(q, self.spec.replace(k=k, executor="jit-masked"))
-        return res.ids, res.dists
-
-    def search_batch(self, Q: np.ndarray, k: int = 10):
-        """Deprecated: ``search`` accepts a (B, D) batch directly."""
-        warnings.warn(
-            "VectorSearchEngine.search_batch is deprecated; pass the (B, D) "
-            "batch to search() — the planner picks the batched executor",
-            DeprecationWarning, stacklevel=2,
-        )
-        res = self.search(
-            np.atleast_2d(np.asarray(Q, np.float32)),
-            self.spec.replace(k=k, executor="batch-matmul"),
-        )
-        return res.ids, res.dists
 
     # --------------------------------------------------------- observability
     def metrics(self) -> dict:

@@ -49,8 +49,11 @@ __all__ = [
     "PDXStore",
     "MutablePDXStore",
     "DeviceMirror",
+    "ProjectionMirror",
     "SCAN_DTYPES",
     "device_mirror",
+    "projection_mirror",
+    "unpack_int4",
     "build_flat_store",
     "build_bucketed_store",
     "pdx_to_nary",
@@ -84,31 +87,49 @@ PAD_VALUE = np.float32(3.0e18)
 #         moments still provide the centering.  PAD columns quantize to
 #         garbage by construction; every quantized consumer masks lanes
 #         with ``ids < 0``.
+#   int4  0.5 B/value — the same per-dimension affine, 15 levels
+#         (clip to ±7), two values packed per byte along the dimension
+#         axis: byte ``d`` of a packed tile holds dimension ``2d`` in its
+#         low nibble and ``2d + 1`` in its high nibble, biased by +8 so
+#         the payload is an unsigned nibble.  Consumers unpack in-register
+#         (``kernels.pdx_scan``) or via ``unpack_int4``; ``data.shape[1]``
+#         is ceil(D/2), so int4 consumers must take D from ``mirror.dim``.
 #
 # Mirrors are cached on the store keyed on ``tiles_version`` (like the f32
 # upload): head-only inserts never re-quantize, a repack/flush invalidates.
 # ==========================================================================
-SCAN_DTYPES = ("f32", "bf16", "int8")
-_BYTES_PER_VALUE = {"f32": 4, "bf16": 2, "int8": 1}
+SCAN_DTYPES = ("f32", "bf16", "int8", "int4")
+_BYTES_PER_VALUE = {"f32": 4, "bf16": 2, "int8": 1, "int4": 0.5}
 
 
 @dataclasses.dataclass(frozen=True)
 class DeviceMirror:
     """One device-resident copy of a store's sealed tiles at a scan dtype.
 
-    ``data`` is (P, D, C) in the mirror dtype; ``scale``/``offset`` are the
-    (D,) f32 dequantization vectors (ones/zeros for f32 and bf16, so every
-    consumer can apply ``x * scale + offset`` unconditionally)."""
+    ``data`` is (P, D, C) in the mirror dtype — (P, ceil(D/2), C) uint8 for
+    the packed "int4" mirror, whose logical D is ``dim``; ``scale``/
+    ``offset`` are the (D,) f32 dequantization vectors (ones/zeros for f32
+    and bf16, so every consumer can apply ``x * scale + offset``
+    unconditionally)."""
 
-    dtype: str           # "f32" | "bf16" | "int8"
-    data: jax.Array      # (P, D, C) mirror-dtype tiles
+    dtype: str           # "f32" | "bf16" | "int8" | "int4"
+    data: jax.Array      # (P, D, C) mirror-dtype tiles (packed for int4)
     scale: jax.Array     # (D,) f32
     offset: jax.Array    # (D,) f32
     tiles_version: int
+    dim: int = 0         # logical D (== data.shape[1] except when packed)
 
     @property
-    def bytes_per_value(self) -> int:
+    def bytes_per_value(self) -> float:
         return _BYTES_PER_VALUE[self.dtype]
+
+    @property
+    def packed(self) -> bool:
+        return self.dtype == "int4"
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype in ("int8", "int4")
 
 
 @jax.jit
@@ -120,6 +141,47 @@ def _quantize_int8(data, ids, means):
     offset = means
     q = jnp.round((data - offset[None, :, None]) / scale[None, :, None])
     return jnp.clip(q, -127, 127).astype(jnp.int8), scale, offset
+
+
+@jax.jit
+def _quantize_int4(data, ids, means):
+    """Same observed-range affine as int8 at 15 levels, packed 2-per-byte
+    along D (low nibble = even dim, high nibble = odd dim, +8 bias).  Odd D
+    pads one zero-level nibble; dequantizing it yields exactly ``offset``
+    of a dimension no consumer reads (ops pad q/scale/offset to match)."""
+    live = (ids >= 0)[:, None, :]
+    dev = jnp.abs(data - means[None, :, None])
+    absmax = jnp.max(jnp.where(live, dev, 0.0), axis=(0, 2))
+    scale = jnp.maximum(absmax, 1e-6) / 7.0
+    offset = means
+    q = jnp.clip(
+        jnp.round((data - offset[None, :, None]) / scale[None, :, None]),
+        -7, 7,
+    ).astype(jnp.int32)
+    if q.shape[1] % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1), (0, 0)))  # zero level -> nibble 8
+    qb = (q + 8).astype(jnp.uint8)
+    packed = qb[:, 0::2, :] | (qb[:, 1::2, :] << 4)
+    return packed, scale, offset
+
+
+def unpack_int4(packed: jax.Array, dim_axis: int = 0,
+                dim: Optional[int] = None) -> jax.Array:
+    """Packed int4 tile -> int8 quantization levels in [-7, 7].
+
+    ``dim_axis`` is the packed-dimension axis (0 for a (Dp, V) tile, 1 for
+    (P, Dp, V) stacks); the result doubles that axis, sliced back to
+    ``dim`` when given (odd logical D)."""
+    p = packed.astype(jnp.int32)
+    lo = (p & 0xF) - 8
+    hi = (p >> 4) - 8
+    full = jnp.stack([lo, hi], axis=dim_axis + 1)
+    shape = list(packed.shape)
+    shape[dim_axis] *= 2
+    full = full.reshape(shape)
+    if dim is not None and dim != shape[dim_axis]:
+        full = jax.lax.slice_in_dim(full, 0, dim, axis=dim_axis)
+    return full.astype(jnp.int8)
 
 
 def device_mirror(store, dtype: str = "f32") -> DeviceMirror:
@@ -156,15 +218,131 @@ def device_mirror(store, dtype: str = "f32") -> DeviceMirror:
             mdata = data.astype(jnp.bfloat16)
             scale = jnp.ones((D,), jnp.float32)
             offset = jnp.zeros((D,), jnp.float32)
-        else:  # int8
+        elif dtype == "int8":
             means = jnp.asarray(store.dim_means, jnp.float32)
             mdata, scale, offset = _quantize_int8(data, store.ids, means)
+        else:  # int4 (packed two-per-byte)
+            means = jnp.asarray(store.dim_means, jnp.float32)
+            mdata, scale, offset = _quantize_int4(data, store.ids, means)
         mirror = DeviceMirror(
             dtype=dtype, data=mdata, scale=scale, offset=offset,
-            tiles_version=version,
+            tiles_version=version, dim=D,
         )
         for stale in [kk for kk in cache if kk[1] != version]:
             del cache[stale]
+        cache[key] = mirror
+    return mirror
+
+
+@dataclasses.dataclass(frozen=True)
+class ProjectionMirror:
+    """A skinny learned-projection copy of the sealed tiles (LeanVec-style).
+
+    ``data`` is (P, rank, C) in the mirror dtype — packed (P, ceil(rank/2),
+    C) uint8 for int4 — holding the tiles projected onto the top-``rank``
+    PCA components of the collection.  Because the components are
+    orthonormal, the projected squared L2 distance **lower-bounds** the full
+    distance for every query, so a plain ``proj_dist <= thr`` keep test is
+    exact-safe regardless of which pruner runs the later full-dimension
+    stages.  Same consumer contract as ``DeviceMirror``: ``x * scale +
+    offset`` dequantizes, lanes with ``ids < 0`` are garbage, ``dim`` is the
+    logical projected dimensionality (= rank)."""
+
+    dtype: str             # "f32" | "bf16" | "int8" | "int4"
+    data: jax.Array        # (P, rank, C) projected tiles (packed for int4)
+    scale: jax.Array       # (rank,) f32
+    offset: jax.Array      # (rank,) f32
+    components: jax.Array  # (D, rank) f32 orthonormal columns: q_proj = q @ C
+    tiles_version: int
+    dim: int               # logical projected dimensionality == rank
+
+    @property
+    def rank(self) -> int:
+        return self.dim
+
+    @property
+    def bytes_per_value(self) -> float:
+        return _BYTES_PER_VALUE[self.dtype]
+
+    @property
+    def packed(self) -> bool:
+        return self.dtype == "int4"
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype in ("int8", "int4")
+
+
+def projection_mirror(store, rank: int, dtype: str = "f32") -> ProjectionMirror:
+    """The store's rank-``rank`` PCA projection mirror, cached like
+    ``device_mirror`` per ``tiles_version``.
+
+    PCA components come from the same machinery BSA uses
+    (``core.pruners.pca_components``) fit on the live rows; they are shared
+    across dtype/rank variants of one tiles_version (fitting dominates the
+    build).  Projected tiles are quantized with the standard per-dimension
+    affine recipe when ``dtype`` asks for it, with the projected collection
+    means as the quantization centers."""
+    if dtype not in SCAN_DTYPES:
+        raise ValueError(f"scan dtype must be one of {SCAN_DTYPES}, got {dtype!r}")
+    D = store.dim
+    if not 1 <= rank <= D:
+        raise ValueError(f"projection rank must be in [1, {D}], got {rank}")
+    version = getattr(store, "tiles_version", 0)
+    cache = getattr(store, "_proj_cache", None)
+    if cache is None:
+        cache = {}
+        try:
+            store._proj_cache = cache
+        except AttributeError:
+            pass
+    key = (rank, dtype, version)
+    mirror = cache.get(key)
+    _metrics.counter(
+        "repro_cache_events_total", cache="proj_mirror",
+        event="hit" if mirror is not None else "miss",
+    )
+    if mirror is None:
+        _metrics.counter("repro_mirror_builds_total", dtype=f"proj:{dtype}")
+        comps = cache.get(("comps", version))
+        if comps is None:
+            from .pruners import pca_components  # deferred: pruners is a leaf
+
+            sample = pdx_to_nary(store)[:65536]
+            if len(sample) < 2:  # degenerate: identity "projection"
+                comps = np.eye(D, dtype=np.float32)
+            else:
+                comps, _ = pca_components(sample)
+            cache[("comps", version)] = comps
+        Cj = jnp.asarray(comps[:, :rank])  # (D, rank)
+        data = store.data  # triggers the mutable store's lazy f32 sync
+        proj = jnp.einsum("dr,pdc->prc", Cj, data)
+        means = Cj.T @ jnp.asarray(store.dim_means, jnp.float32)  # (rank,)
+        if dtype == "f32":
+            mdata = proj
+            scale = jnp.ones((rank,), jnp.float32)
+            offset = jnp.zeros((rank,), jnp.float32)
+        elif dtype == "bf16":
+            mdata = proj.astype(jnp.bfloat16)
+            scale = jnp.ones((rank,), jnp.float32)
+            offset = jnp.zeros((rank,), jnp.float32)
+        elif dtype == "int8":
+            mdata, scale, offset = _quantize_int8(proj, store.ids, means)
+        else:  # int4
+            mdata, scale, offset = _quantize_int4(proj, store.ids, means)
+        mirror = ProjectionMirror(
+            dtype=dtype, data=mdata, scale=scale, offset=offset,
+            components=Cj, tiles_version=version, dim=rank,
+        )
+        for stale in [
+            kk for kk in cache if kk[0] != "comps" and kk[2] != version
+        ]:
+            del cache[stale]
+        if ("comps", version) in cache:
+            for stale in [
+                kk for kk in cache if kk[0] == "comps" and kk[1] != version
+            ]:
+                del cache[stale]
         cache[key] = mirror
     return mirror
 

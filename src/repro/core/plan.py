@@ -85,10 +85,16 @@ import numpy as np
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from .distance import nary_distance, pdx_distance
-from .layout import DeviceMirror, MutablePDXStore, PDXStore, device_mirror
+from .layout import (
+    DeviceMirror,
+    MutablePDXStore,
+    PDXStore,
+    device_mirror,
+    projection_mirror,
+)
 from .pdxearch import SearchStats, pdxearch, pdxearch_jit, search_batch_matmul
 from .pruners import Pruner
-from .spec import SearchSpec
+from .spec import SearchSpec, parse_cascade_stage
 from .topk import (
     TopK,
     rerank_positions,
@@ -163,14 +169,8 @@ def plan_search(
     pruner: Optional[Pruner] = None,
     ivf=None,
     mesh=None,
-    wants_stats: bool = False,
 ) -> ExecutionPlan:
-    """Choose an executor for ``n_queries`` queries against ``store``.
-
-    ``wants_stats`` is accepted for compatibility but no longer influences
-    dispatch: every registered executor populates ``SearchStats`` now.
-    """
-    del wants_stats
+    """Choose an executor for ``n_queries`` queries against ``store``."""
     fp = pruner.fingerprint if pruner is not None else ""
     axes = tuple(getattr(mesh, "axis_names", ())) if mesh is not None else ()
     version = getattr(store, "version", 0)
@@ -178,17 +178,31 @@ def plan_search(
     def plan(executor: str, reason: str) -> ExecutionPlan:
         # don't drop spec knobs silently: record exactly what the chosen
         # executor honors.  Only the fused executors run Pallas bodies,
-        # and only these four scan a reduced-precision device mirror.
+        # and only these five scan a reduced-precision device mirror.
         mirror_ok = executor in (
             "fused-scan", "fused-batch", "batch-block-sharded",
-            "routed_bucket",
+            "routed_bucket", "cascade-scan",
         )
-        if spec.kernel == "pallas" and not executor.startswith("fused"):
+        if spec.kernel == "pallas" and not (
+            executor.startswith("fused") or executor == "cascade-scan"
+        ):
             reason += " (kernel='pallas' noted: this executor runs jnp bodies)"
         if spec.scan_dtype != "f32" and not mirror_ok:
             reason += (
                 f" (scan_dtype={spec.scan_dtype!r} ignored: this executor "
                 "scans the f32 masters)"
+            )
+        if spec.scan_dtype == "int4" and executor in (
+            "batch-block-sharded", "routed_bucket"
+        ):
+            reason += (
+                " (int4 capped to int8: the sharded shard-scan bodies "
+                "dequantize unpacked tiles)"
+            )
+        if spec.cascade is not None and executor != "cascade-scan":
+            reason += (
+                " (cascade ignored: only the host-side cascade-scan "
+                "executor runs stage pipelines)"
             )
         return ExecutionPlan(
             executor=executor, reason=reason, n_queries=n_queries,
@@ -291,6 +305,14 @@ def _wants_fused(spec: SearchSpec) -> bool:
 
 
 def _host_plan(spec, n_queries, ivf, plan, note: str = "") -> ExecutionPlan:
+    if spec.cascade is not None:
+        body = "pallas" if _resolve_pallas(spec) else "jnp"
+        where = "IVF-routed START, " if ivf is not None else ""
+        return plan(
+            "cascade-scan",
+            note + f"multi-resolution cascade {'→'.join(spec.cascade)} "
+                   f"({where}kernel={body}, B={n_queries})",
+        )
     if _wants_fused(spec):
         body = "pallas" if _resolve_pallas(spec) else "jnp"
         if n_queries == 1 and spec.metric == "l2":
@@ -522,7 +544,9 @@ def _exec_adaptive(store, pruner, Q, spec, *, ivf, mesh, stats):
         if ivf is not None:
             with _trace.span("route", nprobe=spec.nprobe):
                 qt = pruner.transform_query(q)
-                order, start_parts = ivf.route(qt, spec.nprobe, spec.metric)
+                order, start_parts = ivf.route(
+                    qt, spec.nprobe, spec.metric, spec.route_dtype
+                )
         else:
             order, start_parts = None, 1
         res = pdxearch(
@@ -593,17 +617,20 @@ def _rerank_k(spec: SearchSpec, store) -> int:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("rk", "metric", "use_pallas", "quantized")
+    jax.jit, static_argnames=("rk", "metric", "use_pallas", "quantized",
+                              "packed", "dim")
 )
 def _fused_batch_scan(
-    mdata, ids, Qt, scale, offset, rk, metric, use_pallas, quantized
+    mdata, ids, Qt, scale, offset, rk, metric, use_pallas, quantized,
+    packed: bool = False, dim: int | None = None,
 ) -> TopK:
     """Scan every mirror tile with the quantized batch kernel -> per-query
     top-``rk`` flat positions (PAD lanes carry position -1)."""
     from ..kernels.ops import batched_distance_quant_op
     from ..kernels.ref import dequantize_ref
 
-    P, D, C = mdata.shape
+    P = mdata.shape[0]
+    C = mdata.shape[2]
     sc = scale if quantized else None
     off = offset if quantized else None
     pos = jnp.arange(P * C, dtype=jnp.int32).reshape(P, C)
@@ -612,11 +639,12 @@ def _fused_batch_scan(
     def body(state: TopK, inp):
         tile, tpos = inp
         if metric == "l1":  # no matmul form; dequantize + vmapped VPU scan
-            t32 = dequantize_ref(tile, sc, off)
+            t32 = dequantize_ref(tile, sc, off, packed=packed, dim=dim)
             dmat = jax.vmap(lambda q: pdx_distance(t32, q, "l1"))(Qt)
         else:
             dmat = batched_distance_quant_op(
-                tile, Qt, sc, off, metric, use_pallas
+                tile, Qt, sc, off, metric, use_pallas,
+                packed=packed, dim=dim,
             )
         return jax.vmap(topk_merge, (0, 0, None))(state, dmat, tpos), None
 
@@ -642,7 +670,8 @@ def _exec_fused_batch(store, pruner, Q, spec, *, ivf, mesh, stats):
     rk = _rerank_k(spec, store)
     cand = _fused_batch_scan(
         mirror.data, store.ids, Qt, mirror.scale, mirror.offset,
-        rk, spec.metric, _resolve_pallas(spec), mirror.dtype == "int8",
+        rk, spec.metric, _resolve_pallas(spec), mirror.quantized,
+        packed=mirror.packed, dim=mirror.dim,
     )
     if spec.scan_dtype == "f32":
         res = _positions_to_ids(store.ids, cand)
@@ -654,7 +683,8 @@ def _exec_fused_batch(store, pruner, Q, spec, *, ivf, mesh, stats):
     B = Q.shape[0]
     _exact_scan_stats(stats, store, B)
     if _metrics.enabled():
-        P, D, C = mirror.data.shape
+        P, C = mirror.data.shape[0], mirror.data.shape[2]
+        D = mirror.dim  # logical D (packed int4 halves the stored axis)
         _metrics.counter(
             "repro_device_bytes_total",
             float(B) * P * D * C * mirror.bytes_per_value,
@@ -692,14 +722,14 @@ def _exec_fused_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
     rk = _rerank_k(spec, store)
     prune = pruner.name == "adsampling" and pruner.aux is not None
     eps0 = float(pruner.aux["eps0"]) if prune else 2.1
-    sc = mirror.scale if mirror.dtype == "int8" else None
-    off = mirror.offset if mirror.dtype == "int8" else None
+    sc = mirror.scale if mirror.quantized else None
+    off = mirror.offset if mirror.quantized else None
     out_i, out_d = [], []
     for q in Q:
         qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
         p0 = 0
         if ivf is not None:
-            order, _ = ivf.route(qt, 1, "l2")
+            order, _ = ivf.route(qt, 1, "l2", dtype=spec.route_dtype)
             if len(order):
                 p0 = int(order[0])
         start = topk_from_batch(
@@ -710,6 +740,7 @@ def _exec_fused_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
             mirror.data, store.data, store.ids, jnp.int32(p0), qt, thr,
             sc, off, eps0, rk, spec.k, use_pallas,
             spec.scan_dtype == "f32", start,
+            packed=mirror.packed, dim=mirror.dim,
         )
         if stats is not None:
             _fused_scan_stats(stats, store, mirror, p0, qt, thr, eps0)
@@ -738,11 +769,12 @@ def _fused_scan_stats(stats, store, mirror, p0, qt, thr, eps0) -> None:
     from ..obs import meters as _meters
 
     counts = np.asarray(store.counts)
-    P, D, C = mirror.data.shape
+    P, C = mirror.data.shape[0], mirror.data.shape[2]
+    D = mirror.dim  # logical D (packed int4 halves the stored axis)
     ids_scan = store.ids.at[p0].set(-1)
     lanes, parts = _meters.fused_tile_counts(
         mirror.data, ids_scan, qt, thr, mirror.scale, mirror.offset,
-        eps0=eps0,
+        eps0=eps0, packed=mirror.packed, dim=mirror.dim,
     )
     w = _meters.tile_widths(D)
     total = float(counts.sum()) * D
@@ -763,21 +795,22 @@ def _fused_scan_stats(stats, store, mirror, p0, qt, thr, eps0) -> None:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("eps0", "rk", "k", "use_pallas", "exact"),
+    static_argnames=("eps0", "rk", "k", "use_pallas", "exact", "packed",
+                     "dim"),
 )
 def _fused_scan_one(
     mdata, master, ids, p0, qt, thr, scale, offset, eps0, rk, k, use_pallas,
-    exact, start: TopK,
+    exact, start: TopK, packed: bool = False, dim: int | None = None,
 ) -> TopK:
     from ..kernels.ops import pdx_prune_scan_multi_op
 
-    P, D, C = mdata.shape
+    P, _, C = mdata.shape
     # the START partition was scanned exactly already: kill its lanes so the
     # megakernel whole-tile-skips it and its ids never enter the pool twice
     ids_scan = ids.at[p0].set(-1)
     dists, alive = pdx_prune_scan_multi_op(
         mdata, ids_scan, qt, thr, scale, offset, eps0=eps0,
-        use_pallas=use_pallas,
+        use_pallas=use_pallas, packed=packed, dim=dim,
     )
     flat_d = jnp.where(alive, dists, jnp.inf).reshape(-1)
     cand = topk_from_batch(flat_d, jnp.arange(P * C, dtype=jnp.int32), rk)
@@ -792,6 +825,222 @@ def _fused_scan_one(
         )
         res = TopK(dists=res.dists[0], ids=res.ids[0])
     return topk_merge(res, start.dists, start.ids)
+
+
+# ------------------------------------------------- cascade executor
+def _quant_err_norm(mirror) -> float:
+    """L2 norm bound of a quantized mirror's reconstruction error vector.
+
+    Per-dimension rounding error is at most ``scale_d / 2`` (the observed-
+    range affine never clips), so ``||x_hat - x|| <= 0.5 * ||scale||`` for
+    every live vector.  By the triangle inequality any vector with true
+    distance ``<= thr`` has dequantized distance ``<= (sqrt(thr) + err)^2``
+    — the exact-safe threshold inflation the cascade's quantized keep tests
+    apply (without it, int4's coarse step at high D prunes true neighbours
+    wholesale)."""
+    if not mirror.quantized:
+        return 0.0
+    return 0.5 * float(np.linalg.norm(np.asarray(mirror.scale)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps0", "d_tile", "use_pallas", "packed", "dim",
+                     "first"),
+)
+def _cascade_stage(
+    mdata, ids_scan, alive_prev, qs, thr, scale, offset, eps0, d_tile,
+    use_pallas, packed, dim, first,
+):
+    """One cascade scan stage over the (P, D_i, C) stage mirror ``mdata``.
+
+    Stage N+1 seeds its keep-mask from stage N's alive bitmap: dead lanes'
+    ids are forced to -1, so the kernels' ``ids >= 0`` convention carries
+    the mask across stages.  Later stages run through the prefetch-skip
+    wrapper with an alive-partitions-first schedule (tail slots repeat the
+    first partition, whose consecutive identical block index elides the
+    DMA), so fully-pruned partitions' tiles never leave HBM on the Pallas
+    path; the first stage has every partition live and streams plainly."""
+    from ..kernels.ops import (
+        pdx_prune_scan_multi_op,
+        pdx_prune_scan_multi_prefetch_op,
+    )
+
+    if first:
+        return pdx_prune_scan_multi_op(
+            mdata, ids_scan, qs, thr, scale, offset, eps0=eps0,
+            d_tile=d_tile, use_pallas=use_pallas, packed=packed, dim=dim,
+        )
+    ids_i = jnp.where(alive_prev, ids_scan, -1)
+    P = mdata.shape[0]
+    part_alive = jnp.any(ids_i >= 0, axis=1)
+    order = jnp.argsort(~part_alive).astype(jnp.int32)  # stable: alive first
+    order = jnp.where(jnp.arange(P) < jnp.sum(part_alive), order, order[0])
+    return pdx_prune_scan_multi_prefetch_op(
+        mdata, ids_i, qs, thr, order, scale, offset, eps0=eps0,
+        d_tile=d_tile, use_pallas=use_pallas, packed=packed, dim=dim,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("rk", "k"))
+def _cascade_finish(master, ids_scan, qt, dists, alive, rk, k,
+                    start: TopK) -> TopK:
+    """Exact terminal stage: top-``rk`` surviving flat positions by their
+    last approximate stage distance, re-scored against the f32 masters,
+    merged with the exact START candidates."""
+    flat_d = jnp.where(alive, dists, jnp.inf).reshape(-1)
+    cand = topk_from_batch(
+        flat_d, jnp.arange(flat_d.shape[0], dtype=jnp.int32), rk
+    )
+    res = rerank_positions(
+        master, ids_scan, qt[None],
+        TopK(cand.dists[None], cand.ids[None]), k, "l2",
+    )
+    return topk_merge(
+        TopK(dists=res.dists[0], ids=res.ids[0]), start.dists, start.ids
+    )
+
+
+@register_executor("cascade-scan")
+def _exec_cascade_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Multi-resolution cascade: each ``spec.cascade`` stage scans a
+    narrower-then-wider sequence of device mirrors over the survivors of
+    the previous stage, ending in the exact f32 re-rank.
+
+    A ``"projN[:dtype]"`` first stage scans a rank-N PCA projection mirror
+    with the exact-safe lower-bound keep test (single d-tile, so the test
+    fires once at full projected dimensionality — safe for ANY pruner);
+    full-dimension dtype stages run the ADSampling keep test when the
+    engine pruner is ADSampling and unpruned (thr = inf) otherwise, like
+    fused-scan.  The threshold comes from an exact f32 START scan of the
+    IVF-routed nearest bucket's first partition (partition 0 without an
+    index), which is masked out of every stage and merged exactly."""
+    if spec.metric != "l2":
+        raise ValueError("cascade-scan is L2-only (spec validation enforces "
+                         "this)")
+    if spec.cascade is None:
+        raise ValueError("cascade-scan executor needs spec.cascade")
+    scan_stages = [parse_cascade_stage(s) for s in spec.cascade][:-1]
+    mirrors = [
+        projection_mirror(store, rank, dt) if kind == "proj"
+        else device_mirror(store, dt)
+        for kind, dt, rank in scan_stages
+    ]
+    use_pallas = _resolve_pallas(spec)
+    P, C, D = store.num_partitions, store.capacity, store.dim
+    rk = min(spec.rerank_mult * spec.k, P * C)
+    prune = pruner.name == "adsampling" and pruner.aux is not None
+    eps0 = float(pruner.aux["eps0"]) if prune else 2.1
+    qerrs = [_quant_err_norm(m) for m in mirrors]
+    counts = np.asarray(store.counts)
+    meter = stats is not None or _metrics.enabled()
+    out_i, out_d = [], []
+    for q in Q:
+        qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+        p0 = 0
+        if ivf is not None:
+            order, _ = ivf.route(qt, 1, "l2", dtype=spec.route_dtype)
+            if len(order):
+                p0 = int(order[0])
+        start = topk_from_batch(
+            pdx_distance(store.data[p0], qt, "l2"), store.ids[p0], spec.k
+        )
+        thr = topk_threshold(start)
+        ids_scan = store.ids.at[p0].set(-1)
+        dists = alive = None
+        lanes_in = float(counts.sum() - counts[p0])
+        computed = float(counts[p0]) * D  # START (re-rank added below)
+        for si, ((kind, dt, rank), mirror) in enumerate(
+            zip(scan_stages, mirrors)
+        ):
+            if si == 0:
+                n_entry = P  # the first stage streams every partition
+            else:
+                n_entry = (
+                    int(np.asarray(jnp.any(alive, axis=1).sum()))
+                    if meter else P
+                )
+            # exact-safe quantization slack: anything within thr of the
+            # query sits within (sqrt(thr) + qerr)^2 in dequantized space
+            thr_q = (jnp.sqrt(thr) + qerrs[si]) ** 2
+            if kind == "proj":
+                # single d-tile covering the whole projection: the keep
+                # test fires once at d = rank, where orthonormal-projection
+                # L2 lower-bounds the full L2 exactly (eps 0 — intermediate
+                # ADSampling-style scaled tests are unsafe on PCA-projected
+                # coordinates)
+                qs = qt @ mirror.components
+                thr_i, eps_i, d_tile = thr_q, 0.0, rank
+            else:
+                qs = qt
+                thr_i = thr_q if prune else jnp.float32(np.inf)
+                eps_i, d_tile = eps0, 64
+            sc = mirror.scale if mirror.quantized else None
+            off = mirror.offset if mirror.quantized else None
+            dists, alive = _cascade_stage(
+                mirror.data, ids_scan, alive, qs, thr_i, sc, off,
+                eps_i, d_tile, use_pallas, mirror.packed, mirror.dim,
+                si == 0,
+            )
+            if meter:
+                n_surv = float(np.asarray(alive.sum()))
+                # realized HBM traffic: the first stage streams all P
+                # partitions; a prefetch-skip stage only fetches the
+                # scheduled (alive-at-entry) partitions' tiles
+                stage_bytes = (
+                    float(n_entry) * mirror.dim * C * mirror.bytes_per_value
+                )
+                if stats is not None:
+                    computed += lanes_in * mirror.dim
+                if _metrics.enabled():
+                    _metrics.counter(
+                        "repro_cascade_stage_survivors", n_surv,
+                        stage=str(si), stage_name=spec.cascade[si],
+                    )
+                    _metrics.counter(
+                        "repro_cascade_stage_bytes", stage_bytes,
+                        stage=str(si), stage_name=spec.cascade[si],
+                    )
+                    _metrics.counter(
+                        "repro_device_bytes_total", stage_bytes,
+                        executor="cascade-scan", component="scan",
+                        dtype=mirror.dtype,
+                    )
+                lanes_in = n_surv
+        # the survivors of the (exact-safe, quantization-inflated) final
+        # keep test are EXACTLY the candidates that could still enter the
+        # top-k, so the re-rank must cover them all — a top-rk cut by the
+        # last stage's noisy distances silently drops true neighbours when
+        # int4's reordering radius exceeds rerank_mult*k.  rk widens to the
+        # survivor count, pow2-bucketed so jit specializations stay bounded.
+        n_alive = int(np.asarray((alive > 0).sum()))
+        rk_eff = rk
+        if n_alive > rk_eff:
+            rk_eff = min(1 << (n_alive - 1).bit_length(), P * C)
+        computed += float(rk_eff) * D
+        res = _cascade_finish(
+            store.data, ids_scan, qt, dists, alive, rk_eff, spec.k, start
+        )
+        if stats is not None:
+            total = float(counts.sum()) * D
+            stats.values_total += total
+            stats.values_computed += computed
+            stats.values_avoided += max(total - computed, 0.0)
+            stats.partitions_visited += P
+        if _metrics.enabled():
+            _metrics.counter(
+                "repro_device_bytes_total", float(D * C * 4),
+                executor="cascade-scan", component="start", dtype="f32",
+            )
+            _metrics.counter(
+                "repro_device_bytes_total", float(rk_eff * D * 4),
+                executor="cascade-scan", component="rerank", dtype="f32",
+            )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    with _trace.span("rerank", fused="in-kernel", rk=rk):
+        pass
+    return np.stack(out_i), np.stack(out_d)
 
 
 def _get_placement(store, n_shards: int, kind: str, *, ivf=None, axis="data"):
@@ -877,10 +1126,9 @@ def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
 
     pl = _get_placement(store, mesh.shape["data"], "block")
     Qt = _transform_batch(pruner, Q)
-    mirror = (
-        device_mirror(store, spec.scan_dtype)
-        if spec.scan_dtype != "f32" else None
-    )
+    # int4 caps to int8 here: the shard-scan bodies dequantize unpacked tiles
+    dt = "int8" if spec.scan_dtype == "int4" else spec.scan_dtype
+    mirror = device_mirror(store, dt) if dt != "f32" else None
     res = search_batch_block_sharded(
         mesh, Q=Qt, k=spec.k, metric=spec.metric, placement=pl,
         mirror=mirror, rerank_mult=spec.rerank_mult,
@@ -918,11 +1166,10 @@ def _prepare_routed_host(store, pruner, Q, spec, *, ivf, mesh):
 
     pl = _get_placement(store, mesh.shape["data"], "bucket", ivf=ivf)
     Qt = _transform_batch(pruner, Q)
-    sel = ivf.route_batch(Qt, spec.nprobe, spec.metric)
-    mirror = (
-        device_mirror(store, spec.scan_dtype)
-        if spec.scan_dtype != "f32" else None
-    )
+    sel = ivf.route_batch(Qt, spec.nprobe, spec.metric, spec.route_dtype)
+    # int4 caps to int8 here: the shard-scan bodies dequantize unpacked tiles
+    dt = "int8" if spec.scan_dtype == "int4" else spec.scan_dtype
+    mirror = device_mirror(store, dt) if dt != "f32" else None
     launch = prepare_routed(
         mesh, pl, Qt, sel, spec.k, metric=spec.metric,
         mirror=mirror, rerank_mult=spec.rerank_mult,

@@ -33,6 +33,7 @@ __all__ = [
     "make_plain_pruner",
     "make_adsampling",
     "make_bsa",
+    "pca_components",
     "make_bond",
     "random_orthogonal",
 ]
@@ -162,9 +163,16 @@ def make_adsampling(dim: int, eps0: float = 2.1, seed: int = 0) -> Pruner:
 #     partial + max(0, mu_res(d) - m * sigma_res(d))  >  thr
 # ``m`` plays the paper's multiplier role (higher m = safer = later pruning).
 # --------------------------------------------------------------------------
-def make_bsa(X_sample: np.ndarray, m: float = 3.0, seed: int = 0) -> Pruner:
+def pca_components(X_sample: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """PCA of a row sample -> ((D, D) orthonormal components as columns,
+    ordered by decreasing eigenvalue; (D,) eigenvalues in that order).
+
+    Shared by BSA (full-rank projection + residual-energy pruning) and the
+    cascade's skinny projection mirror (``core.layout.projection_mirror``):
+    orthonormal columns make any rank-R prefix projection a *contraction*,
+    so projected L2 distances lower-bound full distances — the exact-safe
+    keep test the cascade's first stage relies on."""
     X_sample = np.asarray(X_sample, dtype=np.float32)
-    n, dim = X_sample.shape
     mean = X_sample.mean(axis=0)
     cov = np.cov((X_sample - mean).T).astype(np.float64)
     if cov.ndim == 0:  # D == 1 degenerate
@@ -172,11 +180,18 @@ def make_bsa(X_sample: np.ndarray, m: float = 3.0, seed: int = 0) -> Pruner:
     eigval, eigvec = np.linalg.eigh(cov)
     order = np.argsort(eigval)[::-1]
     components = eigvec[:, order].astype(np.float32)  # (D, D), col = component
+    return components, eigval[order]
+
+
+def make_bsa(X_sample: np.ndarray, m: float = 3.0, seed: int = 0) -> Pruner:
+    X_sample = np.asarray(X_sample, dtype=np.float32)
+    n, dim = X_sample.shape
+    components, eigval = pca_components(X_sample)
 
     # Residual-energy statistics per cut d: for pairwise squared distances the
     # expected残 energy in dims >= d is 2 * sum_{j>=d} lambda_j; its spread is
     # calibrated from eigenvalue tails (chi-square-like second moment).
-    lam = np.maximum(eigval[order], 0.0)
+    lam = np.maximum(eigval, 0.0)
     tail = 2.0 * np.concatenate([np.cumsum(lam[::-1])[::-1], [0.0]])  # (D+1,)
     tail_var = 8.0 * np.concatenate([np.cumsum((lam**2)[::-1])[::-1], [0.0]])
     mu_res = jnp.asarray(tail, dtype=jnp.float32)          # index by d

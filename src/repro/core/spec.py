@@ -37,11 +37,42 @@ from .distance import METRICS
 from .layout import SCAN_DTYPES
 from .pdxearch import SearchStats
 
-__all__ = ["SearchSpec", "SearchResult"]
+__all__ = ["SearchSpec", "SearchResult", "parse_cascade_stage"]
 
 SCHEDULES = ("adaptive", "fixed")
 ROUTINGS = ("broadcast", "bucket")
 KERNELS = ("auto", "pallas", "jnp")
+# Full-dimension dtypes a cascade may run between the (optional) projection
+# stage and the mandatory exact "f32" re-rank terminator.
+CASCADE_MID_DTYPES = ("bf16", "int8", "int4")
+
+
+def parse_cascade_stage(stage: str) -> tuple[str, str, int]:
+    """One cascade stage string -> (kind, dtype, rank).
+
+    Stage grammar:
+      "projN"         — rank-N learned-projection scan, f32 mirror
+      "projN:dtype"   — rank-N projection scan at a quantized mirror dtype
+      "bf16"|"int8"|"int4" — full-dimension scan at that mirror dtype
+      "f32"           — the exact full-precision re-rank (always last)
+
+    Returns ``kind`` in ("proj", "scan", "exact"); ``rank`` is 0 except for
+    projection stages.  Raises ValueError on anything else.
+    """
+    if stage == "f32":
+        return ("exact", "f32", 0)
+    if stage in CASCADE_MID_DTYPES:
+        return ("scan", stage, 0)
+    if stage.startswith("proj"):
+        body = stage[4:]
+        rank_s, _, dt = body.partition(":")
+        dt = dt or "f32"
+        if rank_s.isdigit() and int(rank_s) >= 1 and dt in SCAN_DTYPES:
+            return ("proj", dt, int(rank_s))
+    raise ValueError(
+        f"bad cascade stage {stage!r}: expected 'projN[:dtype]', one of "
+        f"{CASCADE_MID_DTYPES}, or the final 'f32'"
+    )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -90,6 +121,23 @@ class SearchSpec:
       rerank_mult — exact-re-rank candidate multiplier (top ``rerank_mult *
                     k`` approximate candidates are re-scored in f32 when
                     ``scan_dtype != "f32"``).
+      cascade     — multi-resolution scan pipeline, e.g.
+                    ``("proj32:int4", "int8", "f32")``: an optional skinny
+                    learned-projection stage first (``"projN[:dtype]"`` —
+                    rank-N PCA mirror, exact-safe lower-bound keep test),
+                    then full-dimension scans at decreasing-width mirror
+                    dtypes over the survivors of the previous stage, ending
+                    in the mandatory exact ``"f32"`` re-rank.  Each stage
+                    seeds its keep-mask from the previous stage's alive
+                    bitmap, so later (wider) stages only touch survivors;
+                    the Pallas path skips pruned partitions' HBM traffic
+                    entirely (prefetch-skip).  None (default) = the
+                    single-level ``scan_dtype`` behavior.  L2 only.
+      route_dtype — precision of the IVF centroid routing scan ("f32"
+                    default; "int8"/"int4" stream a quantized centroid
+                    mirror so routing bytes shrink with the same dtype
+                    policy as the data scan).  Near-tie bucket *order* may
+                    differ from f32 routing at partial nprobe.
 
     Execution hints (planner inputs, never change *results* beyond the
     pruner's own approximation)
@@ -118,6 +166,8 @@ class SearchSpec:
     scan_dtype: str = "f32"
     kernel: str = "auto"
     rerank_mult: int = 4
+    cascade: Optional[tuple] = None
+    route_dtype: str = "f32"
 
     def __post_init__(self):
         if self.k < 1:
@@ -153,6 +203,45 @@ class SearchSpec:
             raise ValueError(
                 f"rerank_mult must be >= 1, got {self.rerank_mult}"
             )
+        if self.route_dtype not in SCAN_DTYPES:
+            raise ValueError(
+                f"route_dtype must be one of {SCAN_DTYPES}, "
+                f"got {self.route_dtype!r}"
+            )
+        if self.cascade is not None:
+            stages = self.cascade
+            if not (
+                isinstance(stages, tuple)
+                and len(stages) >= 2
+                and all(isinstance(s, str) for s in stages)
+            ):
+                raise ValueError(
+                    f"cascade must be a tuple of >= 2 stage strings, "
+                    f"got {stages!r}"
+                )
+            if self.metric != "l2":
+                raise ValueError(
+                    "cascade scans are L2-only (the projection lower bound "
+                    f"and the ADSampling test both assume it), got metric="
+                    f"{self.metric!r}"
+                )
+            parsed = [parse_cascade_stage(s) for s in stages]  # may raise
+            if parsed[-1][0] != "exact":
+                raise ValueError(
+                    f"cascade must end with the exact 'f32' re-rank, "
+                    f"got {stages!r}"
+                )
+            for pos, (kind, _, _) in enumerate(parsed):
+                if kind == "proj" and pos != 0:
+                    raise ValueError(
+                        f"a projection stage must come first, got {stages!r}"
+                    )
+                if kind == "exact" and pos != len(parsed) - 1:
+                    raise ValueError(
+                        f"'f32' is the terminal re-rank stage, got {stages!r}"
+                    )
+            if len(set(stages)) != len(stages):
+                raise ValueError(f"duplicate cascade stages in {stages!r}")
 
     def replace(self, **changes) -> "SearchSpec":
         """A copy with ``changes`` applied (specs are immutable)."""

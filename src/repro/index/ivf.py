@@ -15,10 +15,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.distance import pdx_distance
-from ..core.layout import PDXStore, build_bucketed_store, build_flat_store
+from ..core.layout import (
+    PDXStore,
+    build_bucketed_store,
+    build_flat_store,
+    device_mirror,
+)
 from ..core.pdxearch import SearchStats, pdxearch
 from ..core.pruners import Pruner
 from ..core.topk import TopK
+from ..kernels.ref import dequantize_ref
+from ..obs import metrics as _metrics
 from .kmeans import kmeans
 
 __all__ = ["IVFIndex", "build_ivf"]
@@ -51,6 +58,26 @@ def _rank_centroids_batch(
     )(Q)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("metric", "nlist", "packed", "dim")
+)
+def _rank_centroids_batch_mirror(
+    cdata, Q, nlist: int, metric: str, scale, offset,
+    packed: bool, dim: int | None,
+):
+    """Quantized-mirror bucket ranking: the int8/int4 centroid tiles
+    dequantize in-register (XLA fuses the affine into the scan) and the
+    exact ``_rank_centroids_impl`` arithmetic runs on the result, so
+    single-query and batched routing still agree by construction.  Bucket
+    *order* near centroid-distance ties may differ from f32 routing — the
+    reason ``SearchSpec.route_dtype`` defaults to "f32"."""
+    T32 = dequantize_ref(cdata, scale, offset, dim_axis=1,
+                         packed=packed, dim=dim)
+    return jax.vmap(
+        lambda q: _rank_centroids_impl(T32, q, nlist, metric)
+    )(Q)
+
+
 @jax.jit
 def _nearest_centroid(centroids: jax.Array, X: jax.Array) -> jax.Array:
     """(K, D), (N, D) -> (N,) nearest-centroid bucket per row (L2, matching
@@ -69,10 +96,44 @@ class IVFIndex:
     part_counts: np.ndarray         # (K,) partitions per bucket
     nlist: int
 
-    def rank_buckets(self, q: jax.Array, metric: str = "l2") -> np.ndarray:
-        """Distance of q to every centroid -> bucket ids sorted ascending."""
+    def _ranked_batch(
+        self, Q: jax.Array, metric: str, dtype: str
+    ) -> jax.Array:
+        """(B, D) queries -> (B, nlist) ascending bucket orders, scanning
+        the centroid tiles at ``dtype`` width (the data scan's dtype policy
+        applied to routing; see ``core.layout``).  Records the routing scan
+        bytes so ``BENCH_routing.json``/dashboards see the shrink."""
+        if dtype == "f32":
+            order = _rank_centroids_batch(
+                self.centroid_store.data, Q, self.nlist, metric
+            )
+            bpv = 4.0
+        else:
+            m = device_mirror(self.centroid_store, dtype)
+            sc = m.scale if m.quantized else None
+            off = m.offset if m.quantized else None
+            order = _rank_centroids_batch_mirror(
+                m.data, Q, self.nlist, metric, sc, off, m.packed, m.dim
+            )
+            bpv = m.bytes_per_value
+        if _metrics.enabled():
+            Pc, Dc, Cc = self.centroid_store.data.shape
+            _metrics.counter(
+                "repro_device_bytes_total",
+                float(Q.shape[0]) * Pc * Dc * Cc * bpv,
+                executor="route", component="scan", dtype=dtype,
+            )
+        return order
+
+    def rank_buckets(
+        self, q: jax.Array, metric: str = "l2", dtype: str = "f32"
+    ) -> np.ndarray:
+        """Distance of q to every centroid -> bucket ids sorted ascending.
+        ``dtype`` scans a quantized centroid mirror instead of f32."""
         return np.asarray(
-            _rank_centroids(self.centroid_store.data, q, self.nlist, metric)
+            self._ranked_batch(
+                jnp.asarray(q, jnp.float32)[None], metric, dtype
+            )[0]
         )
 
     def assign(self, X: np.ndarray) -> np.ndarray:
@@ -93,28 +154,30 @@ class IVFIndex:
         return np.concatenate(parts) if parts else np.zeros(0, np.int64)
 
     def route_batch(
-        self, Qt: jax.Array, nprobe: int, metric: str = "l2"
+        self, Qt: jax.Array, nprobe: int, metric: str = "l2",
+        dtype: str = "f32",
     ) -> np.ndarray:
         """Query routing for the distributed bucket-routed executor: rank
         buckets for a whole (B, D) batch of (already pruner-transformed)
         queries -> (B, min(nprobe, nlist)) bucket ids, best first.  The
         caller (``repro.dist.routing``) maps buckets onto owner shards via
-        the placement and exchanges queries with one all-to-all."""
+        the placement and exchanges queries with one all-to-all.  ``dtype``
+        runs the centroid scan over a quantized mirror (host-side, pre-
+        collective: the exchange plan and collective count are unchanged)."""
         Qt = jnp.atleast_2d(jnp.asarray(Qt, jnp.float32))
-        order = _rank_centroids_batch(
-            self.centroid_store.data, Qt, self.nlist, metric
-        )
+        order = self._ranked_batch(Qt, metric, dtype)
         return np.asarray(order[:, : min(nprobe, self.nlist)])
 
     def route(
-        self, qt: jax.Array, nprobe: int, metric: str = "l2"
+        self, qt: jax.Array, nprobe: int, metric: str = "l2",
+        dtype: str = "f32",
     ) -> tuple[np.ndarray, int]:
         """Query routing for the planner's adaptive executor: rank buckets
         by centroid distance of the (already pruner-transformed) query and
         return ``(partition visit order, start_parts)`` — START linear-scans
         every partition of the nearest *non-empty* bucket to seed the top-k
         threshold (empty buckets own zero partitions and zero scan work)."""
-        border = self.rank_buckets(qt, metric)
+        border = self.rank_buckets(qt, metric, dtype)
         order = self.partition_order(border, nprobe)
         start_parts = 0
         for b in border[:nprobe]:

@@ -22,6 +22,7 @@ from .nary_scan import nary_distance_pallas
 from .pdx_scan import (
     pdx_distance_pallas,
     pdx_prune_scan_multi_pallas,
+    pdx_prune_scan_multi_prefetch_pallas,
     pdx_prune_scan_pallas,
 )
 
@@ -32,7 +33,20 @@ __all__ = [
     "batched_distance_quant_op",
     "pdx_prune_scan_op",
     "pdx_prune_scan_multi_op",
+    "pdx_prune_scan_multi_prefetch_op",
 ]
+
+# Padding a packed int4 tile must stay harmless after in-kernel unpacking:
+# 0x88 decodes to the (0, 0) level pair, which dequantizes to 0 under the
+# zero-padded scale/offset — exactly like the 0 padding of unpacked tiles.
+_INT4_PAD_BYTE = 0x88
+
+
+def _unpack_int4_levels(T: jax.Array, dim: int) -> jax.Array:
+    """(Dp, ...) packed bytes -> (dim, ...) int8 quantization levels."""
+    p = T.astype(jnp.int32)
+    full = jnp.stack([(p & 0xF) - 8, (p >> 4) - 8], axis=1)
+    return full.reshape((2 * T.shape[0],) + T.shape[1:])[:dim].astype(jnp.int8)
 
 
 def _pad_to(
@@ -118,35 +132,26 @@ def pdx_prune_scan_op(
     return dists[:V], alive[:V] != 0.0
 
 
-@functools.partial(
-    jax.jit, static_argnames=("eps0", "d_tile", "use_pallas")
-)
-def pdx_prune_scan_multi_op(
-    T: jax.Array,
-    ids: jax.Array,
-    q: jax.Array,
-    thr: jax.Array,
-    scale: jax.Array | None = None,
-    offset: jax.Array | None = None,
-    eps0: float = 2.1,
-    d_tile: int = 64,
-    use_pallas: bool = True,
-) -> tuple[jax.Array, jax.Array]:
-    """Megakernel wrapper: whole-store fused scan -> ((P, V) dists f32,
-    (P, V) alive bool).
+def _prep_multi(T, ids, q, scale, offset, d_tile, packed, dim):
+    """Shared padding/tiling for the megakernel wrappers.
 
-    ``T`` is a device mirror at any scan dtype (f32/bf16/int8); ``scale``/
-    ``offset`` are the (D,) dequant vectors for int8 mirrors (None means the
-    operands are plain floats).  PAD lanes (``ids < 0``) start dead.
+    Returns (Tp, idp, qp, sp, op, dt, logical_dim, quantized).  For packed
+    int4 mirrors the byte axis pads with ``_INT4_PAD_BYTE`` to ``dt/2`` and
+    q/scale/offset pad out to the padded *logical* (even) dimension count.
     """
+    if packed:
+        P, Dp, V = T.shape
+        dt = min(d_tile, 2 * Dp)
+        dt += dt % 2  # packed bytes hold dim pairs; 2*Dp is even, so safe
+        Tp = _pad_to(_pad_to(T, 1, dt // 2, value=_INT4_PAD_BYTE), 2, _pick(V, 1024, 128))
+        Dlog = 2 * Tp.shape[1]
+        qp = jnp.pad(q, (0, Dlog - dim))
+        sp = jnp.pad(scale, (0, Dlog - dim))
+        op = jnp.pad(offset, (0, Dlog - dim))
+        idp = _pad_to(ids, 1, Tp.shape[2], value=-1)
+        return Tp, idp, qp, sp, op, dt, dim, True
     P, D, V = T.shape
     quantized = scale is not None
-    if not use_pallas:
-        dists, alive = ref.pdx_prune_scan_multi_ref(
-            T, ids, q, thr, d_tile=min(d_tile, D), eps0=eps0,
-            scale=scale, offset=offset,
-        )
-        return dists, alive != 0.0
     vt = _pick(V, 1024, 128)
     dt = min(d_tile, D)
     Tp = _pad_to(_pad_to(T, 1, dt), 2, vt)
@@ -158,15 +163,106 @@ def pdx_prune_scan_multi_op(
     else:
         sp = jnp.ones((Tp.shape[1],), jnp.float32)
         op = jnp.zeros((Tp.shape[1],), jnp.float32)
+    return Tp, idp, qp, sp, op, dt, D, quantized
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps0", "d_tile", "use_pallas", "packed", "dim")
+)
+def pdx_prune_scan_multi_op(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    use_pallas: bool = True,
+    packed: bool = False,
+    dim: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Megakernel wrapper: whole-store fused scan -> ((P, V) dists f32,
+    (P, V) alive bool).
+
+    ``T`` is a device mirror at any scan dtype (f32/bf16/int8/int4);
+    ``scale``/``offset`` are the (D,) dequant vectors for quantized mirrors
+    (None means the operands are plain floats).  ``packed`` marks an int4
+    mirror, (P, ceil(dim/2), V) uint8 with logical dimensionality ``dim``
+    (q/scale/offset stay length-``dim``).  PAD lanes (``ids < 0``) start
+    dead.
+    """
+    if not use_pallas:
+        D = dim if packed else T.shape[1]
+        dists, alive = ref.pdx_prune_scan_multi_ref(
+            T, ids, q, thr, d_tile=min(d_tile, D), eps0=eps0,
+            scale=scale, offset=offset, packed=packed, dim=dim,
+        )
+        return dists, alive != 0.0
+    V = T.shape[2]
+    Tp, idp, qp, sp, op, dt, Dlog, quantized = _prep_multi(
+        T, ids, q, scale, offset, d_tile, packed, dim
+    )
     dists, alive = pdx_prune_scan_multi_pallas(
         Tp, idp, qp, thr, sp, op, eps0, dt,
-        logical_dim=D, quantized=quantized,
+        logical_dim=Dlog, quantized=quantized, packed=packed,
     )
     return dists[:, :V], alive[:, :V] != 0.0
 
 
 @functools.partial(
-    jax.jit, static_argnames=("metric", "use_pallas")
+    jax.jit, static_argnames=("eps0", "d_tile", "use_pallas", "packed", "dim")
+)
+def pdx_prune_scan_multi_prefetch_op(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    order: jax.Array,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    use_pallas: bool = True,
+    packed: bool = False,
+    dim: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Prefetch-skip megakernel wrapper for the later cascade stages.
+
+    ``order`` is a (P,) int32 schedule: every partition that still has a
+    live lane (``ids >= 0`` anywhere) listed first, then ``order[0]``
+    repeated for the remaining slots.  The Pallas path indexes HBM through
+    it (dead partitions' tiles are never DMA'd — see
+    ``pdx_prune_scan_multi_prefetch_pallas``) and scatters the slot-ordered
+    outputs back to partition order; partitions missing from ``order``
+    report dist 0 / alive False, which matches the jnp twin because their
+    lanes are all masked dead.  The jnp twin (``use_pallas=False``) ignores
+    ``order`` — identical results, no traffic skip.
+    """
+    if not use_pallas:
+        D = dim if packed else T.shape[1]
+        dists, alive = ref.pdx_prune_scan_multi_ref(
+            T, ids, q, thr, d_tile=min(d_tile, D), eps0=eps0,
+            scale=scale, offset=offset, packed=packed, dim=dim,
+        )
+        return dists, alive != 0.0
+    P, _, V = T.shape
+    Tp, idp, qp, sp, op, dt, Dlog, quantized = _prep_multi(
+        T, ids, q, scale, offset, d_tile, packed, dim
+    )
+    out_d, out_a = pdx_prune_scan_multi_prefetch_pallas(
+        Tp, idp, qp, thr, sp, op, order, eps0, dt,
+        logical_dim=Dlog, quantized=quantized, packed=packed,
+    )
+    # slot -> partition scatter; repeated tail slots write identical values
+    Vp = out_d.shape[1]
+    dists = jnp.zeros((P, Vp), jnp.float32).at[order].set(out_d)
+    alive = jnp.zeros((P, Vp), jnp.float32).at[order].set(out_a)
+    return dists[:, :V], alive[:, :V] != 0.0
+
+
+@functools.partial(
+    jax.jit, static_argnames=("metric", "use_pallas", "packed", "dim")
 )
 def batched_distance_quant_op(
     T: jax.Array,
@@ -175,9 +271,16 @@ def batched_distance_quant_op(
     offset: jax.Array | None = None,
     metric: str = "l2",
     use_pallas: bool = True,
+    packed: bool = False,
+    dim: int | None = None,
 ) -> jax.Array:
     """Quantized-operand MXU batch scan: (D, V) mirror tile + (B, D) f32
-    queries -> (B, V) f32 distances, dequantizing in-register."""
+    queries -> (B, V) f32 distances, dequantizing in-register.  ``packed``
+    takes an int4 tile ((ceil(dim/2), V) uint8): the nibbles unpack to int8
+    levels outside the kernel (XLA fuses the unpack into the feed) and the
+    existing quantized MXU path runs unchanged."""
+    if packed:
+        T = _unpack_int4_levels(T, dim)
     if not use_pallas:
         return ref.batched_distance_quant_ref(T, Q, scale, offset, metric)
     D, V = T.shape

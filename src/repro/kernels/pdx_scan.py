@@ -27,11 +27,13 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "pdx_distance_pallas",
     "pdx_prune_scan_pallas",
     "pdx_prune_scan_multi_pallas",
+    "pdx_prune_scan_multi_prefetch_pallas",
 ]
 
 
@@ -185,7 +187,7 @@ def pdx_prune_scan_pallas(
 # --------------------------------------------------------------------------
 def _prune_scan_multi_kernel(
     q_ref, x_ref, ids_ref, thr_ref, scale_ref, offset_ref, o_ref, alive_ref,
-    *, dim: int, d_tile: int, eps0: float, quantized: bool,
+    *, dim: int, d_tile: int, eps0: float, quantized: bool, packed: bool,
 ):
     i = pl.program_id(1)  # d-tile index (innermost => accumulation)
 
@@ -201,7 +203,18 @@ def _prune_scan_multi_kernel(
     # VPU work for its remaining dimension tiles.
     @pl.when(any_alive)
     def _compute():
-        x = x_ref[0].astype(jnp.float32)                     # (dt, V)
+        if packed:
+            # int4 in-register unpack: the byte block (dt/2, V) holds the
+            # even dim in its low nibble, the odd dim in its high nibble,
+            # +8 biased.  Interleave back to (dt, V) quantization levels.
+            xi = x_ref[0].astype(jnp.int32)                  # (dt/2, V)
+            lo = (xi & 0xF) - 8
+            hi = (xi >> 4) - 8
+            x = jnp.stack([lo, hi], axis=1).reshape(
+                2 * xi.shape[0], xi.shape[1]
+            ).astype(jnp.float32)
+        else:
+            x = x_ref[0].astype(jnp.float32)                 # (dt, V)
         if quantized:
             # in-register dequantization: the f32 value never touches HBM
             x = x * scale_ref[...] + offset_ref[...]
@@ -218,7 +231,7 @@ def _prune_scan_multi_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("eps0", "d_tile", "logical_dim", "quantized"),
+    static_argnames=("eps0", "d_tile", "logical_dim", "quantized", "packed"),
 )
 def pdx_prune_scan_multi_pallas(
     T: jax.Array,
@@ -231,6 +244,7 @@ def pdx_prune_scan_multi_pallas(
     d_tile: int = 64,
     logical_dim: int | None = None,
     quantized: bool = False,
+    packed: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused distance+prune over EVERY partition of a store in one kernel.
 
@@ -239,25 +253,33 @@ def pdx_prune_scan_multi_pallas(
     alive (P, V) f32 mask).  Grid is (partition, d-tile); the running
     distances and keep-mask for one partition live in VMEM across its
     d-tiles, so each stored byte is touched exactly once, at mirror width.
+
+    ``packed`` takes an int4 mirror: (P, D/2, V) uint8 bytes unpacked
+    in-register (q/scale/offset stay at the logical, even, D; ``d_tile``
+    must be even).
     """
-    P, D, V = T.shape
+    P, Din, V = T.shape
+    D = 2 * Din if packed else Din  # logical (padded) dimension count
     d_tile = min(d_tile, D)
+    if packed and d_tile % 2:
+        raise ValueError(f"packed scan needs an even d_tile, got {d_tile}")
     nd = pl.cdiv(D, d_tile)
     dim_for_test = logical_dim if logical_dim is not None else D
     q2 = q.reshape(D, 1)
     thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
     scale2 = scale.reshape(D, 1)
     offset2 = offset.reshape(D, 1)
+    x_block = (1, d_tile // 2, V) if packed else (1, d_tile, V)
     grid = (P, nd)
     dists, alive = pl.pallas_call(
         functools.partial(
             _prune_scan_multi_kernel, dim=dim_for_test, d_tile=d_tile,
-            eps0=eps0, quantized=quantized,
+            eps0=eps0, quantized=quantized, packed=packed,
         ),
         grid=grid,
         in_specs=[
             pl.BlockSpec((d_tile, 1), lambda p, i: (i, 0)),
-            pl.BlockSpec((1, d_tile, V), lambda p, i: (p, i, 0)),
+            pl.BlockSpec(x_block, lambda p, i: (p, i, 0)),
             pl.BlockSpec((1, V), lambda p, i: (p, 0)),
             pl.BlockSpec((1, 1), lambda p, i: (0, 0)),
             pl.BlockSpec((d_tile, 1), lambda p, i: (i, 0)),
@@ -273,4 +295,90 @@ def pdx_prune_scan_multi_pallas(
         ],
         interpret=_interpret(),
     )(q2, T, ids, thr2, scale2, offset2)
+    return dists, alive
+
+
+# --------------------------------------------------------------------------
+# Prefetch-skip megakernel: scalar-prefetched partition order so tiles of
+# partitions the previous cascade stage fully pruned are NEVER fetched.
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps0", "d_tile", "logical_dim", "quantized", "packed"),
+)
+def pdx_prune_scan_multi_prefetch_pallas(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    scale: jax.Array,
+    offset: jax.Array,
+    order: jax.Array,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    logical_dim: int | None = None,
+    quantized: bool = False,
+    packed: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """``pdx_prune_scan_multi_pallas`` with a ``PrefetchScalarGridSpec``-driven
+    partition schedule: ``order`` is a (P,) int32 permutation-with-repeats
+    whose leading entries are the partitions still alive after the previous
+    cascade stage and whose tail repeats ``order[0]``.
+
+    The grid still has P slots (grids are static), but the tile BlockSpec
+    indexes HBM through ``order``: a dead partition never appears, and the
+    repeated tail entry resolves to a block the pipeline just fetched, so
+    consecutive identical block indices elide the DMA.  This realizes the
+    bytes model's pruning factor in HBM traffic at partition granularity —
+    the mask alone only saved VPU work.  Outputs are in SLOT order; the
+    caller scatters them back with ``dists.at[order].set(out)`` (dead
+    partitions keep the caller's init values).
+    """
+    P, Din, V = T.shape
+    D = 2 * Din if packed else Din
+    d_tile = min(d_tile, D)
+    if packed and d_tile % 2:
+        raise ValueError(f"packed scan needs an even d_tile, got {d_tile}")
+    nd = pl.cdiv(D, d_tile)
+    dim_for_test = logical_dim if logical_dim is not None else D
+    q2 = q.reshape(D, 1)
+    thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
+    scale2 = scale.reshape(D, 1)
+    offset2 = offset.reshape(D, 1)
+    x_block = (1, d_tile // 2, V) if packed else (1, d_tile, V)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(P, nd),
+        in_specs=[
+            pl.BlockSpec((d_tile, 1), lambda p, i, order_ref: (i, 0)),
+            pl.BlockSpec(x_block, lambda p, i, order_ref: (order_ref[p], i, 0)),
+            pl.BlockSpec((1, V), lambda p, i, order_ref: (order_ref[p], 0)),
+            pl.BlockSpec((1, 1), lambda p, i, order_ref: (0, 0)),
+            pl.BlockSpec((d_tile, 1), lambda p, i, order_ref: (i, 0)),
+            pl.BlockSpec((d_tile, 1), lambda p, i, order_ref: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, V), lambda p, i, order_ref: (p, 0)),
+            pl.BlockSpec((1, V), lambda p, i, order_ref: (p, 0)),
+        ],
+    )
+
+    def kernel(order_ref, q_ref, x_ref, ids_ref, thr_ref, scale_ref,
+               offset_ref, o_ref, alive_ref):
+        _prune_scan_multi_kernel(
+            q_ref, x_ref, ids_ref, thr_ref, scale_ref, offset_ref,
+            o_ref, alive_ref,
+            dim=dim_for_test, d_tile=d_tile, eps0=eps0,
+            quantized=quantized, packed=packed,
+        )
+
+    dists, alive = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((P, V), jnp.float32),
+            jax.ShapeDtypeStruct((P, V), jnp.float32),
+        ],
+        interpret=_interpret(),
+    )(order.astype(jnp.int32), q2, T, ids, thr2, scale2, offset2)
     return dists, alive

@@ -25,15 +25,28 @@ def dequantize_ref(
     scale: jax.Array | None,
     offset: jax.Array | None,
     dim_axis: int = 0,
+    packed: bool = False,
+    dim: int | None = None,
 ) -> jax.Array:
     """Mirror-dtype tile -> f32, applying the per-dimension affine
-    dequantization when scale/offset are given (int8 mirrors; bf16/f32 pass
-    None and just upcast).  ``dim_axis`` is the axis holding the D
-    dimension values (0 for a (D, V) tile, 1 for (P, D, V) stacks)."""
+    dequantization when scale/offset are given (int8/int4 mirrors; bf16/f32
+    pass None and just upcast).  ``dim_axis`` is the axis holding the D
+    dimension values (0 for a (D, V) tile, 1 for (P, D, V) stacks).
+    ``packed`` unpacks an int4 two-per-byte tile first (low nibble = even
+    dim, +8 bias — the ``core.layout`` packing), slicing the doubled axis
+    back to logical ``dim`` when given."""
+    if packed:
+        p = T.astype(jnp.int32)
+        full = jnp.stack([(p & 0xF) - 8, (p >> 4) - 8], axis=dim_axis + 1)
+        shape = list(T.shape)
+        shape[dim_axis] *= 2
+        T = full.reshape(shape)
+        if dim is not None and dim != shape[dim_axis]:
+            T = jax.lax.slice_in_dim(T, 0, dim, axis=dim_axis)
     T32 = T.astype(jnp.float32)
     if scale is None:
         return T32
-    shape = [1] * T.ndim
+    shape = [1] * T32.ndim
     shape[dim_axis] = -1
     return T32 * scale.reshape(shape) + offset.reshape(shape)
 
@@ -131,16 +144,19 @@ def pdx_prune_scan_multi_ref(
     eps0: float,
     scale: jax.Array | None = None,
     offset: jax.Array | None = None,
+    packed: bool = False,
+    dim: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Oracle for the multi-partition megakernel.
 
     (P, D, V) mirror-dtype tiles, (P, V) ids -> (dists (P, V), alive (P, V)
     f32 mask).  Matches the kernel's contract: lanes with ``ids < 0`` start
     dead (and accumulate nothing), operands dequantize before the L2
-    accumulation, the hypothesis test runs once per d-tile.
+    accumulation, the hypothesis test runs once per d-tile.  ``packed``
+    takes an int4 mirror, (P, ceil(dim/2), V) uint8 with logical ``dim``.
     """
-    P, D, V = T.shape
-    T32 = dequantize_ref(T, scale, offset, dim_axis=1)
+    T32 = dequantize_ref(T, scale, offset, dim_axis=1, packed=packed, dim=dim)
+    P, D, V = T32.shape
     q32 = q.astype(jnp.float32)
     acc = jnp.zeros((P, V), jnp.float32)
     alive = (ids >= 0).astype(jnp.float32)

@@ -134,16 +134,21 @@ def tile_widths(D: int, d_tile: int = 64) -> np.ndarray:
     return np.minimum(edges + d_tile, D) - edges
 
 
-@functools.partial(jax.jit, static_argnames=("d_tile", "eps0"))
-def _tile_walk(T, ids, q, thr, scale, offset, d_tile, eps0):
+@functools.partial(
+    jax.jit, static_argnames=("d_tile", "eps0", "packed", "dim")
+)
+def _tile_walk(T, ids, q, thr, scale, offset, d_tile, eps0,
+               packed=False, dim=None):
     """Replay of ``kernels.ref.pdx_prune_scan_multi_ref`` that returns the
     per-tile survivor counts instead of the distances: for each d-tile,
     how many lanes and how many partitions were alive when it was reached
     (lanes with ``ids < 0`` start dead; the hypothesis test runs once per
     tile on dequantized operands, so per-dtype rounding differences in the
-    keep-mask are accounted)."""
-    P, D, V = T.shape
-    T32 = dequantize_ref(T, scale, offset, dim_axis=1)
+    keep-mask are accounted).  ``packed``/``dim`` take a packed int4 mirror
+    (the walk runs over the unpacked logical dimensions)."""
+    T32 = dequantize_ref(T, scale, offset, dim_axis=1,
+                         packed=packed, dim=dim)
+    P, D, V = T32.shape
     q32 = q.astype(jnp.float32)
     acc = jnp.zeros((P, V), jnp.float32)
     alive = (ids >= 0).astype(jnp.float32)
@@ -166,21 +171,24 @@ def _tile_walk(T, ids, q, thr, scale, offset, d_tile, eps0):
 
 def fused_tile_counts(
     mdata, ids, qt, thr, scale=None, offset=None, *,
-    eps0: float, d_tile: int = 64,
+    eps0: float, d_tile: int = 64, packed: bool = False,
+    dim: Optional[int] = None,
 ) -> tuple[np.ndarray, np.ndarray]:
     """Per-d-tile (lanes alive, partitions alive) entering each tile of a
     fused keep-mask scan of the (P, D, V) mirror tiles ``mdata``.
     ``scale``/``offset`` are the mirror's dequantization vectors (pass
-    ``None`` for f32/bf16 mirrors).  Returns two (n_tiles,) float arrays.
+    ``None`` for f32/bf16 mirrors); ``packed``/``dim`` mark a packed int4
+    mirror whose logical D is ``dim``.  Returns two (n_tiles,) float arrays.
     """
-    D = mdata.shape[1]
+    D = dim if packed else mdata.shape[1]
     if scale is None:
         scale = jnp.ones((D,), jnp.float32)
     if offset is None:
         offset = jnp.zeros((D,), jnp.float32)
     lanes, parts = _tile_walk(
         mdata, jnp.asarray(ids), jnp.asarray(qt, jnp.float32),
-        jnp.float32(thr), scale, offset, d_tile, float(eps0),
+        jnp.float32(thr), scale, offset, min(d_tile, D), float(eps0),
+        packed=packed, dim=dim,
     )
     return np.asarray(lanes), np.asarray(parts)
 
@@ -194,11 +202,12 @@ def fused_demand_bytes(
     ``mirror`` is a ``core.layout.DeviceMirror``; ``p0`` the START
     partition (masked out of the pruned scan, exactly as the executor does).
     """
-    P, D, C = mirror.data.shape
+    C = mirror.data.shape[2]
+    D = mirror.dim  # logical D (packed int4 halves the stored axis)
     ids_scan = jnp.asarray(ids).at[p0].set(-1)
     _, parts = fused_tile_counts(
         mirror.data, ids_scan, qt, thr, mirror.scale, mirror.offset,
-        eps0=eps0, d_tile=d_tile,
+        eps0=eps0, d_tile=d_tile, packed=mirror.packed, dim=mirror.dim,
     )
     w = tile_widths(D, d_tile)
     return float(D * C * 4 + (parts * w).sum() * C * mirror.bytes_per_value)

@@ -1,0 +1,122 @@
+"""Minimal vendored stand-in for the hypothesis API surface the property
+tests use, so ``tests/test_property.py`` runs (instead of skipping) in
+environments where the real ``hypothesis`` package is not installed.
+
+This is NOT a property-testing engine: no shrinking, no adaptive search, no
+database.  It is a deterministic seeded sweep — ``@given`` draws
+``max_examples`` pseudo-random example dicts from the declared strategies
+(seeded per test function, so failures reproduce) and calls the test once
+per example, reporting the falsifying example on the first failure.  When
+the real hypothesis is available (``pip install .[test]``), the import in
+``test_property.py`` prefers it and this module is inert.
+
+Supported surface (exactly what the tests import):
+  ``given(**strategies)``, ``settings(max_examples=, deadline=)``,
+  ``strategies.integers / floats / sampled_from / lists`` (aliased ``st``).
+"""
+from __future__ import annotations
+
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 50
+
+
+class _Strategy:
+    """A draw rule: ``rng -> example``."""
+
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:
+    """The ``hypothesis.strategies`` names the tests use."""
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1))
+        )
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        return _Strategy(
+            lambda rng: [
+                elements.draw(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))
+            ]
+        )
+
+
+st = strategies
+
+
+class settings:
+    """Decorator applied OVER a ``@given``-wrapped test (hypothesis's
+    composition order); records ``max_examples`` on the wrapper.  The
+    ``deadline`` knob is accepted and ignored (there is no watchdog)."""
+
+    def __init__(self, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = int(max_examples)
+
+    def __call__(self, fn):
+        fn._minihyp_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategy_kwargs):
+    """Seeded-sweep ``@given``: run the test once per drawn example dict.
+
+    The per-test RNG seed derives from the function's qualified name (CRC32
+    — stable across processes, unlike ``hash(str)``), so a red run's
+    falsifying example reproduces on re-run without a shared database."""
+
+    def deco(fn):
+        base_seed = zlib.crc32(fn.__qualname__.encode())
+
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_minihyp_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            for case in range(n):
+                rng = np.random.default_rng((base_seed, case))
+                drawn = {
+                    name: strat.draw(rng)
+                    for name, strat in strategy_kwargs.items()
+                }
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as exc:
+                    raise AssertionError(
+                        f"minihyp falsifying example "
+                        f"(case {case}/{n}): {drawn!r}"
+                    ) from exc
+
+        # identity without functools.wraps: copying __wrapped__ would make
+        # pytest read the original signature and hunt fixtures named after
+        # the strategy parameters — the wrapper must look zero-argument
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return deco

@@ -1,0 +1,206 @@
+"""Cascaded multi-resolution scan: the int4 packed mirror (roundtrip error
+bound on skewed data, packed/unpacked parity), the projection mirror's
+exact-safe lower bound + caching, the cascade stage grammar and spec
+validation, planner dispatch, the cascade-scan executor's Pallas(interpret)
+== jnp parity and exact recall at non-aligned D/V with PAD lanes, and
+quantized centroid routing parity with f32 routing."""
+import numpy as np
+import pytest
+
+from repro.core.engine import SearchSpec, VectorSearchEngine
+from repro.core.layout import device_mirror, projection_mirror, unpack_int4
+from repro.core.plan import plan_search
+from repro.core.spec import parse_cascade_stage
+from repro.data.synthetic import ground_truth, make_dataset, recall_at_k
+from repro.kernels.ref import dequantize_ref
+
+
+# ------------------------------------------------------------ stage grammar
+def test_cascade_stage_grammar():
+    assert parse_cascade_stage("f32") == ("exact", "f32", 0)
+    assert parse_cascade_stage("int8") == ("scan", "int8", 0)
+    assert parse_cascade_stage("int4") == ("scan", "int4", 0)
+    assert parse_cascade_stage("bf16") == ("scan", "bf16", 0)
+    assert parse_cascade_stage("proj32") == ("proj", "f32", 32)
+    assert parse_cascade_stage("proj16:int4") == ("proj", "int4", 16)
+    for bad in ("fp8", "proj0", "proj:int8", "projx:int8", "proj8:fp8",
+                "f64", ""):
+        with pytest.raises(ValueError, match="bad cascade stage"):
+            parse_cascade_stage(bad)
+
+
+def test_spec_validates_cascade():
+    # well-formed cascades construct
+    SearchSpec(cascade=("proj32:int8", "int4", "f32"))
+    SearchSpec(cascade=("int8", "f32"), route_dtype="int8")
+    cases = [
+        dict(cascade=("f32",)),                      # too short
+        dict(cascade="int8,f32"),                    # not a tuple
+        dict(cascade=("int8", "int4")),              # missing terminator
+        dict(cascade=("f32", "int8", "f32")),        # f32 not terminal
+        dict(cascade=("int8", "proj16", "f32")),     # proj not first
+        dict(cascade=("int8", "int8", "f32")),       # duplicate stage
+        dict(cascade=("int8", "f32"), metric="ip"),  # L2 only
+        dict(route_dtype="fp8"),                     # bad routing dtype
+    ]
+    for bad in cases:
+        with pytest.raises(ValueError):
+            SearchSpec(**bad)
+
+
+# ------------------------------------------------------------- int4 mirror
+def test_int4_mirror_roundtrip_error_bounded():
+    """15-level observed-range affine on heavy-tailed data: live-value
+    reconstruction error is at most half a quantization step, and the
+    packed payload is half the dimension bytes."""
+    X, _ = make_dataset(2000, 17, "skewed", n_queries=1, seed=3)  # odd D too
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=256)
+    m = device_mirror(eng.store, "int4")
+    assert m.packed and m.quantized and m.bytes_per_value == 0.5
+    assert m.dim == 17 and m.data.shape[1] == 9  # ceil(17 / 2) packed bytes
+    assert m.data.dtype == np.uint8
+
+    T = np.asarray(eng.store.data)
+    live = np.asarray(eng.store.ids) >= 0
+    levels = np.asarray(unpack_int4(m.data, dim_axis=1, dim=m.dim), np.float32)
+    deq = (levels * np.asarray(m.scale)[None, :, None]
+           + np.asarray(m.offset)[None, :, None])
+    err = np.abs(deq - T)[np.broadcast_to(live[:, None, :], T.shape)]
+    step = np.asarray(m.scale).max()  # = per-dim absmax / 7
+    assert err.max() <= step / 2 + 1e-5  # no clipping, ever
+
+
+def test_int4_packed_unpacked_parity():
+    """``dequantize_ref(packed=True)`` == unpack-then-affine, on both tile
+    layouts the kernels use ((D, V) single tile and (P, D, V) stacks)."""
+    X, _ = make_dataset(900, 21, "normal", n_queries=1, seed=5)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    m = device_mirror(eng.store, "int4")
+    want = (np.asarray(unpack_int4(m.data, dim_axis=1, dim=m.dim), np.float32)
+            * np.asarray(m.scale)[None, :, None]
+            + np.asarray(m.offset)[None, :, None])
+    got = np.asarray(dequantize_ref(m.data, m.scale, m.offset, dim_axis=1,
+                                    packed=True, dim=m.dim))
+    np.testing.assert_array_equal(got, want)
+    got0 = np.asarray(dequantize_ref(m.data[0], m.scale, m.offset,
+                                     dim_axis=0, packed=True, dim=m.dim))
+    np.testing.assert_array_equal(got0, want[0])
+
+
+# ------------------------------------------------------- projection mirror
+def test_projection_mirror_cache_and_lower_bound():
+    X, Q = make_dataset(1200, 32, "clustered", n_queries=4, seed=7)
+    eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
+    m = projection_mirror(eng.store, 8)
+    assert m.rank == 8 and m.data.shape[1] == 8
+    # cached per version; the PCA fit is shared across rank/dtype variants
+    assert projection_mirror(eng.store, 8) is m
+    m4 = projection_mirror(eng.store, 8, "int4")
+    assert m4 is not m and m4.packed and m4.data.shape[1] == 4
+    assert ("comps", 0) in eng.store._proj_cache
+    with pytest.raises(ValueError, match="rank"):
+        projection_mirror(eng.store, 64)
+
+    # orthonormal columns: projected L2 lower-bounds the full L2 for every
+    # query/vector pair — the cascade's exact-safe keep test rests on this
+    C = np.asarray(m.components)
+    np.testing.assert_allclose(C.T @ C, np.eye(8), atol=1e-4)
+    P = np.asarray(m.data)          # (P, rank, C) projected tiles
+    live = np.asarray(eng.store.ids) >= 0
+    T = np.asarray(eng.store.data)  # (P, D, C) masters
+    for q in Q:
+        qp = q @ C
+        d_proj = ((P - qp[None, :, None]) ** 2).sum(axis=1)
+        d_full = ((T - q[None, :, None]) ** 2).sum(axis=1)
+        assert np.all(d_proj[live] <= d_full[live] + 1e-2)
+
+
+# ---------------------------------------------------------------- planner
+def test_cascade_planner_dispatch():
+    X, _ = make_dataset(512, 16, "normal", n_queries=1, seed=1)
+    store = VectorSearchEngine.build(X, pruner="linear", capacity=128).store
+    spec = SearchSpec(k=5, cascade=("proj8:int8", "int4", "f32"))
+    p = plan_search(spec, store, 1)
+    assert p.executor == "cascade-scan"
+    assert "proj8:int8" in p.reason and "cascade" in p.reason
+    p = plan_search(spec, store, 4)  # batches loop through the same executor
+    assert p.executor == "cascade-scan"
+    # no cascade -> the single-level dispatch is untouched
+    assert plan_search(SearchSpec(k=5), store, 1).executor == "adaptive"
+
+
+# ----------------------------------------------------- executor correctness
+CASCADES = [
+    ("proj16:int8", "int4", "f32"),
+    ("proj16:int4", "int8", "f32"),
+    ("int8", "int4", "f32"),
+    ("bf16", "int8", "f32"),
+]
+
+
+@pytest.mark.parametrize("cascade", CASCADES, ids=lambda c: "→".join(c))
+def test_cascade_exact_and_kernel_parity_on_nonaligned_store(cascade):
+    """cascade-scan vs brute-force ground truth at non-aligned D (50) with
+    PAD lanes (1900 % 256 != 0): recall@k == 1.0 after the f32 re-rank on
+    BOTH kernel bodies, and the Pallas(interpret) ids match the jnp twin
+    exactly (same survivors -> same re-rank candidates)."""
+    X, Q = make_dataset(1900, 50, "clustered", n_queries=4, seed=7)
+    gt_ids, gt_d = ground_truth(X, Q, k=5)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=256)
+    base = SearchSpec(k=5, cascade=cascade)
+
+    res_j = eng.search(Q, base.replace(kernel="jnp"))
+    assert res_j.plan.executor == "cascade-scan", res_j.plan
+    assert recall_at_k(res_j.ids, gt_ids) == 1.0, (cascade, res_j.ids)
+    np.testing.assert_allclose(  # re-ranked distances are exact f32
+        np.sort(res_j.dists, axis=1), np.sort(gt_d, axis=1),
+        rtol=1e-4, atol=1e-3,
+    )
+    res_p = eng.search(Q, base.replace(kernel="pallas"))
+    np.testing.assert_array_equal(res_p.ids, res_j.ids)
+
+
+def test_cascade_on_ivf_store_with_quantized_routing():
+    """With an IVF engine the cascade seeds its threshold from the routed
+    nearest bucket — through a quantized centroid scan when asked — and
+    still returns the true top-k."""
+    X, Q = make_dataset(2048, 32, "clustered", n_queries=3, seed=4)
+    gt_ids, _ = ground_truth(X, Q, k=5)
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="adsampling", capacity=128, nlist=8,
+    )
+    for rdt in ("f32", "int8", "int4"):
+        spec = SearchSpec(k=5, cascade=("proj8:int8", "int4", "f32"),
+                          kernel="jnp", route_dtype=rdt)
+        res = eng.search(Q, spec)
+        assert res.plan.executor == "cascade-scan", res.plan
+        assert recall_at_k(res.ids, gt_ids) == 1.0, rdt
+
+
+def test_cascade_rejects_non_l2_at_the_spec():
+    with pytest.raises(ValueError, match="L2-only"):
+        SearchSpec(k=3, metric="l1", cascade=("int8", "f32"))
+
+
+# ------------------------------------------------ quantized centroid routing
+def test_quantized_centroid_routing_parity():
+    """Centroid routing through the int8/int4 centroid mirror selects the
+    same nearest bucket as f32 routing on well-separated clusters, and a
+    full-probe search with quantized routing stays exact."""
+    X, Q = make_dataset(2048, 32, "clustered", n_queries=6, seed=0)
+    nlist = 16
+    eng = VectorSearchEngine.build(
+        X, index="ivf", pruner="linear", capacity=64, nlist=nlist,
+    )
+    gt_ids, _ = ground_truth(X, Q, k=5)
+    import jax.numpy as jnp
+
+    sel_f32 = np.asarray(eng.ivf.route_batch(jnp.asarray(Q), 1))
+    for rdt in ("int8", "int4"):
+        sel_q = np.asarray(eng.ivf.route_batch(jnp.asarray(Q), 1, "l2", rdt))
+        np.testing.assert_array_equal(sel_q, sel_f32)
+        res = eng.search(
+            Q, SearchSpec(k=5, nprobe=nlist, route_dtype=rdt,
+                          executor="adaptive"),
+        )
+        assert recall_at_k(res.ids, gt_ids) == 1.0, rdt

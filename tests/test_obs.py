@@ -149,11 +149,15 @@ def test_disabled_mode_is_noop():
     assert reg.dump_json() == before
 
     # a full engine search mutates neither registry nor ring, and the
-    # result carries no trace
+    # result carries no trace — including the cascade executor, whose
+    # per-stage survivor/byte meters must be strict no-ops when disabled
     X, Q = make_dataset(512, 16, "normal", n_queries=2, seed=0)
     eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
     res = eng.search(Q, SearchSpec(k=3))
     assert res.trace is None
+    res = eng.search(Q, SearchSpec(k=3, cascade=("int8", "f32"),
+                                   kernel="jnp"))
+    assert res.plan.executor == "cascade-scan" and res.trace is None
     assert reg.dump_json() == before
     assert trace.get_tracer().last() is None
 
@@ -240,6 +244,61 @@ def test_stats_populated_on_every_single_device_executor(obs):
     assert stats.values_total > 0
     assert stats.values_avoided == pytest.approx(
         stats.values_total - stats.values_computed
+    )
+
+
+def test_cascade_stage_meters(obs):
+    """The cascade executor reports per-stage survivors and realized bytes:
+    survivors are monotone non-increasing across stages (each stage only
+    prunes), never drop below k on an exact-recall config, and the byte
+    meters reflect each stage mirror's width."""
+    # flat store on normal data: true neighbours scatter across partitions,
+    # so the scan stages (which exclude the exact START partition) must keep
+    # at least ~k survivors per query for the re-rank to stay exact
+    X, Q = make_dataset(2048, 32, "normal", n_queries=4, seed=6)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=128)
+    cascade = ("proj8:int8", "int4", "f32")
+    stats = SearchStats()
+    res = eng.search(Q, SearchSpec(k=5, cascade=cascade, kernel="jnp"),
+                     stats=stats)
+    assert res.plan.executor == "cascade-scan", res.plan
+
+    reg = metrics.get_registry()
+    surv = [
+        reg.get("repro_cascade_stage_survivors", stage=str(si),
+                stage_name=cascade[si])
+        for si in range(2)
+    ]
+    byts = [
+        reg.get("repro_cascade_stage_bytes", stage=str(si),
+                stage_name=cascade[si])
+        for si in range(2)
+    ]
+    assert surv[0] >= surv[1] >= len(Q) * 5  # monotone, >= k per query
+    # stage 0 streams every partition of the rank-8 int8 projection mirror;
+    # stage 1 fetches at most the full int4 store (prefetch-skip can only
+    # shrink it), and both meters carry real traffic
+    P, C, D = (eng.store.num_partitions, eng.store.capacity, eng.store.dim)
+    assert byts[0] == pytest.approx(len(Q) * P * 8 * C * 1)
+    assert 0 < byts[1] <= len(Q) * P * D * C * 0.5
+    # the device-bytes account carries the same scan traffic per dtype,
+    # plus the exact f32 START and re-rank components
+    assert reg.get("repro_device_bytes_total", executor="cascade-scan",
+                   component="scan", dtype="int8") == byts[0]
+    assert reg.get("repro_device_bytes_total", executor="cascade-scan",
+                   component="scan", dtype="int4") == byts[1]
+    assert reg.get("repro_device_bytes_total", executor="cascade-scan",
+                   component="start", dtype="f32") > 0
+    assert reg.get("repro_device_bytes_total", executor="cascade-scan",
+                   component="rerank", dtype="f32") > 0
+    # SearchStats: total is the single-resolution full-scan equivalent;
+    # cascade work may exceed it when pruning is weak (each stage re-reads
+    # survivors at a new width), so only "avoided" is clamped at zero
+    total_1 = float(np.asarray(eng.store.counts).sum()) * eng.store.dim
+    assert stats.values_computed > 0
+    assert stats.values_total == pytest.approx(total_1 * len(Q))
+    assert stats.values_avoided == max(
+        stats.values_total - stats.values_computed, 0.0
     )
 
 

@@ -63,10 +63,6 @@ def test_planner_dispatch_rules():
     assert plan_search(spec, store, 8).executor == "batch-matmul"
     assert plan_search(spec.replace(prefer_static=True), store, 1).executor \
         == "jit-masked"
-    # stats no longer pin the executor — every path populates SearchStats
-    assert plan_search(spec, store, 1, wants_stats=True).executor == "adaptive"
-    assert plan_search(spec, store, 8, wants_stats=True).executor \
-        == "batch-matmul"
 
     data_mesh = _FakeMesh(data=8)
     assert plan_search(spec, store, 1, mesh=data_mesh).executor \
@@ -97,7 +93,7 @@ def test_planner_dispatch_rules():
 
     # forced executor wins over everything
     p = plan_search(spec.replace(executor="jit-masked"), store, 4,
-                    mesh=data_mesh, wants_stats=True)
+                    mesh=data_mesh)
     assert p.executor == "jit-masked" and "forced" in p.reason
     with pytest.raises(ValueError, match="unknown executor"):
         plan_search(spec.replace(executor="warp-drive"), store, 1)
@@ -248,17 +244,16 @@ def test_exec_cache_fingerprint_keyed_and_bounded():
     assert (pr.fingerprint, "l2", 0) in _EXEC_CACHE
 
 
-# ------------------------------------------------------------ deprecated shims
-def test_deprecated_shims_still_work():
+# --------------------------------------------------- legacy surface is gone
+def test_deprecated_shims_removed_and_legacy_call_shapes_work():
     X, Q = make_dataset(600, 16, "normal", n_queries=3, seed=5)
     gt_ids, _ = ground_truth(X, Q, k=4)
     eng = VectorSearchEngine.build(X, pruner="linear", capacity=128)
-    with pytest.warns(DeprecationWarning):
-        ids, dists = eng.search_batch(Q, k=4)
+    # PR 2's DeprecationWarning shims were removed: search() is the only door
+    assert not hasattr(eng, "search_batch")
+    assert not hasattr(eng, "search_jit")
+    ids, dists = eng.search(Q, k=4)
     assert ids.shape == (3, 4) and recall_at_k(ids, gt_ids) == 1.0
-    with pytest.warns(DeprecationWarning):
-        ids, dists = eng.search_jit(Q[0], k=4)
-    assert set(ids.tolist()) == set(gt_ids[0].tolist())
     # legacy kwarg/positional call shapes on the unified entry point
     ids, dists = eng.search(Q[0], 4)
     assert ids.shape == (4,)

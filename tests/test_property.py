@@ -1,10 +1,15 @@
-"""Property-based tests (hypothesis) for the system's invariants."""
+"""Property-based tests for the system's invariants.
+
+Prefers the real ``hypothesis`` package (``pip install .[test]``); falls
+back to the vendored seeded-sweep shim (``tests/minihyp.py``) so the suite
+never skips these invariants in environments without it."""
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-hypothesis = pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # vendored fallback: deterministic seeded sweep
+    from minihyp import given, settings, strategies as st  # noqa: F401
 
 from repro.core.distance import nary_distance, pdx_distance
 from repro.core.engine import SearchSpec, VectorSearchEngine

@@ -111,9 +111,7 @@ def test_fused_planner_dispatch():
     # non-l2 single queries take the batch kernel (megakernel is L2-only)
     p = plan_search(spec.replace(scan_dtype="int8", metric="ip"), store, 1)
     assert p.executor == "fused-batch"
-    # stats no longer pin the executor — every path populates SearchStats
-    p = plan_search(spec.replace(scan_dtype="int8"), store, 1,
-                    wants_stats=True)
+    p = plan_search(spec.replace(scan_dtype="int8"), store, 1)
     assert p.executor == "fused-scan"
 
 

@@ -142,7 +142,7 @@ def test_planner_routes_ivf_on_data_mesh():
     assert p.executor == "adaptive" and "'data' axis" in p.reason
     # stats no longer pin the executor — the routed path fills SearchStats
     # from the selected buckets' host-side metadata
-    p = plan_search(spec, store, 4, ivf=ivf, mesh=mesh, wants_stats=True)
+    p = plan_search(spec, store, 4, ivf=ivf, mesh=mesh)
     assert p.executor == "routed_bucket"
 
 
@@ -288,6 +288,44 @@ def test_routed_bucket_one_alltoall_one_allgather_8dev():
             counts = collective_counts(fn, buf)
             assert counts == {"all_to_all": 1, "all_gather": 1}, \
                 (B, nprobe, counts)
+    print("OK")
+    """)
+
+
+def test_routed_bucket_quantized_routing_keeps_collective_gate_8dev():
+    """Quantized centroid routing (route_dtype="int8") is host-side and
+    pre-collective: the routed executor still issues exactly ONE all-to-all
+    + ONE packed all-gather per batch, and full-probe answers stay exact."""
+    run_devices("""
+    from repro.core.engine import SearchSpec, VectorSearchEngine
+    from repro.data.synthetic import make_dataset, ground_truth, recall_at_k
+    from repro.obs import metrics
+
+    metrics.set_enabled(True)
+    X, Q = make_dataset(2048, 32, "clustered", n_queries=6, seed=0)
+    nlist = 16
+    mesh = jax.make_mesh((8,), ("data",))
+    eng = VectorSearchEngine.build(X, index="ivf", pruner="linear",
+                                   capacity=64, nlist=nlist, mesh=mesh)
+    gt_ids, _ = ground_truth(X, Q, k=5)
+    reg = metrics.get_registry()
+
+    res = eng.search(Q, SearchSpec(k=5, nprobe=nlist, route_dtype="int8"))
+    assert res.plan.executor == "routed_bucket", res.plan
+    assert recall_at_k(res.ids, gt_ids) == 1.0
+    assert reg.get("repro_collectives_issued_total",
+                   executor="routed_bucket", primitive="all_to_all") == 1.0
+    assert reg.get("repro_collectives_issued_total",
+                   executor="routed_bucket", primitive="all_gather") == 1.0
+    # the quantized centroid scan's bytes are metered at the routing dtype
+    assert reg.get("repro_device_bytes_total", executor="route",
+                   component="scan", dtype="int8") > 0
+
+    # partial probe: same answer set as f32 routing on separated clusters
+    rq = eng.search(Q, SearchSpec(k=5, nprobe=4, route_dtype="int8"))
+    rf = eng.search(Q, SearchSpec(k=5, nprobe=4))
+    for qi in range(len(Q)):
+        assert set(rq.ids[qi].tolist()) == set(rf.ids[qi].tolist()), qi
     print("OK")
     """)
 
