@@ -25,6 +25,7 @@ MODULES = [
     ("fig12", "benchmarks.bench_gather"),
     ("roofline", "benchmarks.roofline"),
     ("serve", "benchmarks.bench_serve"),
+    ("tiered", "benchmarks.bench_tiered"),
 ]
 
 

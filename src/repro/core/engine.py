@@ -184,6 +184,9 @@ class VectorSearchEngine:
         rerank_mult: int = 4,
         cascade: Optional[tuple] = None,
         route_dtype: str = "f32",
+        tree="auto",
+        super_k: Optional[int] = None,
+        nprobe_super: Optional[int] = None,
     ) -> "VectorSearchEngine":
         X = np.ascontiguousarray(np.asarray(X, np.float32))
         pr = _make_pruner(
@@ -195,7 +198,8 @@ class VectorSearchEngine:
             nlist = nlist or max(int(np.sqrt(len(X))), 1)
             ivf = build_ivf(
                 Xt, nlist, capacity=capacity, kmeans_iters=kmeans_iters,
-                seed=seed, precomputed=precomputed_ivf,
+                seed=seed, precomputed=precomputed_ivf, tree=tree,
+                super_k=super_k, nprobe_super=nprobe_super,
             )
             store = ivf.store
         elif index == "flat":
@@ -401,6 +405,14 @@ class VectorSearchEngine:
             self.ivf.centroid_store = build_flat_store(
                 cents, capacity=self.ivf.centroid_store.capacity
             )
+            if self.ivf.tree_enabled:
+                # The two-level tree clusters *centroids*; re-cluster it in
+                # the rotated space, keeping the configured fan-out.
+                self.ivf.attach_tree(
+                    int(self.ivf.super_children.shape[0]),
+                    self.ivf.nprobe_super,
+                    seed=self.pruner.aux["seed"],
+                )
         self.pruner = new_pruner
 
     # --------------------------------------------------------- observability

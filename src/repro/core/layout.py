@@ -35,6 +35,7 @@ exactly like the f32 upload — see the dtype-policy block below.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Optional, Sequence
 
@@ -50,6 +51,7 @@ __all__ = [
     "MutablePDXStore",
     "DeviceMirror",
     "ProjectionMirror",
+    "BucketCache",
     "SCAN_DTYPES",
     "device_mirror",
     "projection_mirror",
@@ -529,6 +531,347 @@ def pdx_to_nary(store) -> np.ndarray:
 
 
 # ==========================================================================
+# Tiered bucket cache — the beyond-HBM device working set.
+#
+# ``device_mirror`` materializes the WHOLE store at the scan dtype, which
+# caps collection size at device HBM.  ``BucketCache`` keeps the f32 masters
+# authoritative in host RAM and manages a fixed pool of tile-sized device
+# slots as a bucket-granular cache: routing tells it which IVF buckets a
+# batch will scan (``ensure``), cold buckets are LRU-evicted, and the
+# requested buckets' tile extents are quantized host-side and uploaded.
+# Quantization parameters are computed ONCE per store generation over all
+# live masters with NumPy arithmetic that matches ``_quantize_int8``/
+# ``_quantize_int4`` op-for-op, so a cached bucket's tiles are bitwise
+# identical to the fully-resident mirror's — eviction/readmission can never
+# change a candidate set.  ``generation`` tags every entry with the store's
+# ``tiles_version``; any sealed-tile mutation invalidates the whole pool
+# exactly like the mirror cache.
+# ==========================================================================
+@jax.jit
+def _quantize_extent_int8(x, scale, offset):
+    """(m, D, C) f32 tile extent -> int8 levels at the GIVEN per-dim affine
+    (the cache's per-generation global params) — same rounding/clip ops as
+    ``_quantize_int8`` so cached and fully-resident tiles match bitwise."""
+    q = jnp.round((x - offset[None, :, None]) / scale[None, :, None])
+    return jnp.clip(q, -127, 127).astype(jnp.int8)
+
+
+@jax.jit
+def _quantize_extent_int4(x, scale, offset):
+    q = jnp.clip(
+        jnp.round((x - offset[None, :, None]) / scale[None, :, None]),
+        -7, 7,
+    ).astype(jnp.int32)
+    if q.shape[1] % 2:
+        q = jnp.pad(q, ((0, 0), (0, 1), (0, 0)))
+    qb = (q + 8).astype(jnp.uint8)
+    return qb[:, 0::2, :] | (qb[:, 1::2, :] << 4)
+
+
+def _host_quant_params(
+    data: np.ndarray, ids: np.ndarray, means: np.ndarray, dtype: str
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-dimension (scale, offset) over the live host masters, float32
+    arithmetic mirroring the jitted quantizers: offset = dim means, scale =
+    live-masked absmax / 127 (int8) or / 7 (int4).  abs/sub/max/div are all
+    exactly-rounded IEEE ops, so this equals the on-device computation."""
+    D = data.shape[1]
+    if dtype in ("f32", "bf16"):
+        return np.ones((D,), np.float32), np.zeros((D,), np.float32)
+    means = np.asarray(means, np.float32)
+    live = (ids >= 0)[:, None, :]
+    dev = np.abs(data - means[None, :, None]).astype(np.float32)
+    absmax = np.max(np.where(live, dev, np.float32(0.0)), axis=(0, 2))
+    # XLA strength-reduces the quantizers' ``/ denom`` to ``* (1/denom)``;
+    # multiply by the f32 reciprocal here too or the scales drift one ulp.
+    rdenom = np.float32(1.0 / (127.0 if dtype == "int8" else 7.0))
+    scale = np.maximum(absmax, np.float32(1e-6)) * rdenom
+    return scale.astype(np.float32), means
+
+
+class BucketCache:
+    """Fixed slot-pool device cache of bucket tile extents (see block
+    comment above).
+
+    ``capacity_slots`` tiles are pre-allocated once; each resident IVF
+    bucket owns the contiguous run of its partitions inside the pool (tile-
+    aligned extents, any slot order — the scan masks by ``slot_bucket``, it
+    never assumes pool adjacency).  ``n_regions`` > 1 splits the pool into
+    equal contiguous regions with independent free lists + LRU chains; the
+    routed executor aligns regions with ``Placement.bucket_shard`` so each
+    device shard caches exactly the buckets it owns and pool uploads land in
+    that shard's slice of the sharded pool array.
+
+    Concurrency: pool updates are functional (``array.at[slots].set``), so
+    an in-flight device scan that captured the previous pool array snapshot
+    keeps scanning consistent tiles while ``ensure`` builds the next one —
+    this is what lets the serve executor overlap batch N+1's uploads with
+    batch N's scan without a device-side lock.
+    """
+
+    def __init__(
+        self,
+        store,
+        *,
+        capacity_slots: int,
+        dtype: str = "int8",
+        n_regions: int = 1,
+        bucket_region: Optional[np.ndarray] = None,
+        part_offsets: Optional[np.ndarray] = None,
+        part_counts: Optional[np.ndarray] = None,
+    ):
+        if dtype not in SCAN_DTYPES:
+            raise ValueError(
+                f"scan dtype must be one of {SCAN_DTYPES}, got {dtype!r}"
+            )
+        if capacity_slots < 1:
+            raise ValueError(f"capacity_slots must be >= 1, got {capacity_slots}")
+        if n_regions < 1:
+            raise ValueError(f"n_regions must be >= 1, got {n_regions}")
+        self.store = store
+        self.dtype = dtype
+        self.n_regions = int(n_regions)
+        self.region_slots = max(capacity_slots // self.n_regions, 1)
+        self.capacity_slots = self.region_slots * self.n_regions
+        if bucket_region is None:
+            self._bucket_region = None  # every bucket -> region 0
+        else:
+            self._bucket_region = np.asarray(bucket_region, np.int64)
+        # frozen stores carry no bucket structure of their own; the builder
+        # (IVF) passes the extent table explicitly.
+        self._static_extent = None
+        if part_offsets is not None:
+            self._static_extent = (
+                np.asarray(part_offsets, np.int64),
+                np.asarray(part_counts, np.int64),
+            )
+        self.generation = -1
+        # populated by _revalidate (needs store geometry):
+        self._pool = None            # (S, D', C) device, mirror dtype
+        self._ids_dev = None         # (S, C) int32 device
+        self._slot_bucket = None     # (S,) int64 host, -1 = free/invalid
+        self._slot_bucket_dev = None
+        self._slot_ids = None        # (S, C) int32 host mirror of _ids_dev
+        self._scale = None           # (D,) f32 device
+        self._offset = None
+        self._scale_np = None
+        self._offset_np = None
+        self._resident: list = []    # per region: OrderedDict bucket -> slots
+        self._free: list = []        # per region: list of free slot indices
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def dim(self) -> int:
+        return self.store.dim
+
+    @property
+    def packed(self) -> bool:
+        return self.dtype == "int4"
+
+    @property
+    def quantized(self) -> bool:
+        return self.dtype in ("int8", "int4")
+
+    @property
+    def bytes_per_value(self) -> float:
+        return _BYTES_PER_VALUE[self.dtype]
+
+    @property
+    def resident_slots(self) -> int:
+        return self.capacity_slots - sum(len(f) for f in self._free)
+
+    def resident_buckets(self) -> list[int]:
+        return [b for reg in self._resident for b in reg]
+
+    def _region_of(self, b: int) -> int:
+        if self._bucket_region is None:
+            return 0
+        return int(self._bucket_region[b])
+
+    def _masters(self) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Host-side (data, ids, means) views — NumPy masters for the
+        mutable store, a host pull for a frozen one (host RAM is the
+        authoritative tier either way)."""
+        data = getattr(self.store, "_data", None)
+        if data is not None:
+            return data, self.store._ids, self.store._dim_means
+        return (
+            np.asarray(self.store.data),
+            np.asarray(self.store.ids),
+            np.asarray(self.store.dim_means, np.float32),
+        )
+
+    def _bucket_extent(self) -> tuple[np.ndarray, np.ndarray]:
+        """Current (part_offsets, part_counts) — re-read per call for
+        mutable stores: repack/adopt moves bucket -> partition ownership."""
+        if getattr(self.store, "num_buckets", None) is not None:
+            return (
+                np.asarray(self.store.part_offsets, np.int64),
+                np.asarray(self.store.part_counts, np.int64),
+            )
+        if self._static_extent is None:
+            raise ValueError(
+                "store has no bucket structure; pass part_offsets/"
+                "part_counts to BucketCache"
+            )
+        return self._static_extent
+
+    # -------------------------------------------------------- invalidation
+    def _revalidate(self) -> None:
+        gen = getattr(self.store, "tiles_version", 0)
+        if gen == self.generation:
+            return
+        if self.generation >= 0 and _metrics.enabled():
+            _metrics.counter(
+                "repro_tiered_cache_events_total", event="invalidate"
+            )
+        data, ids, means = self._masters()
+        P, D, C = data.shape
+        Dp = (D + 1) // 2 if self.packed else D
+        pool_dt = {
+            "f32": jnp.float32, "bf16": jnp.bfloat16,
+            "int8": jnp.int8, "int4": jnp.uint8,
+        }[self.dtype]
+        S = self.capacity_slots
+        self._pool = jnp.zeros((S, Dp, C), pool_dt)
+        self._ids_dev = jnp.full((S, C), -1, jnp.int32)
+        self._slot_ids = np.full((S, C), -1, np.int32)
+        self._slot_bucket = np.full((S,), -1, np.int64)
+        self._slot_bucket_dev = jnp.asarray(self._slot_bucket)
+        sc, off = _host_quant_params(data, ids, means, self.dtype)
+        self._scale_np, self._offset_np = sc, off
+        self._scale = jnp.asarray(sc)
+        self._offset = jnp.asarray(off)
+        self._resident = [
+            collections.OrderedDict() for _ in range(self.n_regions)
+        ]
+        self._free = [
+            list(range(r * self.region_slots, (r + 1) * self.region_slots))
+            for r in range(self.n_regions)
+        ]
+        self.generation = gen
+
+    # ------------------------------------------------------------- serving
+    def ensure(self, buckets) -> dict:
+        """Admit every requested bucket (routed set of the NEXT batch —
+        calling this from the host/prepare phase is the prefetch), evicting
+        cold LRU buckets per region as needed.  Returns
+        ``{"hits", "misses", "evicted", "uploaded_slots"}``.
+
+        Raises ValueError when one bucket alone exceeds a region (the
+        capacity knob is too small for the store's bucket granularity)."""
+        self._revalidate()
+        offs, cnts = self._bucket_extent()
+        data, ids, _ = self._masters()
+        hits = misses = evicted = uploaded = 0
+        seen = set()
+        for b in np.asarray(buckets, np.int64).reshape(-1):
+            b = int(b)
+            if b < 0 or b in seen:
+                continue
+            seen.add(b)
+            cnt = int(cnts[b]) if b < len(cnts) else 0
+            if cnt == 0:
+                continue
+            r = self._region_of(b)
+            res = self._resident[r]
+            if b in res:
+                hits += 1
+                res.move_to_end(b)
+                continue
+            misses += 1
+            if cnt > self.region_slots:
+                raise ValueError(
+                    f"bucket {b} spans {cnt} tiles > region capacity "
+                    f"{self.region_slots}; raise hbm_slots"
+                )
+            while len(self._free[r]) < cnt:
+                # Evict the coldest bucket NOT requested by this batch —
+                # everything in ``seen`` is pinned for the upcoming scan.
+                victim = next((o for o in res if o not in seen), None)
+                if victim is None:
+                    raise ValueError(
+                        f"batch demands more tiles than region {r} holds "
+                        f"({self.region_slots} slots); raise hbm_slots or "
+                        "split the batch"
+                    )
+                old_slots = res.pop(victim)
+                self._free[r].extend(old_slots.tolist())
+                self._slot_bucket[old_slots] = -1
+                evicted += 1
+            slots = np.asarray(
+                [self._free[r].pop() for _ in range(cnt)], np.int64
+            )
+            self._upload(b, slots, data, ids, int(offs[b]), cnt)
+            res[b] = slots
+            uploaded += cnt
+        if evicted or uploaded:
+            self._slot_bucket_dev = jnp.asarray(self._slot_bucket)
+        if _metrics.enabled():
+            if hits:
+                _metrics.counter(
+                    "repro_tiered_cache_events_total", float(hits),
+                    event="hit",
+                )
+            if misses:
+                _metrics.counter(
+                    "repro_tiered_cache_events_total", float(misses),
+                    event="miss",
+                )
+            if evicted:
+                _metrics.counter(
+                    "repro_tiered_cache_events_total", float(evicted),
+                    event="evict",
+                )
+            _metrics.gauge(
+                "repro_tiered_cache_resident_slots", float(self.resident_slots)
+            )
+        return {
+            "hits": hits, "misses": misses,
+            "evicted": evicted, "uploaded_slots": uploaded,
+        }
+
+    def _upload(self, b, slots, data, ids, off, cnt):
+        x = jnp.asarray(data[off : off + cnt])
+        if self.dtype == "int8":
+            q = _quantize_extent_int8(x, self._scale, self._offset)
+        elif self.dtype == "int4":
+            q = _quantize_extent_int4(x, self._scale, self._offset)
+        elif self.dtype == "bf16":
+            q = x.astype(jnp.bfloat16)
+        else:
+            q = x
+        jslots = jnp.asarray(slots)
+        self._pool = self._pool.at[jslots].set(q)
+        ext_ids = ids[off : off + cnt]
+        self._ids_dev = self._ids_dev.at[jslots].set(jnp.asarray(ext_ids))
+        self._slot_ids[slots] = ext_ids
+        self._slot_bucket[slots] = b
+        if _metrics.enabled():
+            _metrics.counter(
+                "repro_tiered_prefetch_bytes_total",
+                float(cnt * self.dim * data.shape[2]) * self.bytes_per_value,
+                dtype=self.dtype,
+            )
+
+    def arrays(self):
+        """Snapshot of the device-side cache state for a scan closure:
+        ``(pool, slot_ids, slot_bucket, scale, offset)``.  Functional pool
+        updates mean later ``ensure`` calls never mutate these arrays."""
+        self._revalidate()
+        return (
+            self._pool, self._ids_dev, self._slot_bucket_dev,
+            self._scale, self._offset,
+        )
+
+    def slot_ids_host(self) -> np.ndarray:
+        """(S, C) host copy of the pool's vector ids (candidate positions
+        from a pool scan resolve to global ids through this)."""
+        self._revalidate()
+        return self._slot_ids
+
+
+# ==========================================================================
 # Mutable PDX — the versioned serving store.
 # ==========================================================================
 class MutablePDXStore:
@@ -644,6 +987,64 @@ class MutablePDXStore:
 
         self._dev: Optional[tuple] = None
         self._dev_version = -1
+        # mutation oplog (delta-replay for background maintenance): None =
+        # not recording; a list accumulates ("insert"|"delete", ...) entries
+        # between oplog_start() and oplog_take().
+        self._oplog: Optional[list] = None
+        self._oplog_limit = 8192
+
+    # -------------------------------------------------- mutation oplog
+    def oplog_start(self, limit: int = 8192) -> None:
+        """Begin recording mutations (insert/delete) applied to THIS store.
+
+        The maintenance thread calls this right after cloning: mutations
+        that land while the clone repacks off-thread are replayed onto the
+        clone before ``adopt``, so adoption succeeds under continuous
+        traffic instead of discarding the repack work.  Bounded by
+        ``limit`` rows — a flood larger than that makes replay pointless
+        (the clone is about as stale as a fresh clone is cheap), so the log
+        overflows and ``oplog_take`` reports it."""
+        self._oplog = []
+        self._oplog_limit = int(limit)
+        self._oplog_rows = 0
+
+    def oplog_take(self) -> Optional[list]:
+        """Stop recording and return the recorded ops in application order,
+        or None if the log overflowed ``limit`` rows (caller should discard
+        its clone).  Entries are ``("insert", V, assignments, ids)`` /
+        ``("delete", ids)`` with defensively copied arrays."""
+        ops, self._oplog = self._oplog, None
+        if ops is not None and self._oplog_rows > self._oplog_limit:
+            return None
+        return ops
+
+    def _oplog_record(self, entry: tuple, rows: int) -> None:
+        if self._oplog is None:
+            return
+        self._oplog_rows += rows
+        if self._oplog_rows <= self._oplog_limit:
+            self._oplog.append(entry)
+
+    def replay(self, ops: list) -> int:
+        """Apply an ``oplog_take`` list to this store (the maintenance
+        clone); returns rows replayed.  Replayed inserts must reproduce the
+        recorded ids — guaranteed because ``clone()`` copies ``_next_id``
+        and id assignment is sequential — and a mismatch raises, because a
+        store with diverged ids must never be adopted."""
+        rows = 0
+        for op in ops:
+            if op[0] == "insert":
+                _, V, assignments, ids = op
+                got = self.insert(V, assignments)
+                if not np.array_equal(got, ids):
+                    raise ValueError(
+                        "oplog replay id divergence: "
+                        f"expected {ids[:4]}..., got {got[:4]}..."
+                    )
+                rows += len(ids)
+            else:
+                rows += self.delete(op[1])
+        return rows
 
     def _build_id_loc(self) -> dict[int, tuple]:
         """Vectorized sealed-slot scan (a Python loop over P*C slots would
@@ -850,6 +1251,14 @@ class MutablePDXStore:
         self._n_live += len(V)
         self._mutations_since_meta += len(V)
         self._maybe_refresh_meta()
+        self._oplog_record(
+            (
+                "insert", V.copy(),
+                None if assignments is None else assignments.copy(),
+                new_ids.copy(),
+            ),
+            len(V),
+        )
         self._bump()  # head-only: sealed tiles untouched (unless flush ran)
         self._obs_mutation("insert", len(V))
         return new_ids
@@ -894,6 +1303,10 @@ class MutablePDXStore:
         self._n_live -= removed
         self._mutations_since_meta += removed
         self._maybe_refresh_meta()
+        self._oplog_record(
+            ("delete", np.atleast_1d(np.asarray(ids, np.int64)).copy()),
+            removed,
+        )
         self._bump(tiles=bool(sealed_p))
         self._obs_mutation("delete", removed)
         return removed
@@ -1066,6 +1479,8 @@ class MutablePDXStore:
         other._mutations_since_meta = self._mutations_since_meta
         other._dev = None
         other._dev_version = -1
+        other._oplog = None  # clones never inherit an active recording
+        other._oplog_limit = self._oplog_limit
         return other
 
     def adopt(self, other: "MutablePDXStore", *, expect_version: int) -> bool:

@@ -86,6 +86,7 @@ from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from .distance import nary_distance, pdx_distance
 from .layout import (
+    BucketCache,
     DeviceMirror,
     MutablePDXStore,
     PDXStore,
@@ -181,7 +182,7 @@ def plan_search(
         # and only these five scan a reduced-precision device mirror.
         mirror_ok = executor in (
             "fused-scan", "fused-batch", "batch-block-sharded",
-            "routed_bucket", "cascade-scan",
+            "routed_bucket", "cascade-scan", "tiered-scan", "routed_tiered",
         )
         if spec.kernel == "pallas" and not (
             executor.startswith("fused") or executor == "cascade-scan"
@@ -192,12 +193,12 @@ def plan_search(
                 f" (scan_dtype={spec.scan_dtype!r} ignored: this executor "
                 "scans the f32 masters)"
             )
-        if spec.scan_dtype == "int4" and executor in (
-            "batch-block-sharded", "routed_bucket"
+        if spec.hbm_slots is not None and executor not in (
+            "tiered-scan", "routed_tiered"
         ):
             reason += (
-                " (int4 capped to int8: the sharded shard-scan bodies "
-                "dequantize unpacked tiles)"
+                " (hbm_slots ignored: tiered serving needs an IVF index "
+                "and this executor scans a fully-resident store/mirror)"
             )
         if spec.cascade is not None and executor != "cascade-scan":
             reason += (
@@ -221,6 +222,15 @@ def plan_search(
         if ivf is not None:
             if "data" in axes and spec.routing == "bucket":
                 n_sh = mesh.shape["data"]
+                if spec.hbm_slots is not None:
+                    return plan(
+                        "routed_tiered",
+                        f"mesh 'data' axis ({n_sh} shards) + IVF + "
+                        f"hbm_slots={spec.hbm_slots}: region-split bucket "
+                        f"cache, shard-local pool scan + one packed top-k "
+                        f"all-gather, exact host-RAM re-rank "
+                        f"(nprobe={spec.nprobe})",
+                    )
                 return plan(
                     "routed_bucket",
                     f"mesh 'data' axis ({n_sh} shards) + IVF: bucket-owned "
@@ -305,6 +315,13 @@ def _wants_fused(spec: SearchSpec) -> bool:
 
 
 def _host_plan(spec, n_queries, ivf, plan, note: str = "") -> ExecutionPlan:
+    if spec.hbm_slots is not None and ivf is not None:
+        return plan(
+            "tiered-scan",
+            note + f"hbm_slots={spec.hbm_slots}: bucket-granular HBM cache "
+                   f"over the routed set (scan_dtype={spec.scan_dtype}, "
+                   f"nprobe={spec.nprobe}), exact host-RAM re-rank",
+        )
     if spec.cascade is not None:
         body = "pallas" if _resolve_pallas(spec) else "jnp"
         where = "IVF-routed START, " if ivf is not None else ""
@@ -426,6 +443,34 @@ def prepare_execute(
                 )
 
         return PreparedSearch(plan=plan, spec=spec, _run=_run)
+
+    if plan.executor in ("tiered-scan", "routed_tiered"):
+        # the host half ends with the first chunk's ensure() — the cache
+        # uploads of batch N+1 overlap batch N's device scan through the
+        # serving loop's depth-1 handoff (routing-driven prefetch)
+        if plan.executor == "tiered-scan":
+            tl = _prepare_tiered_host(store, pruner, Q, spec, ivf=ivf)
+            runner = lambda: _run_tiered_device(        # noqa: E731
+                tl, store, spec, ivf=ivf, stats=stats
+            )
+        else:
+            tl = _prepare_routed_tiered_host(
+                store, pruner, Q, spec, ivf=ivf, mesh=mesh
+            )
+            runner = lambda: _run_routed_tiered_device(  # noqa: E731
+                tl, store, spec, ivf=ivf, mesh=mesh, stats=stats
+            )
+
+        def _run_tiered():
+            with _trace.span("scan", executor=plan.executor,
+                             scan_dtype=spec.scan_dtype):
+                ids, dists = runner()
+            with _trace.span("merge", executor=plan.executor):
+                return _merge_write_head(
+                    store, pruner, Q, spec, ids, dists, stats=stats
+                )
+
+        return PreparedSearch(plan=plan, spec=spec, _run=_run_tiered)
 
     return PreparedSearch(
         plan=plan, spec=spec,
@@ -1126,8 +1171,7 @@ def _exec_batch_block_sharded(store, pruner, Q, spec, *, ivf, mesh, stats):
 
     pl = _get_placement(store, mesh.shape["data"], "block")
     Qt = _transform_batch(pruner, Q)
-    # int4 caps to int8 here: the shard-scan bodies dequantize unpacked tiles
-    dt = "int8" if spec.scan_dtype == "int4" else spec.scan_dtype
+    dt = spec.scan_dtype
     mirror = device_mirror(store, dt) if dt != "f32" else None
     res = search_batch_block_sharded(
         mesh, Q=Qt, k=spec.k, metric=spec.metric, placement=pl,
@@ -1167,8 +1211,7 @@ def _prepare_routed_host(store, pruner, Q, spec, *, ivf, mesh):
     pl = _get_placement(store, mesh.shape["data"], "bucket", ivf=ivf)
     Qt = _transform_batch(pruner, Q)
     sel = ivf.route_batch(Qt, spec.nprobe, spec.metric, spec.route_dtype)
-    # int4 caps to int8 here: the shard-scan bodies dequantize unpacked tiles
-    dt = "int8" if spec.scan_dtype == "int4" else spec.scan_dtype
+    dt = spec.scan_dtype
     mirror = device_mirror(store, dt) if dt != "f32" else None
     launch = prepare_routed(
         mesh, pl, Qt, sel, spec.k, metric=spec.metric,
@@ -1220,3 +1263,505 @@ def _exec_routed_bucket(store, pruner, Q, spec, *, ivf, mesh, stats):
         store, pruner, Q, spec, ivf=ivf, mesh=mesh
     )
     return _run_routed_device(launch, sel, store, spec, ivf=ivf, stats=stats)
+
+
+# ------------------------------------------------- tiered executors
+# Beyond-HBM serving: the host-RAM f32 masters stay authoritative, device
+# HBM holds only a fixed slot-pool (``core.layout.BucketCache``) of the
+# quantized tile extents of recently-routed IVF buckets.  A batch flows:
+# route (two-level centroid tree when attached) -> ensure() admits the
+# routed buckets (LRU-evicting cold ones) -> masked pool scan at
+# ``spec.scan_dtype`` width -> exact re-rank against the host masters.
+# ``prepare_execute`` puts routing + ensure() in the host half, so the
+# serving loop's depth-1 handoff overlaps batch N+1's uploads (the
+# prefetch) with batch N's device scan.
+
+def _get_bucket_cache(store, spec, *, ivf, n_regions=1, bucket_region=None):
+    """The store's ``BucketCache`` for this spec's (capacity, dtype,
+    regions), cached on the store — pool allocation + quant-param passes
+    must cost once per configuration, not once per batch.  Generation
+    invalidation is the cache's own job (``tiles_version``)."""
+    key = (spec.hbm_slots, spec.scan_dtype, int(n_regions))
+    caches = getattr(store, "_tiered_cache", None)
+    if caches is None:
+        caches = {}
+        store._tiered_cache = caches
+    bc = caches.get(key)
+    if bc is None:
+        po = pc = None
+        if getattr(store, "num_buckets", None) is None:
+            po = np.asarray(ivf.part_offsets)
+            pc = np.asarray(ivf.part_counts)
+        bc = BucketCache(
+            store, capacity_slots=spec.hbm_slots, dtype=spec.scan_dtype,
+            n_regions=n_regions, bucket_region=bucket_region,
+            part_offsets=po, part_counts=pc,
+        )
+        caches[key] = bc
+    elif bucket_region is not None:
+        bc._bucket_region = np.asarray(bucket_region, np.int64)
+    return bc
+
+
+def _tiered_scan_body(pool, pos, allowed, Qt, sc, off, rk, metric,
+                      use_pallas, packed, dim):
+    """Masked pool scan: every cached tile, each query restricted to the
+    slots of its routed buckets — the tiered twin of ``_fused_batch_scan``
+    (trace-level helper: runs standalone under jit and inside the
+    routed-tiered shard_map body)."""
+    from ..kernels.ops import batched_distance_quant_op
+    from ..kernels.ref import dequantize_ref
+
+    def body(state, inp):
+        tile, tpos, allow_s = inp      # (D', C), (C,), (B,)
+        if metric == "l1":
+            t32 = dequantize_ref(tile, sc, off, packed=packed, dim=dim)
+            dmat = jax.vmap(lambda q: pdx_distance(t32, q, "l1"))(Qt)
+        else:
+            dmat = batched_distance_quant_op(
+                tile, Qt, sc, off, metric, use_pallas,
+                packed=packed, dim=dim,
+            )
+        dmat = jnp.where(allow_s[:, None], dmat, jnp.inf)
+        return jax.vmap(topk_merge, (0, 0, None))(state, dmat, tpos), None
+
+    init = jax.vmap(lambda _: topk_init(rk))(jnp.arange(Qt.shape[0]))
+    state, _ = jax.lax.scan(body, init, (pool, pos, allowed.T))
+    return state
+
+
+@functools.partial(
+    jax.jit, static_argnames=("rk", "metric", "use_pallas", "quantized",
+                              "packed", "dim")
+)
+def _tiered_pool_scan(
+    pool, slot_ids, slot_bucket, sel, Qt, scale, offset, rk, metric,
+    use_pallas, quantized, packed: bool = False, dim: int | None = None,
+) -> TopK:
+    """Single-host tiered scan -> per-query top-``rk`` flat POOL positions
+    (s * C + c; dead/free lanes carry -1).  Positions resolve to global
+    ids host-side through ``BucketCache.slot_ids_host`` — the exact
+    re-rank never touches device copies of the full store."""
+    S, _, C = pool.shape
+    sc = scale if quantized else None
+    off = offset if quantized else None
+    # -1 marks BOTH unrouted sel pads (tree routing) and free pool slots;
+    # remap sel pads to -2 so they can never select a free slot's tiles
+    sel_safe = jnp.where(sel >= 0, sel, -2)
+    allowed = (
+        sel_safe[:, :, None] == slot_bucket[None, None, :]
+    ).any(axis=1)                                             # (B, S)
+    pos = jnp.arange(S * C, dtype=jnp.int32).reshape(S, C)
+    pos = jnp.where(slot_ids >= 0, pos, -1)
+    return _tiered_scan_body(
+        pool, pos, allowed, Qt, sc, off, rk, metric, use_pallas, packed, dim
+    )
+
+
+def _host_master_rows(store) -> tuple[np.ndarray, np.ndarray]:
+    """Sorted-by-id flat view of the live host-RAM f32 master rows, cached
+    per ``tiles_version`` — the authoritative tier the tiered executors
+    re-rank against (write-head rows merge separately and sealed tiles only
+    change with tiles_version, so the sort amortizes over serving)."""
+    ver = getattr(store, "tiles_version", 0)
+    cached = getattr(store, "_host_rows_cache", None)
+    if cached is not None and cached[0] == ver:
+        return cached[1], cached[2]
+    data = getattr(store, "_data", None)
+    if data is not None:
+        ids = store._ids
+    else:
+        data = np.asarray(store.data)
+        ids = np.asarray(store.ids)
+    flat_ids = np.asarray(ids).reshape(-1)
+    live = flat_ids >= 0
+    rows = np.ascontiguousarray(
+        np.transpose(np.asarray(data, np.float32), (0, 2, 1))
+    ).reshape(-1, data.shape[1])[live]
+    flat_ids = flat_ids[live]
+    order = np.argsort(flat_ids, kind="stable")
+    out = (ver, flat_ids[order], rows[order])
+    store._host_rows_cache = out
+    return out[1], out[2]
+
+
+def _tiered_rerank(
+    store, cache: BucketCache, cand: TopK, Qt_np: np.ndarray, k: int,
+    metric: str,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact re-rank of pool-scan candidates against the HOST masters:
+    positions -> cached global ids -> master rows (binary search on the
+    sorted-id view) -> exact f32 metric -> top-k.  This replaces
+    ``topk.rerank_positions`` for the tiered path, where gathering from a
+    device-resident master copy would defeat the whole beyond-HBM point."""
+    slot_ids = cache.slot_ids_host().reshape(-1)
+    sorted_ids, rows = _host_master_rows(store)
+    pos = np.asarray(cand.ids)
+    B = pos.shape[0]
+    out_i = np.full((B, k), -1, np.int64)
+    out_d = np.full((B, k), np.inf, np.float32)
+    for b in range(B):
+        p = pos[b]
+        gids = np.where(p >= 0, slot_ids[np.maximum(p, 0)], -1)
+        gids = gids[gids >= 0]
+        if gids.size == 0:
+            continue
+        loc = np.searchsorted(sorted_ids, gids)  # cached ids are all live
+        x = rows[loc]
+        q = Qt_np[b]
+        if metric == "l2":
+            d = ((x - q) ** 2).sum(axis=1)
+        elif metric == "l1":
+            d = np.abs(x - q).sum(axis=1)
+        else:
+            d = -(x @ q)
+        order = np.argsort(d, kind="stable")[: k]
+        out_i[b, : len(order)] = gids[order]
+        out_d[b, : len(order)] = d[order].astype(np.float32)
+    return out_i, out_d
+
+
+def _tiered_chunks(
+    sel: np.ndarray, cnts: np.ndarray, region_of, region_slots: int,
+) -> list[list[int]]:
+    """Greedy query chunking so each chunk's union bucket demand fits the
+    pool (per region): batches whose routed set overflows the cache run as
+    several ensure+scan rounds instead of failing.  A chunk is cut when
+    admitting the next query's buckets would overflow any region."""
+    B = sel.shape[0]
+    chunks: list[list[int]] = []
+    cur: list[int] = []
+    seen: set[int] = set()
+    demand: dict[int, int] = {}
+    for b in range(B):
+        row = [int(x) for x in sel[b]
+               if x >= 0 and int(cnts[int(x)]) > 0]
+        new = [x for x in dict.fromkeys(row) if x not in seen]
+        add: dict[int, int] = {}
+        for x in new:
+            r = region_of(x)
+            add[r] = add.get(r, 0) + int(cnts[x])
+        fits = all(
+            demand.get(r, 0) + a <= region_slots for r, a in add.items()
+        )
+        if cur and not fits:
+            chunks.append(cur)
+            cur, seen, demand = [], set(), {}
+            new = list(dict.fromkeys(row))
+            add = {}
+            for x in new:
+                r = region_of(x)
+                add[r] = add.get(r, 0) + int(cnts[x])
+        cur.append(b)
+        seen.update(new)
+        for r, a in add.items():
+            demand[r] = demand.get(r, 0) + a
+    if cur:
+        chunks.append(cur)
+    return chunks
+
+
+@dataclasses.dataclass
+class _TieredLaunch:
+    """Host-side product of ``_prepare_tiered_host``: the routed set, the
+    chunk schedule, and the FIRST chunk's already-ensured pool snapshot —
+    capturing it at prepare time is the prefetch (uploads overlap the
+    previous batch's device scan through the serving handoff).  Later
+    chunks ensure+snapshot inside ``run``; functional pool updates keep
+    every captured snapshot consistent."""
+
+    cache: BucketCache
+    Qt: jax.Array
+    Qt_np: np.ndarray
+    sel: np.ndarray
+    chunks: list
+    first_arrays: tuple
+    first_slot_ids: np.ndarray
+    rk: int
+    use_pallas: bool
+
+
+def _tiered_rk(spec: SearchSpec, cache: BucketCache, C: int) -> int:
+    if spec.scan_dtype == "f32":
+        return spec.k
+    return min(spec.rerank_mult * spec.k, cache.capacity_slots * C)
+
+
+def _prepare_tiered_host(store, pruner, Q, spec, *, ivf) -> _TieredLaunch:
+    """Host half of the tiered executor: batch transform, bucket routing,
+    chunk planning, and the first chunk's ``ensure`` (the prefetch)."""
+    if ivf is None:
+        raise ValueError(
+            "tiered-scan executor needs an IVF index (spec.hbm_slots caches "
+            "at bucket granularity, which only routing defines)"
+        )
+    cache = _get_bucket_cache(store, spec, ivf=ivf)
+    Qt = _transform_batch(pruner, jnp.asarray(Q, jnp.float32))
+    with _trace.span("route", nprobe=spec.nprobe, tiered=True):
+        sel = np.asarray(
+            ivf.route_batch(Qt, spec.nprobe, spec.metric, spec.route_dtype)
+        )
+    _, cnts = cache._bucket_extent()
+    chunks = _tiered_chunks(sel, cnts, cache._region_of, cache.region_slots)
+    with _trace.span("prefetch", buckets=int((sel[chunks[0]] >= 0).sum())):
+        cache.ensure(sel[chunks[0]])
+    C = store.capacity
+    return _TieredLaunch(
+        cache=cache, Qt=Qt, Qt_np=np.asarray(Qt), sel=sel, chunks=chunks,
+        first_arrays=cache.arrays(), first_slot_ids=cache.slot_ids_host(),
+        rk=_tiered_rk(spec, cache, C), use_pallas=_resolve_pallas(spec),
+    )
+
+
+def _tiered_stats(stats, store, cache, sel, ivf) -> None:
+    """Selected-bucket work accounting, matching the routed convention:
+    every live value in a probed bucket is computed, everything outside is
+    avoided by routing."""
+    if stats is None:
+        return
+    counts = np.asarray(store.counts)
+    offs, cnts = cache._bucket_extent()
+    nb = len(cnts)
+    bucket_rows = np.array(
+        [counts[offs[b]: offs[b] + cnts[b]].sum() for b in range(nb)],
+        dtype=np.float64,
+    )
+    valid = sel >= 0
+    safe = np.where(valid, sel, 0)
+    work = float(np.where(valid, bucket_rows[safe], 0.0).sum()) * store.dim
+    stats.values_total += work
+    stats.values_computed += work
+    stats.partitions_visited += int(np.where(valid, cnts[safe], 0).sum())
+
+
+def _run_tiered_device(launch: _TieredLaunch, store, spec, *, ivf, stats):
+    """Device half: per chunk, (ensure for chunks > 0, whose uploads were
+    not prefetched) -> masked pool scan -> exact host re-rank; chunk
+    results concatenate back into batch order."""
+    cache, sel = launch.cache, launch.sel
+    B = sel.shape[0]
+    out_i = np.full((B, spec.k), -1, np.int64)
+    out_d = np.full((B, spec.k), np.inf, np.float32)
+    C = store.capacity
+    for ci, chunk in enumerate(launch.chunks):
+        if ci == 0:
+            arrays, slot_ids = launch.first_arrays, launch.first_slot_ids
+        else:
+            cache.ensure(sel[chunk])
+            arrays, slot_ids = cache.arrays(), cache.slot_ids_host()
+        pool, ids_dev, slot_bucket, scale, offset = arrays
+        sel_dev = jnp.asarray(sel[chunk], jnp.int32)
+        cand = _tiered_pool_scan(
+            pool, ids_dev, slot_bucket, sel_dev, launch.Qt[jnp.asarray(chunk)],
+            scale, offset, launch.rk, spec.metric, launch.use_pallas,
+            cache.quantized, packed=cache.packed, dim=cache.dim,
+        )
+        # snapshot-consistent id resolution: the chunk's own slot_ids copy
+        chunk_cache_view = _TieredSnapshot(slot_ids)
+        ids_c, dists_c = _tiered_rerank(
+            store, chunk_cache_view, cand, launch.Qt_np[chunk], spec.k,
+            spec.metric,
+        )
+        out_i[chunk] = ids_c
+        out_d[chunk] = dists_c
+        if _metrics.enabled():
+            S = cache.capacity_slots
+            _metrics.counter(
+                "repro_device_bytes_total",
+                float(S) * cache.dim * C * cache.bytes_per_value,
+                executor="tiered-scan", component="scan", dtype=cache.dtype,
+            )
+    _tiered_stats(stats, store, cache, sel, ivf)
+    return out_i, out_d
+
+
+class _TieredSnapshot:
+    """Adapter handing ``_tiered_rerank`` a frozen ``slot_ids_host`` copy
+    (a later chunk's ensure() must not remap an earlier chunk's candidate
+    positions mid-resolution)."""
+
+    def __init__(self, slot_ids: np.ndarray):
+        self._slot_ids = np.array(slot_ids, copy=True)
+
+    def slot_ids_host(self) -> np.ndarray:
+        return self._slot_ids
+
+
+@register_executor("tiered-scan")
+def _exec_tiered_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Tiered beyond-HBM search: route -> ensure (bucket-granular LRU HBM
+    cache) -> masked quantized pool scan -> exact host-RAM re-rank.  The
+    blocking composition of ``_prepare_tiered_host`` + ``_run_tiered_device``
+    (the serving loop overlaps the two halves across batches)."""
+    launch = _prepare_tiered_host(store, pruner, Q, spec, ivf=ivf)
+    return _run_tiered_device(launch, store, spec, ivf=ivf, stats=stats)
+
+
+# ------------------------------------------------- routed tiered (mesh)
+_TIERED_SHARD_CACHE: dict = {}
+
+
+def _tiered_shard_exec(mesh, axis: str, rk: int, metric: str,
+                       quantized: bool, packed: bool, dim: int | None,
+                       use_pallas: bool):
+    """Cached jitted shard_map executor for the routed-tiered scan: the
+    slot pool is region-split over the mesh 'data' axis (region r == shard
+    r's slice), queries + routed sets replicate, each shard scans only its
+    region's cached tiles (masked to each query's routed buckets), and the
+    per-shard top-``rk`` GLOBAL pool positions cross the mesh in ONE packed
+    all-gather — candidate resolution + the exact re-rank stay host-side
+    against the RAM masters."""
+    key = (mesh, axis, rk, metric, quantized, packed, dim, use_pallas)
+    fn = _TIERED_SHARD_CACHE.get(key)
+    if fn is not None:
+        _metrics.counter(
+            "repro_cache_events_total", cache="tiered-shard", event="hit"
+        )
+        return fn
+    _metrics.counter(
+        "repro_cache_events_total", cache="tiered-shard", event="miss"
+    )
+    n_sh = mesh.shape[axis]
+
+    def local(pool_sh, pos_sh, sb_sh, sel_rep, Qt_rep, scale, offset):
+        sc = scale if quantized else None
+        off = offset if quantized else None
+        sel_safe = jnp.where(sel_rep >= 0, sel_rep, -2)
+        allowed = (
+            sel_safe[:, :, None] == sb_sh[None, None, :]
+        ).any(axis=1)                                      # (B, S_r)
+        cand = _tiered_scan_body(
+            pool_sh, pos_sh, allowed, Qt_rep, sc, off, rk, metric,
+            use_pallas, packed, dim,
+        )
+        B = Qt_rep.shape[0]
+        packed_buf = jnp.concatenate(
+            [cand.dists,
+             jax.lax.bitcast_convert_type(cand.ids, jnp.float32)],
+            axis=1,
+        )                                                  # (B, 2rk)
+        allp = jax.lax.all_gather(packed_buf, axis, axis=1, tiled=True)
+        allp = allp.reshape(B, n_sh, 2 * rk)
+        all_d = allp[:, :, :rk].reshape(B, n_sh * rk)
+        all_p = jax.lax.bitcast_convert_type(
+            allp[:, :, rk:], jnp.int32
+        ).reshape(B, n_sh * rk)
+        merge = lambda dd, ii: topk_merge(topk_init(rk), dd, ii)  # noqa: E731
+        return jax.vmap(merge)(all_d, all_p)
+
+    def wrapper(pool, ids_dev, slot_bucket, sel, Qt, scale, offset):
+        S, _, C = pool.shape
+        pos = jnp.arange(S * C, dtype=jnp.int32).reshape(S, C)
+        pos = jnp.where(ids_dev >= 0, pos, -1)
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        return shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P(), P(), P()),
+            out_specs=TopK(dists=P(), ids=P()),
+            check_rep=False,
+        )(pool, pos, slot_bucket, sel, Qt, scale, offset)
+
+    fn = jax.jit(wrapper)
+    _TIERED_SHARD_CACHE[key] = fn
+    return fn
+
+
+def _prepare_routed_tiered_host(store, pruner, Q, spec, *, ivf, mesh):
+    """Host half of routed-tiered: region assignment (bucket -> owner shard,
+    the same greedy LPT balance bucket placements use), routing, chunk
+    planning, first-chunk prefetch."""
+    if ivf is None:
+        raise ValueError("routed_tiered executor needs an IVF index")
+    if mesh is None or "data" not in getattr(mesh, "axis_names", ()):
+        raise ValueError(
+            "routed_tiered executor needs a mesh with a 'data' axis, got "
+            f"{mesh!r}"
+        )
+    from ..dist.placement import assign_buckets
+
+    n_sh = mesh.shape["data"]
+    # derive the region split from the CURRENT bucket extents (deterministic
+    # across hosts); the cache regenerates whole-pool on tiles_version bumps,
+    # so a refreshed assignment can never mix with stale residency
+    tmp = _get_bucket_cache(store, spec, ivf=ivf, n_regions=n_sh)
+    _, cnts = tmp._bucket_extent()
+    region = assign_buckets(cnts, n_sh)
+    cache = _get_bucket_cache(
+        store, spec, ivf=ivf, n_regions=n_sh, bucket_region=region
+    )
+    Qt = _transform_batch(pruner, jnp.asarray(Q, jnp.float32))
+    with _trace.span("route", nprobe=spec.nprobe, tiered=True,
+                     n_shards=n_sh):
+        sel = np.asarray(
+            ivf.route_batch(Qt, spec.nprobe, spec.metric, spec.route_dtype)
+        )
+    chunks = _tiered_chunks(sel, cnts, cache._region_of, cache.region_slots)
+    with _trace.span("prefetch", buckets=int((sel[chunks[0]] >= 0).sum())):
+        cache.ensure(sel[chunks[0]])
+    return _TieredLaunch(
+        cache=cache, Qt=Qt, Qt_np=np.asarray(Qt), sel=sel, chunks=chunks,
+        first_arrays=cache.arrays(), first_slot_ids=cache.slot_ids_host(),
+        rk=_tiered_rk(spec, cache, store.capacity),
+        use_pallas=_resolve_pallas(spec),
+    )
+
+
+def _run_routed_tiered_device(launch: _TieredLaunch, store, spec, *, ivf,
+                              mesh, stats):
+    cache, sel = launch.cache, launch.sel
+    B = sel.shape[0]
+    out_i = np.full((B, spec.k), -1, np.int64)
+    out_d = np.full((B, spec.k), np.inf, np.float32)
+    fn = _tiered_shard_exec(
+        mesh, "data", launch.rk, spec.metric, cache.quantized,
+        cache.packed, cache.dim, launch.use_pallas,
+    )
+    C = store.capacity
+    for ci, chunk in enumerate(launch.chunks):
+        if ci == 0:
+            arrays, slot_ids = launch.first_arrays, launch.first_slot_ids
+        else:
+            cache.ensure(sel[chunk])
+            arrays, slot_ids = cache.arrays(), cache.slot_ids_host()
+        pool, ids_dev, slot_bucket, scale, offset = arrays
+        sel_dev = jnp.asarray(sel[chunk], jnp.int32)
+        cand = fn(
+            pool, ids_dev, slot_bucket, sel_dev,
+            launch.Qt[jnp.asarray(chunk)], scale, offset,
+        )
+        ids_c, dists_c = _tiered_rerank(
+            store, _TieredSnapshot(slot_ids), cand, launch.Qt_np[chunk],
+            spec.k, spec.metric,
+        )
+        out_i[chunk] = ids_c
+        out_d[chunk] = dists_c
+        if _metrics.enabled():
+            from ..obs import meters as _meters
+
+            _meters.count_issued("routed_tiered", all_gather=1)
+            n_sh = mesh.shape["data"]
+            _meters.record_device_bytes("routed_tiered", cache.dtype, {
+                "scan": float(cache.capacity_slots) * cache.dim * C
+                        * cache.bytes_per_value,
+                "all_gather": float(n_sh * len(chunk) * 2 * launch.rk * 4),
+            })
+    _tiered_stats(stats, store, cache, sel, ivf)
+    return out_i, out_d
+
+
+@register_executor("routed_tiered")
+def _exec_routed_tiered(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Distributed tiered search: each mesh shard caches one region of the
+    bucket pool (regions follow the same greedy bucket->shard balance as
+    bucket placements), scans only its region's routed tiles, and the
+    global candidate merge crosses the mesh in ONE packed all-gather per
+    chunk; id resolution + exact f32 re-rank stay on the host masters."""
+    launch = _prepare_routed_tiered_host(
+        store, pruner, Q, spec, ivf=ivf, mesh=mesh
+    )
+    return _run_routed_tiered_device(
+        launch, store, spec, ivf=ivf, mesh=mesh, stats=stats
+    )

@@ -138,6 +138,14 @@ class SearchSpec:
                     mirror so routing bytes shrink with the same dtype
                     policy as the data scan).  Near-tie bucket *order* may
                     differ from f32 routing at partial nprobe.
+      hbm_slots   — tiered serving: cap the device-resident working set at
+                    this many tile slots and manage them as a bucket-
+                    granular LRU cache (``core.layout.BucketCache``) fed by
+                    IVF routing, instead of mirroring the whole store in
+                    HBM.  Requires an IVF index; ``scan_dtype`` picks the
+                    cached tiles' precision and the exact f32 re-rank runs
+                    against the host-RAM masters.  None (default) keeps the
+                    fully-resident mirror behavior.
 
     Execution hints (planner inputs, never change *results* beyond the
     pruner's own approximation)
@@ -168,6 +176,7 @@ class SearchSpec:
     rerank_mult: int = 4
     cascade: Optional[tuple] = None
     route_dtype: str = "f32"
+    hbm_slots: Optional[int] = None
 
     def __post_init__(self):
         if self.k < 1:
@@ -207,6 +216,10 @@ class SearchSpec:
             raise ValueError(
                 f"route_dtype must be one of {SCAN_DTYPES}, "
                 f"got {self.route_dtype!r}"
+            )
+        if self.hbm_slots is not None and self.hbm_slots < 1:
+            raise ValueError(
+                f"hbm_slots must be >= 1 when set, got {self.hbm_slots}"
             )
         if self.cascade is not None:
             stages = self.cascade

@@ -46,6 +46,7 @@ from ..core.pdxearch import (
 from ..core.distance import batched_distance_matmul, pdx_distance
 from ..core.pruners import Pruner, make_plain_pruner
 from ..core.topk import TopK, rerank_positions, topk_init, topk_merge
+from ..kernels.ref import dequantize_ref
 from .placement import Placement
 
 __all__ = [
@@ -281,6 +282,9 @@ def search_batch_block_sharded(
     qtiles = pl.arranged_mirror(mirror)
     rk = min(max(rerank_mult * k, k), qtiles.shape[0] * qtiles.shape[2])
     scale, offset = mirror.scale, mirror.offset
+    # packed int4 mirrors unpack in-body (two nibbles per byte along D) —
+    # no int8 cap: the shard scan streams the 0.5-byte tiles directly
+    m_packed, m_dim = mirror.packed, mirror.dim
 
     def local_q(d_sh, i_sh, qd_sh, Q_rep):
         B = Q_rep.shape[0]
@@ -290,7 +294,9 @@ def search_batch_block_sharded(
 
         def body(state, inp):
             tileq, tpos = inp
-            t32 = tileq.astype(jnp.float32) * scale[:, None] + offset[:, None]
+            t32 = dequantize_ref(
+                tileq, scale, offset, packed=m_packed, dim=m_dim
+            )
             dmat = batched_distance_matmul(t32, Q_rep, metric)  # (B, C)
             return jax.vmap(topk_merge, (0, 0, None))(state, dmat, tpos), None
 

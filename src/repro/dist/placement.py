@@ -47,6 +47,13 @@ def assign_buckets(bucket_parts: np.ndarray, n_shards: int) -> np.ndarray:
     single bucket — the classic LPT bound.  Ties break on lower bucket /
     shard id, which keeps the assignment deterministic across processes
     (every host must derive the identical placement).
+
+    Two consumers share this map: the bucket-owned ``Placement`` (each
+    shard holds its buckets' mirror slices resident) and the tiered
+    ``routed_tiered`` executor, which reuses the same assignment as the
+    ``BucketCache`` region map — shard r's cache region only ever holds
+    buckets assigned to r, so a routed query's prefetch lands exactly on
+    the shards its scan will run on.
     """
     bucket_parts = np.asarray(bucket_parts, np.int64)
     order = np.argsort(-bucket_parts, kind="stable")  # largest first, id ties

@@ -65,6 +65,7 @@ from jax.sharding import PartitionSpec as P
 
 from ..core.distance import batched_distance_matmul
 from ..core.topk import TopK, rerank_positions, topk_init, topk_merge
+from ..kernels.ref import dequantize_ref
 from ..obs import metrics as _metrics
 from ..obs import trace as _trace
 from .placement import Placement
@@ -138,10 +139,13 @@ def plan_routing(
     sel = np.asarray(sel)
     B = sel.shape[0]
     src_of = (np.arange(B, dtype=np.int64) * n_shards) // max(B, 1)
-    dests = [
-        np.unique(bucket_shard[sel[b][bucket_parts[sel[b]] > 0]])
-        for b in range(B)
-    ]
+    # sel rows may carry -1 right-pads (two-level tree routing emits fewer
+    # than nprobe buckets when the probed supers' children run short) —
+    # drop them before the empty-bucket filter, which indexes bucket_parts
+    dests = []
+    for b in range(B):
+        sb = sel[b][sel[b] >= 0]
+        dests.append(np.unique(bucket_shard[sb[bucket_parts[sb] > 0]]))
     max_dest = min(sel.shape[1], n_shards)
     counts = np.zeros((n_shards, n_shards), np.int64)
     for b, ds in enumerate(dests):
@@ -229,8 +233,10 @@ def _exchange(buf0, axis: str, rounds: tuple):
 
 
 def _routed_exec(mesh, axis: str, D: int, nprobe: int, k: int, metric: str,
-                 rounds: tuple, quantized: bool, rk: int):
-    key = (mesh, axis, D, nprobe, k, metric, rounds, quantized, rk)
+                 rounds: tuple, quantized: bool, rk: int,
+                 packed: bool = False, dim: int | None = None):
+    key = (mesh, axis, D, nprobe, k, metric, rounds, quantized, rk,
+           packed, dim)
     if key in _ROUTED_CACHE:
         _ROUTED_CACHE.move_to_end(key)
         _metrics.counter(
@@ -275,8 +281,11 @@ def _routed_exec(mesh, axis: str, D: int, nprobe: int, k: int, metric: str,
 
             def body(state, inp):
                 tileq, tpos, allow_p = inp
-                t32 = tileq.astype(jnp.float32)
-                t32 = t32 * scale[:, None] + offset[:, None]
+                # packed int4 unpacks in-body (two nibbles/byte along D);
+                # int8/bf16 dequantize via the same reference op
+                t32 = dequantize_ref(
+                    tileq, scale, offset, packed=packed, dim=dim
+                )
                 dmat = batched_distance_matmul(t32, Qr, metric)
                 dmat = jnp.where(allow_p[:, None], dmat, _INF)
                 return (
@@ -294,12 +303,12 @@ def _routed_exec(mesh, axis: str, D: int, nprobe: int, k: int, metric: str,
         # a rounded wire would both swap cross-shard near-ties there and
         # round the distances the caller gets back — exactness is the
         # on-shard re-rank's whole contract
-        packed = jnp.concatenate(
+        wire = jnp.concatenate(
             [res.dists,
              jax.lax.bitcast_convert_type(res.ids, jnp.float32)],
             axis=1,
         )  # (Bl, 2k)
-        allp = jax.lax.all_gather(packed, axis)  # (n_dst, Bl, 2k)
+        allp = jax.lax.all_gather(wire, axis)  # (n_dst, Bl, 2k)
 
         # hierarchical merge (replicated): per query, only the candidate
         # blocks from the shards it was routed to.
@@ -346,6 +355,8 @@ def make_routed_fn(mesh, placement: Placement, rp: RoutingPlan, D: int,
     fn = _routed_exec(
         mesh, placement.axis, D, nprobe, k, metric, rp.round_budgets,
         quantized, rk,
+        packed=mirror.packed if quantized else False,
+        dim=mirror.dim if quantized else None,
     )
     slot_bucket = jnp.asarray(placement.slot_bucket, jnp.int32)
     dest_shard = jnp.asarray(rp.dest_shard)
@@ -386,7 +397,7 @@ class RoutedLaunch:
     metric: str
     quantized: bool
     mirror_dtype: str
-    mirror_bpv: int
+    mirror_bpv: float   # 0.5 for packed int4 — bytes, not whole bytes
     rerank_mult: int
 
 

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.distance import pdx_distance
+from ..core.distance import nary_distance, pdx_distance
 from ..core.layout import (
     PDXStore,
     build_bucketed_store,
@@ -26,9 +26,14 @@ from ..core.pruners import Pruner
 from ..core.topk import TopK
 from ..kernels.ref import dequantize_ref
 from ..obs import metrics as _metrics
-from .kmeans import kmeans
+from .kmeans import build_centroid_tree, kmeans
 
 __all__ = ["IVFIndex", "build_ivf"]
+
+#: ``build_ivf(tree="auto")`` switches the flat centroid scan to the
+#: two-level tree at this nlist — below it the flat single-dispatch scan is
+#: both cheaper and tie-stable, above it sub-linear routing wins.
+TREE_AUTO_NLIST = 4096
 
 
 def _rank_centroids_impl(cdata, q, nlist: int, metric: str):
@@ -78,6 +83,48 @@ def _rank_centroids_batch_mirror(
     )(Q)
 
 
+@functools.partial(
+    jax.jit, static_argnames=("metric", "nlist", "nprobe_super")
+)
+def _rank_centroids_tree(
+    centroids: jax.Array,      # (K, D) horizontal f32
+    supers: jax.Array,         # (SK, D) super-centroids
+    children: jax.Array,       # (SK, M) int32 child lists, -1 right-pad
+    Q: jax.Array,              # (B, D)
+    nlist: int,
+    metric: str,
+    nprobe_super: int,
+):
+    """Two-level bucket ranking: rank SK super-centroids, keep the best
+    ``nprobe_super``, then rank only *their* children.  Visits
+    ``SK + nprobe_super * M`` centroids per query instead of nlist.
+
+    Returns (B, nlist) int32 bucket orders, best first, right-padded with
+    -1: unlike the flat argsort, a query only ranks the candidate set under
+    its selected super-centroids, so consumers (``route``,
+    ``partition_order``, ``plan_routing``) skip ids < 0."""
+    SK, M = children.shape
+
+    def one(q):
+        ds = nary_distance(supers, q, metric)                 # (SK,)
+        _, top = jax.lax.top_k(-ds, nprobe_super)             # best supers
+        cand = children[top].reshape(-1)                      # (nps*M,)
+        valid = cand >= 0
+        dc = nary_distance(centroids[jnp.where(valid, cand, 0)], q, metric)
+        dc = jnp.where(valid, dc, jnp.inf)                    # pads last
+        order = jnp.argsort(dc)
+        ranked = jnp.where(
+            jnp.isfinite(dc[order]), cand[order], -1
+        ).astype(jnp.int32)
+        out = jnp.full((nlist,), -1, jnp.int32)
+        n = min(int(ranked.shape[0]), nlist)
+        # Children partition [0, nlist): ranked holds <= nlist valid ids,
+        # and the sort packs them first, so truncation only drops pads.
+        return out.at[:n].set(ranked[:n])
+
+    return jax.vmap(one)(Q)
+
+
 @jax.jit
 def _nearest_centroid(centroids: jax.Array, X: jax.Array) -> jax.Array:
     """(K, D), (N, D) -> (N,) nearest-centroid bucket per row (L2, matching
@@ -95,6 +142,47 @@ class IVFIndex:
     part_offsets: np.ndarray        # (K,) first partition id of each bucket
     part_counts: np.ndarray         # (K,) partitions per bucket
     nlist: int
+    # Two-level routing tree (None -> flat scan).  ``super_centroids`` is
+    # (SK, D); ``super_children`` is the (SK, M) -1-padded child table from
+    # ``kmeans.build_centroid_tree``; ``nprobe_super`` is how many supers a
+    # query descends into.
+    super_centroids: Optional[jax.Array] = None
+    super_children: Optional[jax.Array] = None
+    nprobe_super: int = 0
+
+    @property
+    def tree_enabled(self) -> bool:
+        return self.super_centroids is not None
+
+    def routing_cost(self) -> int:
+        """Centroids ranked per query: nlist for the flat scan, the
+        sub-linear ``SK + nprobe_super * M`` bound for the tree (the bench
+        asserts this stays < nlist)."""
+        if not self.tree_enabled:
+            return self.nlist
+        SK, M = self.super_children.shape
+        return int(SK + self.nprobe_super * M)
+
+    def attach_tree(
+        self,
+        super_k: Optional[int] = None,
+        nprobe_super: Optional[int] = None,
+        *,
+        seed: int = 0,
+    ) -> None:
+        """(Re)build the two-level tree over the CURRENT centroids — also
+        the recalibration hook: after BSA re-projects centroids the tree
+        must be re-clustered in the rotated space."""
+        if super_k is None:
+            super_k = max(2, int(np.ceil(np.sqrt(self.nlist))))
+        sc, children = build_centroid_tree(
+            np.asarray(self.centroids), super_k, seed=seed
+        )
+        self.super_centroids = jnp.asarray(sc)
+        self.super_children = jnp.asarray(children)
+        if nprobe_super is None:
+            nprobe_super = max(2, sc.shape[0] // 4)
+        self.nprobe_super = int(min(max(nprobe_super, 1), sc.shape[0]))
 
     def _ranked_batch(
         self, Q: jax.Array, metric: str, dtype: str
@@ -102,7 +190,27 @@ class IVFIndex:
         """(B, D) queries -> (B, nlist) ascending bucket orders, scanning
         the centroid tiles at ``dtype`` width (the data scan's dtype policy
         applied to routing; see ``core.layout``).  Records the routing scan
-        bytes so ``BENCH_routing.json``/dashboards see the shrink."""
+        bytes so ``BENCH_routing.json``/dashboards see the shrink.
+
+        With a tree attached the orders come from the two-level descent
+        instead of the flat scan and carry -1 right-pads (only the
+        candidate set under each query's super-centroids is ranked); the
+        tree ranks f32 centroids at both levels — its byte shrink comes
+        from visiting ``routing_cost() << nlist`` centroids, not from a
+        narrower dtype."""
+        if self.tree_enabled:
+            order = _rank_centroids_tree(
+                self.centroids, self.super_centroids, self.super_children,
+                Q, self.nlist, metric, self.nprobe_super,
+            )
+            if _metrics.enabled():
+                _metrics.counter(
+                    "repro_device_bytes_total",
+                    float(Q.shape[0]) * self.routing_cost()
+                    * self.centroids.shape[1] * 4.0,
+                    executor="route", component="scan", dtype="f32",
+                )
+            return order
         if dtype == "f32":
             order = _rank_centroids_batch(
                 self.centroid_store.data, Q, self.nlist, metric
@@ -150,6 +258,7 @@ class IVFIndex:
                 self.part_offsets[b], self.part_offsets[b] + self.part_counts[b]
             )
             for b in sel
+            if b >= 0  # tree orders right-pad with -1
         ]
         return np.concatenate(parts) if parts else np.zeros(0, np.int64)
 
@@ -181,7 +290,7 @@ class IVFIndex:
         order = self.partition_order(border, nprobe)
         start_parts = 0
         for b in border[:nprobe]:
-            if self.part_counts[b] > 0:
+            if b >= 0 and self.part_counts[b] > 0:
                 start_parts = int(self.part_counts[b])
                 break
         return order, start_parts
@@ -229,10 +338,18 @@ def build_ivf(
     kmeans_iters: int = 10,
     seed: int = 0,
     precomputed: Optional[tuple[np.ndarray, np.ndarray]] = None,
+    tree: bool | str = "auto",
+    super_k: Optional[int] = None,
+    nprobe_super: Optional[int] = None,
 ) -> IVFIndex:
     """Train k-means (or take precomputed (centroids, assignments) so
     competitors share identical buckets, as the paper does) and pack buckets
-    into PDX partitions."""
+    into PDX partitions.
+
+    ``tree`` controls the two-level centroid routing tree: ``True`` builds
+    it, ``False`` keeps the flat scan, ``"auto"`` builds it once nlist
+    reaches ``TREE_AUTO_NLIST``.  ``super_k`` defaults to ~sqrt(nlist),
+    ``nprobe_super`` to super_k // 4."""
     X = np.asarray(X, np.float32)
     if precomputed is not None:
         centroids, assignments = precomputed
@@ -240,7 +357,7 @@ def build_ivf(
         centroids, assignments = kmeans(X, nlist, iters=kmeans_iters, seed=seed)
     store, offsets, nparts = build_bucketed_store(X, assignments, nlist, capacity)
     cstore = build_flat_store(centroids, capacity=min(1024, max(64, nlist)))
-    return IVFIndex(
+    ivf = IVFIndex(
         store=store,
         centroid_store=cstore,
         centroids=jnp.asarray(centroids),
@@ -248,3 +365,7 @@ def build_ivf(
         part_counts=nparts,
         nlist=nlist,
     )
+    want_tree = tree is True or (tree == "auto" and nlist >= TREE_AUTO_NLIST)
+    if want_tree:
+        ivf.attach_tree(super_k, nprobe_super, seed=seed)
+    return ivf

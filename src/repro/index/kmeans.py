@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["kmeans", "assign"]
+__all__ = ["kmeans", "assign", "build_centroid_tree"]
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))
@@ -70,3 +70,59 @@ def kmeans(
         centroids, _ = _update(X, a, centroids)
     a = assign(X, centroids, chunk)
     return np.asarray(centroids), np.asarray(a)
+
+
+def build_centroid_tree(
+    centroids: np.ndarray,
+    super_k: int,
+    *,
+    iters: int = 10,
+    seed: int = 0,
+    balance: float = 1.5,
+) -> tuple[np.ndarray, np.ndarray]:
+    """k-means over the centroids themselves -> a two-level routing tree.
+
+    Returns ``(super_centroids (SK, D) float32, children (SK, M) int32)``
+    where row ``s`` of ``children`` lists the centroid ids assigned to
+    super-centroid ``s``, right-padded with -1 to the max child count M.
+    The child lists partition ``[0, K)``: every centroid appears in exactly
+    one row, so ranking the top super-centroids and then only their
+    children visits ``SK + nprobe_super * M`` centroids instead of K —
+    sub-linear routing for nlist ~ 10^5 when SK ~ sqrt(K).
+
+    The child table is -1-padded to the *fattest* super, so one runaway
+    cluster would inflate M (and the routing cost bound) for every super.
+    ``balance`` caps each super at ``ceil(balance * K / SK)`` children:
+    centroids are assigned greedily (closest-first) to their nearest
+    super with room, guaranteeing ``M <= ceil(balance * K / SK)``
+    regardless of how lopsided the k-means clustering came out.
+    """
+    centroids = np.asarray(centroids, np.float32)
+    K = centroids.shape[0]
+    super_k = int(min(max(super_k, 1), K))
+    sc, _ = kmeans(centroids, super_k, iters=iters, seed=seed)
+    cap = max(int(np.ceil(balance * K / super_k)), 1)
+    # (K, SK) distances; SK ~ sqrt(K), so this stays small even at 10^5.
+    d2 = (
+        np.sum(centroids * centroids, axis=1, keepdims=True)
+        - 2.0 * centroids @ sc.T
+        + np.sum(sc * sc, axis=1)[None, :]
+    )
+    pref = np.argsort(d2, axis=1)           # each centroid's super order
+    order = np.argsort(d2.min(axis=1))      # closest-first claim order
+    room = np.full(super_k, cap, np.int64)
+    a = np.empty(K, np.int64)
+    for cid in order:
+        for s in pref[cid]:
+            if room[s] > 0:
+                a[cid] = s
+                room[s] -= 1
+                break
+    counts = np.bincount(a, minlength=super_k)
+    M = max(int(counts.max()), 1)
+    children = np.full((super_k, M), -1, np.int32)
+    fill = np.zeros(super_k, np.int64)
+    for cid, s in enumerate(a):
+        children[s, fill[s]] = cid
+        fill[s] += 1
+    return sc, children

@@ -216,7 +216,7 @@ def fused_demand_bytes(
 # --------------------------------------------------------------- wire models
 def routed_batch_bytes(
     rp, *, n_shards: int, D: int, C: int, num_slots: int, nprobe: int,
-    k: int, bytes_per_value: int = 4, rerank_mult: int = 4,
+    k: int, bytes_per_value: float = 4.0, rerank_mult: int = 4,
     quantized: bool = False,
 ) -> dict[str, float]:
     """Per-batch byte totals of one routed-bucket search under

@@ -30,11 +30,14 @@ executor
 maintenance (optional)
     Periodically clones the store under the lock, runs
     ``MutablePDXStore.repack()`` on the clone OFF the serving path, and
-    posts a version-fenced swap: the executor adopts the repacked tiles
-    only if no mutation landed since the clone (``MutablePDXStore.adopt``)
-    — a stale clone is simply discarded and retried later.  Compaction
-    never blocks a query; BSA recalibration (which rewrites live vectors)
-    deliberately stays with the synchronous ``engine.compact()``.
+    posts a version-fenced swap.  Mutations that land while the clone
+    repacks are recorded in the store's oplog and REPLAYED onto the clone
+    before adoption (``MutablePDXStore.oplog_start``/``replay``), so under
+    continuous traffic the repack work is adopted instead of discarded;
+    only an overflowed oplog (mutation flood) or replay id divergence
+    falls back to discard-and-retry.  Compaction never blocks a query;
+    BSA recalibration (which rewrites live vectors) deliberately stays
+    with the synchronous ``engine.compact()``.
 
 Backpressure and deadlines: the admission queue is bounded — a full queue
 rejects at ``submit`` time with ``ServerOverloaded`` (bounded queue =
@@ -449,11 +452,30 @@ class VectorServer:
             m.future.set_exception(e)
 
     def _apply_swap(self, s: _Swap) -> None:
+        replayed = 0
         with self._store_lock:
             store = self.engine.store
-            ok = isinstance(store, MutablePDXStore) and store.adopt(
-                s.clone, expect_version=s.expect_version
-            )
+            ok = False
+            if isinstance(store, MutablePDXStore):
+                # delta-replay: mutations that landed while the clone was
+                # repacking were recorded on the serving store; replaying
+                # them onto the repacked clone makes adoption succeed under
+                # continuous traffic instead of discarding the repack work.
+                # ops is None when the log overflowed (or recording never
+                # started) — then only the plain version fence can save us.
+                ops = store.oplog_take()
+                if store.version == s.expect_version:
+                    ok = store.adopt(s.clone, expect_version=s.expect_version)
+                elif ops is not None:
+                    try:
+                        replayed = s.clone.replay(ops)
+                        # we hold the lock on the sole mutator thread, so
+                        # the version cannot move between replay and adopt
+                        ok = store.adopt(
+                            s.clone, expect_version=store.version
+                        )
+                    except ValueError:
+                        ok = False  # id divergence: never adopt
             if ok:
                 self.engine._sync_ivf()
                 if self.engine.pruner.name == "bond":
@@ -471,6 +493,10 @@ class VectorServer:
                 "repro_serve_maintenance_total",
                 event="swap" if ok else "discard",
             )
+            if replayed:
+                _metrics.counter(
+                    "repro_serve_replayed_rows_total", float(replayed)
+                )
 
     def _run_batch(self, b: _Batch) -> None:
         t_run = time.perf_counter()
@@ -545,8 +571,10 @@ class VectorServer:
             with self._store_lock:
                 base = store.version
                 clone = store.clone()
+                store.oplog_start()  # record deltas landing during repack
             clone.repack()  # the expensive part: no lock, off the serving path
             try:
                 self._work.put(_Swap(clone, base), timeout=1.0)
             except queue.Full:
-                pass  # busy server; retry with a fresh clone next interval
+                with self._store_lock:
+                    store.oplog_take()  # stop recording; clone is dropped

@@ -1,0 +1,299 @@
+"""Tiered serving tests: the bucket-granular HBM cache (``BucketCache``),
+the tiered-scan / routed_tiered executors, the two-level centroid routing
+tree, and the maintenance-clone delta replay (oplog)."""
+import numpy as np
+import pytest
+
+import repro.core.engine  # noqa: F401  (breaks the engine<->ivf import cycle)
+from repro.core.engine import VectorSearchEngine
+from repro.core.layout import BucketCache, MutablePDXStore, build_flat_store
+from repro.core.spec import SearchSpec
+from repro.index.ivf import build_ivf
+from repro.obs import metrics as _metrics
+from test_dist import run_devices
+
+
+def _clustered(n, d, k, seed=0):
+    rng = np.random.default_rng(seed)
+    cents = rng.standard_normal((k, d)).astype(np.float32) * 4
+    X = (cents[rng.integers(0, k, n)]
+         + rng.standard_normal((n, d)).astype(np.float32))
+    Q = (cents[rng.integers(0, k, 16)]
+         + rng.standard_normal((16, d)).astype(np.float32))
+    return X.astype(np.float32), Q.astype(np.float32)
+
+
+def _engine(n=4000, d=32, nlist=16, **kw):
+    X, Q = _clustered(n, d, nlist)
+    kw.setdefault("capacity", 64)  # ~4 partitions/bucket: room to evict
+    eng = VectorSearchEngine.build(
+        X, index="ivf", nlist=nlist, pruner="linear", **kw
+    )
+    return eng, X, Q
+
+
+def _recall(ids, ref_ids):
+    ids, ref_ids = np.asarray(ids), np.asarray(ref_ids)
+    k = ids.shape[1]
+    return np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / k
+        for a, b in zip(ids, ref_ids)
+    ])
+
+
+# ------------------------------------------------------------ single host
+def test_tiered_f32_bitwise_parity_with_routed():
+    eng, X, Q = _engine()
+    ref = eng.search(Q, SearchSpec(k=10, nprobe=4))
+    res = eng.search(Q, SearchSpec(k=10, nprobe=4, hbm_slots=64))
+    assert res.plan.executor == "tiered-scan"
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    np.testing.assert_allclose(
+        np.asarray(res.dists), np.asarray(ref.dists), rtol=1e-5
+    )
+
+
+def test_tiered_eviction_readmission_parity_small_capacity():
+    """A cache far smaller than the store forces evict/readmit between
+    batches; results must match a fully-resident cache exactly (f32) and
+    a non-tiered reference at recall 1.0 (int8)."""
+    eng, X, Q = _engine()
+    spec = SearchSpec(k=10, nprobe=4)
+    ref = eng.search(Q, spec)
+    # The smallest legal cache: one query's worst-case routed demand (the
+    # 4 fattest buckets at once).  Well under the store's partition count,
+    # so alternating disjoint query halves forces evict + readmit.
+    cnts = np.sort(np.asarray(eng.ivf.part_counts))
+    slots = int(cnts[-4:].sum())
+    assert slots < eng.store.data.shape[0]
+    small = spec.replace(hbm_slots=slots)
+    for batch in (Q[:8], Q[8:], Q[:8], Q):
+        r = eng.search(batch, small)
+        assert r.plan.executor == "tiered-scan"
+    got = eng.search(Q, small)
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+    got8 = eng.search(Q, small.replace(scan_dtype="int8"))
+    assert _recall(got8.ids, ref.ids) >= 0.95
+
+
+def test_tiered_capacity_floor_raises():
+    """One query's routed buckets must fit the cache at once — below that
+    floor ensure() refuses rather than silently dropping buckets."""
+    eng, X, Q = _engine()
+    with pytest.raises(ValueError, match="hbm_slots"):
+        eng.search(Q, SearchSpec(k=10, nprobe=8, hbm_slots=4))
+
+
+def test_tiered_generation_invalidation_on_repack():
+    """repack()/adopt() bump tiles_version; the cache must drop every slot
+    (generation tag) and repopulate from the new extents correctly."""
+    eng, X, Q = _engine()
+    spec = SearchSpec(k=10, nprobe=4, hbm_slots=64)
+    rng = np.random.default_rng(7)
+    new_ids = eng.insert(X[:3] + rng.standard_normal((3, X.shape[1]))
+                         .astype(np.float32) * 0.01)  # upgrade to mutable
+    eng.search(Q, spec)
+    cache = next(iter(eng.store._tiered_cache.values()))
+    gen0 = cache.generation
+    assert cache.resident_slots > 0
+    eng.delete(new_ids[:1])
+    eng.compact()  # repack -> tiles_version bump
+    ref = eng.search(Q, SearchSpec(k=10, nprobe=4))
+    got = eng.search(Q, spec)
+    assert cache.generation != gen0
+    np.testing.assert_array_equal(np.asarray(got.ids), np.asarray(ref.ids))
+
+
+def test_bucket_cache_lru_evicts_unpinned_only():
+    X, _ = _clustered(2000, 16, 8, seed=3)
+    ivf = build_ivf(X, 8, capacity=64)
+    store = ivf.store
+    cnts = np.asarray(ivf.part_counts)
+    cap = int(cnts.max() * 2 + 1)
+    bc = BucketCache(store, capacity_slots=cap, dtype="f32",
+                     part_offsets=ivf.part_offsets,
+                     part_counts=ivf.part_counts)
+    bc.ensure(np.array([0, 1]))
+    st = bc.ensure(np.array([2]))  # may evict 0 or 1, never 2
+    assert st["misses"] == 1
+    st2 = bc.ensure(np.array([2]))
+    assert st2 == {"hits": 1, "misses": 0, "evicted": 0, "uploaded_slots": 0}
+
+
+# -------------------------------------------------------- two-level routing
+def test_tree_routing_sublinear_cost():
+    """At serving-scale nlist the two-level descent ranks sub-linearly many
+    centroids (SK + nprobe_super * M < nlist) at bucket-recall parity."""
+    eng, X, Q = _engine(n=8000, d=16, nlist=128, tree=True, super_k=16,
+                        nprobe_super=2)
+    ivf = eng.ivf
+    assert ivf.tree_enabled
+    SK, M = ivf.super_children.shape
+    assert ivf.routing_cost() == SK + ivf.nprobe_super * M
+    assert ivf.routing_cost() < ivf.nlist
+    ref = VectorSearchEngine.build(X, index="ivf", nlist=128, capacity=64,
+                                   pruner="linear", tree=False)
+    r_tree = eng.search(Q, SearchSpec(k=10, nprobe=8))
+    r_flat = ref.search(Q, SearchSpec(k=10, nprobe=8))
+    assert _recall(r_tree.ids, r_flat.ids) >= 0.9
+
+
+def test_tree_full_descent_matches_flat_exactly():
+    """nprobe_super == super_k covers every child, so the ranked candidate
+    set equals the flat scan's and the routed buckets are identical."""
+    X, Q = _clustered(3000, 24, 12, seed=5)
+    flat = build_ivf(X, 12, capacity=64, tree=False)
+    tree = build_ivf(X, 12, capacity=64, tree=True, super_k=3, nprobe_super=3)
+    sf = flat.route_batch(Q, nprobe=4)
+    st = tree.route_batch(Q, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(sf), np.asarray(st))
+
+
+def test_tree_auto_threshold():
+    X, _ = _clustered(1500, 16, 8, seed=9)
+    ivf = build_ivf(X, 8, capacity=64)  # tree="auto", nlist < threshold
+    assert not ivf.tree_enabled
+
+
+# ------------------------------------------------------------ delta replay
+def _mutable(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((200, 8)).astype(np.float32)
+    return MutablePDXStore.from_store(build_flat_store(X, capacity=32),
+                                      head_capacity=32), rng
+
+
+def test_oplog_replay_makes_adopt_succeed_under_traffic():
+    ms, rng = _mutable()
+    clone = ms.clone()
+    ms.oplog_start()
+    clone.repack()
+    # traffic lands on the master while the clone repacks
+    ids = ms.insert(rng.standard_normal((3, 8)).astype(np.float32))
+    assert ms.delete(ids[:1]) == 1
+    ops = ms.oplog_take()
+    assert ops is not None and len(ops) == 2
+    replayed = clone.replay(ops)
+    assert replayed == 4  # 3 inserted + 1 deleted
+    assert ms.adopt(clone, expect_version=ms.version)
+    assert ms.num_vectors == 200 + 3 - 1
+    live = np.concatenate([np.asarray(ms.ids).ravel(), ms._head_ids])
+    live = set(live[live >= 0].tolist())
+    assert set(ids[1:].tolist()) <= live and int(ids[0]) not in live
+
+
+def test_oplog_overflow_returns_none():
+    ms, rng = _mutable(1)
+    ms.oplog_start(limit=2)
+    ms.insert(rng.standard_normal((3, 8)).astype(np.float32))
+    assert ms.oplog_take() is None
+    assert ms.oplog_take() is None  # never-started is also None
+
+
+def test_oplog_replay_id_divergence_raises():
+    ms, rng = _mutable(2)
+    clone = ms.clone()
+    ms.oplog_start()
+    ops_ids = ms.insert(rng.standard_normal((2, 8)).astype(np.float32))
+    ops = ms.oplog_take()
+    clone.insert(rng.standard_normal((1, 8)).astype(np.float32))  # diverge
+    with pytest.raises(ValueError, match="id divergence"):
+        clone.replay(ops)
+    del ops_ids
+
+
+def test_server_delta_replay_under_continuous_inserts():
+    """Background repacks under a steady insert stream must keep adopting
+    (delta replay) — every inserted id stays searchable afterwards."""
+    from repro.serve.vector import VectorServer
+
+    rng = np.random.default_rng(11)
+    X = rng.standard_normal((256, 16)).astype(np.float32)
+    eng = VectorSearchEngine.build(X, index="flat", pruner="linear",
+                                   capacity=64)
+    spec = eng.spec.replace(k=4, executor="batch-matmul")
+    with VectorServer(eng, spec=spec, max_batch=8,
+                      maintenance_interval_s=0.01,
+                      head_fill_threshold=0.0) as srv:
+        all_ids = []
+        for _ in range(12):
+            V = rng.standard_normal((4, 16)).astype(np.float32)
+            all_ids.append((srv.insert(V).result(timeout=30), V))
+        import time
+        deadline = time.time() + 15
+        while time.time() < deadline and eng.store.head_count:
+            time.sleep(0.02)
+        for ids, V in all_ids:
+            got, _ = srv.search(V[0])
+            assert got[0] == ids[0]
+    assert eng.store.num_vectors == 256 + 48
+
+
+# ------------------------------------------------------------- observability
+def test_tiered_obs_strict_noop_when_disabled():
+    assert not _metrics.enabled()
+    before = _metrics.get_registry().snapshot()
+    eng, X, Q = _engine(n=2000, nlist=8)
+    eng.search(Q, SearchSpec(k=5, nprobe=4, hbm_slots=64))
+    eng.search(Q[:4], SearchSpec(k=5, nprobe=4, hbm_slots=48))
+    after = _metrics.get_registry().snapshot()
+    assert before == after
+
+
+def test_tiered_cache_gauges_recorded_when_enabled():
+    _metrics.set_enabled(True)
+    try:
+        _metrics.get_registry().reset()
+        eng, X, Q = _engine(n=2000, nlist=8)
+        spec = SearchSpec(k=5, nprobe=4, hbm_slots=64)
+        eng.search(Q, spec)
+        eng.search(Q, spec)  # warm: all hits
+        snap = eng.metrics()
+        ev = {
+            k: v for k, v in snap.get("counters", snap).items()
+            if "repro_tiered_cache_events_total" in str(k)
+        }
+        flat = str(snap)
+        assert "repro_tiered_cache_events_total" in flat
+        assert "repro_tiered_prefetch_bytes_total" in flat
+        assert "hit" in flat and "miss" in flat
+        del ev
+    finally:
+        _metrics.set_enabled(False)
+        _metrics.get_registry().reset()
+
+
+# ------------------------------------------------- routed tiered (8 devices)
+def test_routed_tiered_capacity_smaller_than_store():
+    run_devices("""
+    import repro.core.engine
+    from repro.core.engine import VectorSearchEngine
+    from repro.core.spec import SearchSpec
+
+    rng = np.random.default_rng(0)
+    cents = rng.standard_normal((64, 32)).astype(np.float32) * 4
+    X = (cents[rng.integers(0, 64, 8000)]
+         + rng.standard_normal((8000, 32)).astype(np.float32)).astype(np.float32)
+    Q = (cents[rng.integers(0, 64, 12)]
+         + rng.standard_normal((12, 32)).astype(np.float32)).astype(np.float32)
+    mesh = jax.make_mesh((8,), ("data",))
+    eng = VectorSearchEngine.build(X, index="ivf", nlist=64, pruner="linear",
+                                   capacity=64, mesh=mesh)
+    P = eng.store.data.shape[0]
+    spec = SearchSpec(k=10, nprobe=4)
+    ref = eng.search(Q, spec)
+    assert ref.plan.executor == "routed_bucket", ref.plan.executor
+    tiered = spec.replace(hbm_slots=64)   # 64 slots < P partitions
+    assert 64 < P, P
+    res = eng.search(Q, tiered)
+    assert res.plan.executor == "routed_tiered", res.plan.executor
+    np.testing.assert_array_equal(np.asarray(res.ids), np.asarray(ref.ids))
+    res8 = eng.search(Q, tiered.replace(scan_dtype="int8"))
+    k = 10
+    rec = np.mean([len(set(a.tolist()) & set(b.tolist())) / k
+                   for a, b in zip(np.asarray(res8.ids), np.asarray(ref.ids))])
+    assert rec >= 0.95, rec
+    cache = next(iter(eng.store._tiered_cache.values()))
+    assert cache.resident_slots <= 64
+    print("OK")
+    """)
