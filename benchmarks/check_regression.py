@@ -1,0 +1,96 @@
+"""Perf regression gate: BENCH_*.json vs benchmarks/perf_baseline.json.
+
+Runs after the benchmark smokes in CI and fails the build when a tracked
+metric regresses by more than the tolerance (default 20%) against the
+committed baseline.  Tracked metrics are the PR-level acceptance numbers —
+realized bytes/query, batch-vs-host-loop speedup, warm/cold p50 ratios —
+chosen because they are self-normalized or deterministic and therefore
+stable across runner hardware; raw wall-clock entries get the same
+tolerance but are expected to be the noisiest.
+
+Usage:
+    python -m benchmarks.check_regression            # gate (exit 1 on fail)
+    python -m benchmarks.check_regression --update   # rebase from current
+                                                     # BENCH files
+
+Baseline format (benchmarks/perf_baseline.json):
+    {"tolerance": 0.20,
+     "metrics": {"BENCH_foo.json:dotted.path": {"value": 1.23,
+                                                "better": "lower|higher"}}}
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASELINE = pathlib.Path(__file__).resolve().parent / "perf_baseline.json"
+
+
+def _lookup(record, dotted: str) -> float:
+    cur = record
+    for part in dotted.split("."):
+        cur = cur[part]
+    return float(cur)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument(
+        "--update", action="store_true",
+        help="rewrite the baseline from the current BENCH_*.json files",
+    )
+    args = ap.parse_args(argv)
+
+    base = json.loads(BASELINE.read_text())
+    tol = float(base.get("tolerance", 0.20))
+    failures: list[str] = []
+    for key, meta in sorted(base["metrics"].items()):
+        fname, dotted = key.split(":", 1)
+        path = ROOT / fname
+        if not path.exists():
+            failures.append(f"{key}: {fname} not found — run the bench first")
+            continue
+        try:
+            cur = _lookup(json.loads(path.read_text()), dotted)
+        except (KeyError, TypeError):
+            failures.append(f"{key}: metric missing from {fname}")
+            continue
+        if args.update:
+            meta["value"] = cur
+            print(f"[rebase] {key} = {cur:.6g}")
+            continue
+        ref = float(meta["value"])
+        better = meta.get("better", "lower")
+        if better == "lower":
+            worse = cur > ref * (1.0 + tol)
+        else:
+            worse = cur < ref * (1.0 - tol)
+        status = "FAIL" if worse else "  ok"
+        print(f"[{status}] {key}: current={cur:.6g} baseline={ref:.6g} "
+              f"({better} is better, tolerance {tol:.0%})")
+        if worse:
+            failures.append(
+                f"{key}: {cur:.6g} vs baseline {ref:.6g} "
+                f"(> {tol:.0%} regression, {better} is better)"
+            )
+
+    if args.update:
+        BASELINE.write_text(
+            json.dumps(base, indent=2, sort_keys=True) + "\n"
+        )
+        print(f"wrote {BASELINE}")
+        return 0
+    if failures:
+        print("\nperf regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("perf regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -68,11 +68,20 @@ def main():
     # mirror (0.5 B/dim) re-checks survivors at full dimensionality with a
     # quantization-inflated (still exact-safe) threshold, and an f32
     # re-rank over every remaining survivor keeps results exact.  Later
-    # stages prefetch only the partitions with surviving lanes, so pruned
-    # partitions never leave HBM.  The cascade pays off when IVF routing
-    # seeds a tight threshold (clustered data), so build that shape here —
-    # on it the realized bytes/query land ~5.4x below the one-level int8
-    # fused scan at recall@10 == 1.0 (gated in BENCH_cascade.json).
+    # stages prefetch only the partitions with surviving lanes — at
+    # (partition, d-tile) granularity, so a partition stops streaming at
+    # the first d-tile where its last lane dies.  The cascade pays off
+    # when IVF routing seeds a tight threshold (clustered data), so build
+    # that shape here — on it the realized bytes/query land ~5.4x below
+    # the one-level int8 fused scan at recall@10 == 1.0 (gated in
+    # BENCH_cascade.json).
+    #
+    # Batches take a different executor: at B > 1 the planner dispatches
+    # to cascade-batch, which runs every stage ONCE over the whole batch
+    # on the MXU (shared (B, lanes) survivor bitmap, pow2-compacted union
+    # gather) instead of looping queries on the host.  Ids and distances
+    # are bitwise-equal to the per-query loop; at B=64 it sustains ~3.2x
+    # the queries/s of the host loop (BENCH_cascade.json "batched").
     from repro.obs import metrics
 
     Xc, Qc = make_dataset(16_384, 256, "clustered", n_queries=8, seed=1)
@@ -84,18 +93,20 @@ def main():
                              kernel="jnp")
     metrics.set_enabled(True)
     try:
-        res_c = casc_eng.search(Qc, casc_spec)
+        res_c = casc_eng.search(Qc, casc_spec)       # batch -> cascade-batch
+        res_1 = casc_eng.search(Qc[0], casc_spec)    # single -> cascade-scan
         reg = metrics.get_registry()
         casc_bytes = reg.sum("repro_device_bytes_total",
-                             executor="cascade-scan") / len(Qc)
+                             executor=res_c.plan.executor) / len(Qc)
         surv = [reg.get("repro_cascade_stage_survivors", stage=str(si),
-                        stage_name=st) / len(Qc)
+                        stage_name=st) / (len(Qc) + 1)
                 for si, st in enumerate(casc_spec.cascade[:-1])]
     finally:
         metrics.set_enabled(False)
     int8_full = float(np.prod(casc_eng.store.data.shape))  # 1 B/value
     print(f"cascade {'->'.join(casc_spec.cascade)} "
-          f"({res_c.plan.executor}): recall={recall_at_k(res_c.ids, gtc):.2f}")
+          f"(batch: {res_c.plan.executor}, single: {res_1.plan.executor}): "
+          f"recall={recall_at_k(res_c.ids, gtc):.2f}")
     print(f"  realized bytes/query: {casc_bytes/1e6:.2f} MB "
           f"(int8 mirror full scan: {int8_full/1e6:.2f} MB, "
           f"{int8_full/casc_bytes:.1f}x fewer); mean survivors/stage: "
@@ -136,6 +147,20 @@ def main():
     # fits any query's routed demand; on a skewed (hot-cluster) workload
     # the warm hit rate stays high.  A two-level centroid tree (tree=True)
     # keeps the routing itself sub-linear in nlist.
+    #
+    # Cold misses upload asynchronously: BucketCache.ensure is split into
+    # issue (evict + start the H2D copies, non-blocking) and wait (install
+    # + block once per batch), so chunk N+1's uploads overlap chunk N's
+    # scan through the depth-1 pipeline.  On multi-core hosts / device
+    # backends a staging worker thread quantizes extents host-side so the
+    # wire carries 1-2 bytes/dim instead of f32; on a single-core CPU
+    # backend staging degrades to the fused device quantize (same total
+    # work, one block per batch instead of one per miss).  Set
+    # bc.sync_uploads = True to A/B against the fully synchronous path;
+    # bench_tiered.py gates the cold-miss p50 ratio (<= 0.7 with real
+    # parallelism, cost parity on one core).  The
+    # repro_cache_upload_wait_us histogram and ..._overlap_ratio gauge
+    # below show how much of each upload hid behind compute.
     tiered_eng = VectorSearchEngine.build(
         Xc, index="ivf", nlist=256, capacity=64, pruner="linear",
         tree=True,
@@ -155,6 +180,10 @@ def main():
         res_t = tiered_eng.search(hot, tiered_spec)  # warm: set resident
         hits = reg.sum("repro_tiered_cache_events_total", event="hit") - h0
         miss = reg.sum("repro_tiered_cache_events_total", event="miss") - m0
+        snap = reg.snapshot()
+        up = snap["histograms"].get("repro_cache_upload_wait_us", {}).get("")
+        overlap = snap["gauges"].get(
+            "repro_cache_upload_overlap_ratio", {}).get("")
     finally:
         metrics.set_enabled(False)
     print(f"tiered ({res_t.plan.executor}, {tiered_spec.hbm_slots} of {Pt} "
@@ -163,6 +192,10 @@ def main():
           f"warm cache hit rate={hits / max(hits + miss, 1):.2f}, "
           f"routing cost {tiered_eng.ivf.routing_cost()} of "
           f"{tiered_eng.ivf.nlist} centroids/query")
+    if up and up["count"]:
+        print(f"  async uploads: {up['count']:.0f} waits, mean host block "
+              f"{up['sum']/up['count']/1e3:.2f}ms, last overlap ratio "
+              f"{overlap:.2f} (1.0 = copy fully hidden behind compute)")
 
     # --- online serving: continuous batching over the same engine ---------
     # VectorServer coalesces async submissions into pow2 compiled-shape

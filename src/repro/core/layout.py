@@ -36,7 +36,12 @@ exactly like the f32 upload — see the dtype-policy block below.
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
+import functools
+import os
+import threading
+import time
 from typing import Optional, Sequence
 
 import jax
@@ -568,6 +573,61 @@ def _quantize_extent_int4(x, scale, offset):
     return qb[:, 0::2, :] | (qb[:, 1::2, :] << 4)
 
 
+def _locked(fn):
+    """Serialize a ``BucketCache`` entry point on the instance RLock."""
+    @functools.wraps(fn)
+    def inner(self, *args, **kwargs):
+        with self._lock:
+            return fn(self, *args, **kwargs)
+    return inner
+
+
+# Single shared staging worker for async uploads: ``issue`` hands it the
+# f32 extent copy, it quantizes + starts the device transfer off the query
+# thread (NumPy ufuncs release the GIL, so staging genuinely overlaps the
+# scan the query thread is driving).  One worker everywhere keeps upload
+# ordering trivially FIFO and matches the depth-1 ticket discipline.
+_stager: Optional[concurrent.futures.ThreadPoolExecutor] = None
+_stager_lock = threading.Lock()
+
+
+def _stage_pool() -> concurrent.futures.ThreadPoolExecutor:
+    global _stager
+    if _stager is None:
+        with _stager_lock:
+            if _stager is None:
+                _stager = concurrent.futures.ThreadPoolExecutor(
+                    max_workers=1, thread_name_prefix="bucket-cache-stager"
+                )
+    return _stager
+
+
+class _UploadTicket:
+    """In-flight async upload batch from ``BucketCache.issue``: the
+    admission stats, the in-flight staged tiles (a Future from the staging
+    worker per missed extent, or an already-transferred device array on
+    the legacy sync path), the issue timestamp, and the request (for a
+    stale-generation redo).  ``BucketCache.wait`` installs it into the
+    pool.  Holding the pending entries here until ``wait`` is the depth-1
+    double buffer: upload batch N's staging stays alive while batch N+1
+    is being staged, and never deeper — ``issue`` drains any outstanding
+    ticket first."""
+
+    __slots__ = (
+        "stats", "pending", "buckets", "parts", "t_issue", "generation",
+        "done",
+    )
+
+    def __init__(self, stats, pending, buckets, parts, t_issue, generation):
+        self.stats = stats
+        self.pending = pending    # [(slots np, tile Future|dev, ids dev)]
+        self.buckets = buckets
+        self.parts = parts
+        self.t_issue = t_issue
+        self.generation = generation
+        self.done = False
+
+
 def _host_quant_params(
     data: np.ndarray, ids: np.ndarray, means: np.ndarray, dtype: str
 ) -> tuple[np.ndarray, np.ndarray]:
@@ -646,6 +706,18 @@ class BucketCache:
                 np.asarray(part_counts, np.int64),
             )
         self.generation = -1
+        # A/B knob (benches, regression triage): True restores the legacy
+        # upload path — f32 masters over the bus, quantized on device,
+        # blocking at issue — instead of async host-staged transfers.
+        self.sync_uploads = False
+        # Staging strategy: host-side quantize (1-2 bytes/dim over the
+        # bus, staged on the worker thread) pays off when there is a real
+        # H2D bus to shrink or a spare core to stage on.  On a single-core
+        # CPU backend neither exists — the fused device quantizer is less
+        # total work, so async uploads dispatch it without blocking.
+        self.stage_on_host = (
+            jax.default_backend() != "cpu" or (os.cpu_count() or 1) > 1
+        )
         # populated by _revalidate (needs store geometry):
         self._pool = None            # (S, D', C) device, mirror dtype
         self._ids_dev = None         # (S, C) int32 device
@@ -656,8 +728,14 @@ class BucketCache:
         self._offset = None
         self._scale_np = None
         self._offset_np = None
-        self._resident: list = []    # per region: OrderedDict bucket -> slots
+        self._resident: list = []    # per region: OrderedDict key -> slots
         self._free: list = []        # per region: list of free slot indices
+        self._inflight: Optional[_UploadTicket] = None  # depth-1 pipeline
+        # the serving loop prepares batch N+1 (issue) on the batcher thread
+        # while batch N scans (wait/arrays) on the executor thread — every
+        # public entry point takes this; reentrant because ensure nests
+        # issue+wait and a stale-generation wait re-enters ensure.
+        self._lock = threading.RLock()
 
     # ------------------------------------------------------------ geometry
     @property
@@ -681,7 +759,8 @@ class BucketCache:
         return self.capacity_slots - sum(len(f) for f in self._free)
 
     def resident_buckets(self) -> list[int]:
-        return [b for reg in self._resident for b in reg]
+        return [k if isinstance(k, int) else k[0]
+                for reg in self._resident for k in reg]
 
     def _region_of(self, b: int) -> int:
         if self._bucket_region is None:
@@ -752,41 +831,131 @@ class BucketCache:
         self.generation = gen
 
     # ------------------------------------------------------------- serving
-    def ensure(self, buckets) -> dict:
-        """Admit every requested bucket (routed set of the NEXT batch —
-        calling this from the host/prepare phase is the prefetch), evicting
-        cold LRU buckets per region as needed.  Returns
-        ``{"hits", "misses", "evicted", "uploaded_slots"}``.
+    def _host_quantize(self, x: np.ndarray, scale=None, offset=None):
+        """(m, D, C) f32 host extent -> pool-dtype staging array.  NumPy
+        arithmetic bitwise-matching the jitted extent quantizers (sub/div/
+        rint/clip are all exactly-rounded IEEE ops on both paths), so a
+        host-staged upload equals on-device quantization bit for bit —
+        while the H2D copy shrinks to 1-2 bytes per dimension instead of
+        the f32 masters.  ``scale``/``offset`` pin the quant params when
+        the staging worker runs after the issue that captured them."""
+        sc = self._scale_np if scale is None else scale
+        off = self._offset_np if offset is None else offset
+        if self.dtype == "int8":
+            # in-place passes (one ~x-sized temp total): the staging
+            # worker shares cores with the scan, so every avoided
+            # temporary is scan time.  Same sub/div/rint/clip op sequence
+            # as the jitted twin — bitwise parity is load-bearing.
+            q = np.subtract(x, off[None, :, None], dtype=np.float32)
+            np.divide(q, sc[None, :, None], out=q)
+            np.rint(q, out=q)
+            np.clip(q, -127, 127, out=q)
+            return q.astype(np.int8)
+        if self.dtype == "int4":
+            q = np.subtract(x, off[None, :, None], dtype=np.float32)
+            np.divide(q, sc[None, :, None], out=q)
+            np.rint(q, out=q)
+            np.clip(q, -7, 7, out=q)
+            q = q.astype(np.int32)
+            if q.shape[1] % 2:
+                q = np.pad(q, ((0, 0), (0, 1), (0, 0)))
+            qb = (q + 8).astype(np.uint8)
+            return qb[:, 0::2, :] | (qb[:, 1::2, :] << 4)
+        if self.dtype == "bf16":
+            return np.asarray(x, np.float32).astype(jnp.bfloat16)
+        return np.ascontiguousarray(x, np.float32)
 
-        Raises ValueError when one bucket alone exceeds a region (the
-        capacity knob is too small for the store's bucket granularity)."""
+    def _device_quantize(self, ext):
+        """Pool-dtype tile from an on-device f32 extent — the jitted
+        twins of ``_host_quantize`` (bitwise-equal results)."""
+        if self.dtype == "int8":
+            return _quantize_extent_int8(ext, self._scale, self._offset)
+        if self.dtype == "int4":
+            return _quantize_extent_int4(ext, self._scale, self._offset)
+        if self.dtype == "bf16":
+            return ext.astype(jnp.bfloat16)
+        return ext
+
+    @staticmethod
+    def _sub_extent(off, cnt, part):
+        """Row window of sub-extent ``part = (part_i, n_parts)`` of a
+        bucket extent — ceil-divided so every part fits a region."""
+        if part is None:
+            return off, cnt
+        pi, n_parts = part
+        per = -(-cnt // n_parts)
+        return off + pi * per, max(min(per, cnt - pi * per), 0)
+
+    @_locked
+    def resident_ok(self, buckets, parts: Optional[dict] = None) -> bool:
+        """True when every (sub-)extent of the request is still resident —
+        the run loop's cheap guard against a concurrent batch's ``issue``
+        having evicted tiles between this pass's prefetch and its scan."""
+        if getattr(self.store, "tiles_version", 0) != self.generation:
+            return False
+        _, cnts = self._bucket_extent()
+        for b in np.asarray(buckets, np.int64).reshape(-1):
+            b = int(b)
+            if b < 0 or b >= len(cnts) or int(cnts[b]) == 0:
+                continue
+            part = (parts or {}).get(b)
+            key = b if part is None else (b,) + tuple(part)
+            if key not in self._resident[self._region_of(b)]:
+                return False
+        return True
+
+    @_locked
+    def issue(self, buckets, parts: Optional[dict] = None) -> _UploadTicket:
+        """Asynchronous half of ``ensure``: run the LRU admission
+        bookkeeping and hand every missing extent to the staging worker,
+        which host-quantizes it and STARTS its ``jax.device_put`` —
+        returning a ticket whose ``wait`` installs the in-flight copies
+        into the pool.  Staging and copies overlap whatever the query
+        thread and device are executing (the
+        previous chunk's scan in the tiered loop, the previous batch's
+        whole search through the serving handoff).  Depth-1 discipline:
+        issuing while another ticket is in flight waits that one first,
+        so at most one upload batch is ever pending.
+
+        ``parts`` maps bucket -> ``(part_index, n_parts)`` to admit one
+        region-sized sub-extent of a bucket too large for its region; the
+        tiered executor scans each sub-extent in its own pass and merges
+        top-k, so a single query whose routed demand exceeds the slot pool
+        succeeds instead of raising."""
+        if self._inflight is not None:
+            self.wait(self._inflight)
         self._revalidate()
         offs, cnts = self._bucket_extent()
         data, ids, _ = self._masters()
         hits = misses = evicted = uploaded = 0
+        pending: list = []
         seen = set()
         for b in np.asarray(buckets, np.int64).reshape(-1):
             b = int(b)
-            if b < 0 or b in seen:
+            part = (parts or {}).get(b)
+            key = b if part is None else (b,) + tuple(part)
+            if b < 0 or key in seen:
                 continue
-            seen.add(b)
+            seen.add(key)
             cnt = int(cnts[b]) if b < len(cnts) else 0
+            off, cnt = self._sub_extent(int(offs[b]) if cnt else 0, cnt, part)
             if cnt == 0:
                 continue
             r = self._region_of(b)
             res = self._resident[r]
-            if b in res:
+            if key in res:
                 hits += 1
-                res.move_to_end(b)
+                res.move_to_end(key)
                 continue
             misses += 1
             if cnt > self.region_slots:
                 raise ValueError(
                     f"bucket {b} spans {cnt} tiles > region capacity "
-                    f"{self.region_slots}; raise hbm_slots"
+                    f"{self.region_slots}; split it via parts= or raise "
+                    "hbm_slots"
                 )
             while len(self._free[r]) < cnt:
-                # Evict the coldest bucket NOT requested by this batch —
+                # Evict the coldest entry NOT requested by this batch —
                 # everything in ``seen`` is pinned for the upcoming scan.
                 victim = next((o for o in res if o not in seen), None)
                 if victim is None:
@@ -802,71 +971,153 @@ class BucketCache:
             slots = np.asarray(
                 [self._free[r].pop() for _ in range(cnt)], np.int64
             )
-            self._upload(b, slots, data, ids, int(offs[b]), cnt)
-            res[b] = slots
+            ext_ids = np.ascontiguousarray(ids[off : off + cnt], np.int32)
+            ext = np.ascontiguousarray(data[off : off + cnt], np.float32)
+            if self.sync_uploads:
+                # legacy path: the full-width f32 extent crosses the bus,
+                # quantizes on device, and the host stalls until it lands —
+                # bitwise-identical tiles (see _host_quantize), 2-4x the
+                # H2D payload and zero overlap
+                tile = self._device_quantize(jax.device_put(ext))
+                jax.block_until_ready(tile)
+                pending.append((slots, tile, jax.device_put(ext_ids)))
+            elif self.stage_on_host:
+                # quantize + device_put on the staging worker: the heavy
+                # NumPy pass runs off the query thread, overlapping
+                # whatever scan that thread dispatches next, and only the
+                # quantized bytes cross the bus
+                fut = _stage_pool().submit(
+                    lambda x=ext, sc=self._scale_np, of=self._offset_np:
+                        jax.device_put(self._host_quantize(x, sc, of))
+                )
+                pending.append((slots, fut, jax.device_put(ext_ids)))
+            else:
+                # single-core CPU: fused device quantize dispatched
+                # asynchronously — same total work as the legacy path but
+                # ``wait`` blocks once per upload batch, not per miss
+                tile = self._device_quantize(jax.device_put(ext))
+                pending.append((slots, tile, jax.device_put(ext_ids)))
+            res[key] = slots
+            self._slot_ids[slots] = ext_ids
+            self._slot_bucket[slots] = b
             uploaded += cnt
-        if evicted or uploaded:
+            if _metrics.enabled():
+                # actual H2D payload: quantized staging bytes on the
+                # host-staged path, the f32 extent otherwise
+                staged_host = not self.sync_uploads and self.stage_on_host
+                _metrics.counter(
+                    "repro_tiered_prefetch_bytes_total",
+                    float(cnt * self.dim * data.shape[2])
+                    * (self.bytes_per_value if staged_host else 4.0),
+                    dtype=self.dtype,
+                )
+        ticket = _UploadTicket(
+            stats={"hits": hits, "misses": misses,
+                   "evicted": evicted, "uploaded_slots": uploaded},
+            pending=pending, buckets=np.asarray(buckets, np.int64),
+            parts=parts, t_issue=time.perf_counter(),
+            generation=self.generation,
+        )
+        self._inflight = ticket
+        return ticket
+
+    @_locked
+    def wait(self, ticket: Optional[_UploadTicket]) -> dict:
+        """Blocking half of ``ensure``: install the ticket's in-flight
+        copies into the pool (functional ``.at[slots].set`` updates —
+        snapshots captured by earlier ``arrays()`` calls stay consistent),
+        block until the H2D transfers land, and meter how long the host
+        actually waited vs the full issue->complete window
+        (``repro_cache_upload_wait_us`` / ``..._overlap_ratio``): a wait
+        near zero means the copies hid entirely behind compute."""
+        if ticket is None:
+            return {"hits": 0, "misses": 0, "evicted": 0,
+                    "uploaded_slots": 0}
+        if ticket.done:
+            return ticket.stats
+        ticket.done = True
+        if self._inflight is ticket:
+            self._inflight = None
+        if getattr(self.store, "tiles_version", 0) != ticket.generation:
+            # the store mutated mid-flight: the pool is (about to be)
+            # rebuilt; drop the stale copies and re-admit synchronously
+            return self.ensure(ticket.buckets, parts=ticket.parts)
+        t0 = time.perf_counter()
+        if ticket.pending:
+            resolved = []
+            for slots, tile_dev, ids_dev in ticket.pending:
+                if isinstance(tile_dev, concurrent.futures.Future):
+                    tile_dev = tile_dev.result()
+                jslots = jnp.asarray(slots)
+                self._pool = self._pool.at[jslots].set(tile_dev)
+                self._ids_dev = self._ids_dev.at[jslots].set(ids_dev)
+                resolved.append(tile_dev)
+            jax.block_until_ready(resolved)
+            done = time.perf_counter()
+            from ..obs.meters import cache_upload_wait
+
+            cache_upload_wait(
+                (done - t0) * 1e6, (done - ticket.t_issue) * 1e6
+            )
+        stats = ticket.stats
+        if stats["evicted"] or stats["uploaded_slots"]:
             self._slot_bucket_dev = jnp.asarray(self._slot_bucket)
         if _metrics.enabled():
-            if hits:
-                _metrics.counter(
-                    "repro_tiered_cache_events_total", float(hits),
-                    event="hit",
-                )
-            if misses:
-                _metrics.counter(
-                    "repro_tiered_cache_events_total", float(misses),
-                    event="miss",
-                )
-            if evicted:
-                _metrics.counter(
-                    "repro_tiered_cache_events_total", float(evicted),
-                    event="evict",
-                )
+            for key, event in (("hits", "hit"), ("misses", "miss"),
+                               ("evicted", "evict")):
+                if stats[key]:
+                    _metrics.counter(
+                        "repro_tiered_cache_events_total",
+                        float(stats[key]), event=event,
+                    )
             _metrics.gauge(
-                "repro_tiered_cache_resident_slots", float(self.resident_slots)
+                "repro_tiered_cache_resident_slots",
+                float(self.resident_slots),
             )
-        return {
-            "hits": hits, "misses": misses,
-            "evicted": evicted, "uploaded_slots": uploaded,
-        }
+        return stats
 
-    def _upload(self, b, slots, data, ids, off, cnt):
-        x = jnp.asarray(data[off : off + cnt])
-        if self.dtype == "int8":
-            q = _quantize_extent_int8(x, self._scale, self._offset)
-        elif self.dtype == "int4":
-            q = _quantize_extent_int4(x, self._scale, self._offset)
-        elif self.dtype == "bf16":
-            q = x.astype(jnp.bfloat16)
-        else:
-            q = x
-        jslots = jnp.asarray(slots)
-        self._pool = self._pool.at[jslots].set(q)
-        ext_ids = ids[off : off + cnt]
-        self._ids_dev = self._ids_dev.at[jslots].set(jnp.asarray(ext_ids))
-        self._slot_ids[slots] = ext_ids
-        self._slot_bucket[slots] = b
-        if _metrics.enabled():
-            _metrics.counter(
-                "repro_tiered_prefetch_bytes_total",
-                float(cnt * self.dim * data.shape[2]) * self.bytes_per_value,
-                dtype=self.dtype,
-            )
+    @_locked
+    def ensure(self, buckets, parts: Optional[dict] = None) -> dict:
+        """Admit every requested bucket (routed set of the NEXT batch —
+        calling this from the host/prepare phase is the prefetch), evicting
+        cold LRU entries per region as needed.  Returns
+        ``{"hits", "misses", "evicted", "uploaded_slots"}``.  The
+        synchronous composition of ``issue`` + ``wait``; callers that can
+        overlap uploads with compute use the halves directly.
 
+        Raises ValueError only when one bucket alone exceeds a region AND
+        no ``parts`` sub-extent split was requested (the tiered executor
+        always splits, so oversized routed demand succeeds there)."""
+        return self.wait(self.issue(buckets, parts=parts))
+
+    @_locked
     def arrays(self):
         """Snapshot of the device-side cache state for a scan closure:
         ``(pool, slot_ids, slot_bucket, scale, offset)``.  Functional pool
-        updates mean later ``ensure`` calls never mutate these arrays."""
+        updates mean later ``ensure`` calls never mutate these arrays; an
+        in-flight upload ticket is installed first, so the snapshot always
+        reflects everything admitted so far."""
+        if self._inflight is not None:
+            self.wait(self._inflight)
         self._revalidate()
         return (
             self._pool, self._ids_dev, self._slot_bucket_dev,
             self._scale, self._offset,
         )
 
+    @_locked
+    def snapshot(self) -> tuple:
+        """Atomic ``(arrays(), slot_ids copy)`` pair — the run loop's scan
+        inputs and its id-resolution table must come from the same instant
+        or a concurrent ``issue`` could remap ids between the two reads."""
+        return self.arrays(), np.array(self.slot_ids_host(), copy=True)
+
+    @_locked
     def slot_ids_host(self) -> np.ndarray:
         """(S, C) host copy of the pool's vector ids (candidate positions
         from a pool scan resolve to global ids through this)."""
+        if self._inflight is not None:
+            self.wait(self._inflight)
         self._revalidate()
         return self._slot_ids
 

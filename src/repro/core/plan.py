@@ -182,10 +182,12 @@ def plan_search(
         # and only these five scan a reduced-precision device mirror.
         mirror_ok = executor in (
             "fused-scan", "fused-batch", "batch-block-sharded",
-            "routed_bucket", "cascade-scan", "tiered-scan", "routed_tiered",
+            "routed_bucket", "cascade-scan", "cascade-batch", "tiered-scan",
+            "routed_tiered",
         )
         if spec.kernel == "pallas" and not (
-            executor.startswith("fused") or executor == "cascade-scan"
+            executor.startswith("fused")
+            or executor in ("cascade-scan", "cascade-batch")
         ):
             reason += " (kernel='pallas' noted: this executor runs jnp bodies)"
         if spec.scan_dtype != "f32" and not mirror_ok:
@@ -200,10 +202,12 @@ def plan_search(
                 " (hbm_slots ignored: tiered serving needs an IVF index "
                 "and this executor scans a fully-resident store/mirror)"
             )
-        if spec.cascade is not None and executor != "cascade-scan":
+        if spec.cascade is not None and executor not in (
+            "cascade-scan", "cascade-batch"
+        ):
             reason += (
-                " (cascade ignored: only the host-side cascade-scan "
-                "executor runs stage pipelines)"
+                " (cascade ignored: only the host-side cascade executors "
+                "run stage pipelines)"
             )
         return ExecutionPlan(
             executor=executor, reason=reason, n_queries=n_queries,
@@ -325,6 +329,13 @@ def _host_plan(spec, n_queries, ivf, plan, note: str = "") -> ExecutionPlan:
     if spec.cascade is not None:
         body = "pallas" if _resolve_pallas(spec) else "jnp"
         where = "IVF-routed START, " if ivf is not None else ""
+        if n_queries > 1:
+            return plan(
+                "cascade-batch",
+                note + f"multi-resolution cascade {'→'.join(spec.cascade)} "
+                       f"batched over the MXU ({where}kernel={body}, "
+                       f"B={n_queries})",
+            )
         return plan(
             "cascade-scan",
             note + f"multi-resolution cascade {'→'.join(spec.cascade)} "
@@ -516,6 +527,11 @@ def warm_shapes(
             H = jnp.full((store.head_capacity, D), 0.0, jnp.float32)
             Qt = _transform_batch(pruner, jnp.asarray(Qb))
             _head_distances(H, Qt, spec.metric)
+        if spec.cascade is not None:
+            # the cascade executors pick pow2 compaction / re-rank shapes
+            # from runtime survivor counts — compile the whole menu, not
+            # just the one path the warm batch took
+            _warm_cascade_menu(spec, store, pruner, b, _resolve_pallas(spec))
         out[b] = plan.executor
     return out
 
@@ -897,32 +913,35 @@ def _cascade_stage(
     mdata, ids_scan, alive_prev, qs, thr, scale, offset, eps0, d_tile,
     use_pallas, packed, dim, first,
 ):
-    """One cascade scan stage over the (P, D_i, C) stage mirror ``mdata``.
+    """One cascade scan stage over the (P, D_i, C) stage mirror ``mdata``
+    -> ``(dists, alive, streamed)``.
 
     Stage N+1 seeds its keep-mask from stage N's alive bitmap: dead lanes'
     ids are forced to -1, so the kernels' ``ids >= 0`` convention carries
     the mask across stages.  Later stages run through the prefetch-skip
-    wrapper with an alive-partitions-first schedule (tail slots repeat the
-    first partition, whose consecutive identical block index elides the
-    DMA), so fully-pruned partitions' tiles never leave HBM on the Pallas
-    path; the first stage has every partition live and streams plainly."""
+    wrapper's *(partition, d-tile)* pair schedule: entry-dead partitions
+    fetch nothing and a partition stops fetching at the d-tile where its
+    last lane dies (conditional in-kernel DMA on the Pallas path).
+    ``streamed`` is the per-partition fetched-d-tile count the executor
+    meters as realized traffic; the first stage has every partition live
+    and streams plainly (streamed = all tiles)."""
     from ..kernels.ops import (
         pdx_prune_scan_multi_op,
         pdx_prune_scan_multi_prefetch_op,
     )
 
     if first:
-        return pdx_prune_scan_multi_op(
+        P = mdata.shape[0]
+        logical = dim if packed else mdata.shape[1]
+        nd = -(-logical // min(d_tile, logical))
+        dists, alive = pdx_prune_scan_multi_op(
             mdata, ids_scan, qs, thr, scale, offset, eps0=eps0,
             d_tile=d_tile, use_pallas=use_pallas, packed=packed, dim=dim,
         )
+        return dists, alive, jnp.full((P,), float(nd), jnp.float32)
     ids_i = jnp.where(alive_prev, ids_scan, -1)
-    P = mdata.shape[0]
-    part_alive = jnp.any(ids_i >= 0, axis=1)
-    order = jnp.argsort(~part_alive).astype(jnp.int32)  # stable: alive first
-    order = jnp.where(jnp.arange(P) < jnp.sum(part_alive), order, order[0])
     return pdx_prune_scan_multi_prefetch_op(
-        mdata, ids_i, qs, thr, order, scale, offset, eps0=eps0,
+        mdata, ids_i, qs, thr, scale, offset, eps0=eps0,
         d_tile=d_tile, use_pallas=use_pallas, packed=packed, dim=dim,
     )
 
@@ -998,13 +1017,6 @@ def _exec_cascade_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
         for si, ((kind, dt, rank), mirror) in enumerate(
             zip(scan_stages, mirrors)
         ):
-            if si == 0:
-                n_entry = P  # the first stage streams every partition
-            else:
-                n_entry = (
-                    int(np.asarray(jnp.any(alive, axis=1).sum()))
-                    if meter else P
-                )
             # exact-safe quantization slack: anything within thr of the
             # query sits within (sqrt(thr) + qerr)^2 in dequantized space
             thr_q = (jnp.sqrt(thr) + qerrs[si]) ** 2
@@ -1022,18 +1034,22 @@ def _exec_cascade_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
                 eps_i, d_tile = eps0, 64
             sc = mirror.scale if mirror.quantized else None
             off = mirror.offset if mirror.quantized else None
-            dists, alive = _cascade_stage(
+            dists, alive, streamed = _cascade_stage(
                 mirror.data, ids_scan, alive, qs, thr_i, sc, off,
                 eps_i, d_tile, use_pallas, mirror.packed, mirror.dim,
                 si == 0,
             )
             if meter:
                 n_surv = float(np.asarray(alive.sum()))
-                # realized HBM traffic: the first stage streams all P
-                # partitions; a prefetch-skip stage only fetches the
-                # scheduled (alive-at-entry) partitions' tiles
+                # realized HBM traffic at d-tile granularity: a partition
+                # fetched ``streamed`` tiles of this stage's mirror before
+                # its last lane died (the first stage streams everything)
+                dims_f = np.minimum(
+                    np.asarray(streamed, np.float64) * d_tile,
+                    float(mirror.dim),
+                )
                 stage_bytes = (
-                    float(n_entry) * mirror.dim * C * mirror.bytes_per_value
+                    float(dims_f.sum()) * C * mirror.bytes_per_value
                 )
                 if stats is not None:
                     computed += lanes_in * mirror.dim
@@ -1044,6 +1060,16 @@ def _exec_cascade_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
                     )
                     _metrics.counter(
                         "repro_cascade_stage_bytes", stage_bytes,
+                        stage=str(si), stage_name=spec.cascade[si],
+                    )
+                    # what partition-granular skip would have streamed (an
+                    # entering partition fetches its FULL stage mirror) —
+                    # the realized counter above undercuts this by exactly
+                    # the mid-scan d-tile savings
+                    _metrics.counter(
+                        "repro_cascade_stage_bytes_partition_model",
+                        float((np.asarray(streamed) > 0).sum())
+                        * mirror.dim * C * mirror.bytes_per_value,
                         stage=str(si), stage_name=spec.cascade[si],
                     )
                     _metrics.counter(
@@ -1086,6 +1112,246 @@ def _exec_cascade_scan(store, pruner, Q, spec, *, ivf, mesh, stats):
     with _trace.span("rerank", fused="in-kernel", rk=rk):
         pass
     return np.stack(out_i), np.stack(out_d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("eps0", "d_tile", "use_pallas", "packed", "dim"),
+)
+def _cascade_batch_stage(
+    mdata, idx, alive, qs, thr, scale, offset, eps0, d_tile, use_pallas,
+    packed, dim,
+):
+    """One MXU-batched cascade stage: gather the union-survivor columns of
+    the (P, D_i, C) stage mirror into a compacted (D_i, S) tile, run the
+    batched d-tile keep-test ladder over the whole query batch, scatter
+    dists/alive back to flat (B, P*C) slot order (flat slot = p*C + c).
+    ``idx`` is the pow2-padded union-survivor index list; pad entries carry
+    P*C and land in a throwaway column that is sliced off."""
+    from ..kernels.ops import batched_cascade_stage_op
+
+    P, Dp, C = mdata.shape
+    PC = P * C
+    B = alive.shape[0]
+    flat = mdata.transpose(1, 0, 2).reshape(Dp, PC)
+    Tc = flat[:, jnp.minimum(idx, PC - 1)]
+    alive_ext = jnp.concatenate(
+        [alive, jnp.zeros((B, 1), alive.dtype)], axis=1
+    )
+    d_c, a_c = batched_cascade_stage_op(
+        Tc, alive_ext[:, idx], qs, thr, scale, offset, eps0=eps0,
+        d_tile=d_tile, use_pallas=use_pallas, packed=packed, dim=dim,
+    )
+    d_full = jnp.zeros((B, PC + 1), jnp.float32).at[:, idx].set(d_c)
+    a_full = jnp.zeros((B, PC + 1), jnp.bool_).at[:, idx].set(a_c)
+    return d_full[:, :PC], a_full[:, :PC]
+
+
+@register_executor("cascade-batch")
+def _exec_cascade_batch(store, pruner, Q, spec, *, ivf, mesh, stats):
+    """Batch-native multi-resolution cascade: each ``spec.cascade`` stage
+    runs ONCE over the whole query batch instead of once per query,
+    carrying a shared (B, P*C) survivor bitmap between stages.
+
+    Per stage, the union of every query's survivors is compacted to a
+    pow2-bucketed column set (compiled shapes stay bounded), the stage
+    mirror's surviving columns are gathered once, and the d-tile ladder
+    runs through the batched quantized MXU kernel with per-query
+    thresholds — a column fetched for any query is scanned for all B, so
+    stage bytes are paid per batch, not per query.  START threshold
+    seeding and the exact f32 re-rank stay per query with the same
+    arithmetic as ``cascade-scan``: the final top-k depends only on the
+    survivor bitmap and the exact re-rank (the rk cut always covers every
+    survivor), both of which this executor reproduces, so ids match the
+    per-query path bitwise.  The planner keeps the host loop as the B=1
+    fallback."""
+    if spec.metric != "l2":
+        raise ValueError("cascade-batch is L2-only (spec validation "
+                         "enforces this)")
+    if spec.cascade is None:
+        raise ValueError("cascade-batch executor needs spec.cascade")
+    scan_stages = [parse_cascade_stage(s) for s in spec.cascade][:-1]
+    mirrors = [
+        projection_mirror(store, rank, dt) if kind == "proj"
+        else device_mirror(store, dt)
+        for kind, dt, rank in scan_stages
+    ]
+    use_pallas = _resolve_pallas(spec)
+    P, C, D = store.num_partitions, store.capacity, store.dim
+    PC = P * C
+    B = Q.shape[0]
+    rk = min(spec.rerank_mult * spec.k, PC)
+    prune = pruner.name == "adsampling" and pruner.aux is not None
+    eps0 = float(pruner.aux["eps0"]) if prune else 2.1
+    qerrs = [_quant_err_norm(m) for m in mirrors]
+    counts = np.asarray(store.counts)
+    meter = stats is not None or _metrics.enabled()
+    # START stays per query (exact arithmetic parity with cascade-scan)
+    qts, starts, p0s = [], [], []
+    for q in Q:
+        qt = pruner.transform_query(jnp.asarray(q, jnp.float32))
+        p0 = 0
+        if ivf is not None:
+            order, _ = ivf.route(qt, 1, "l2", dtype=spec.route_dtype)
+            if len(order):
+                p0 = int(order[0])
+        starts.append(topk_from_batch(
+            pdx_distance(store.data[p0], qt, "l2"), store.ids[p0], spec.k
+        ))
+        qts.append(qt)
+        p0s.append(p0)
+    Qt = jnp.stack(qts)                                   # (B, D)
+    thr = jnp.stack([topk_threshold(s) for s in starts])  # (B,)
+    p0_arr = np.asarray(p0s, np.int32)
+    slot_part = jnp.arange(PC, dtype=jnp.int32) // C
+    alive = (store.ids.reshape(-1)[None, :] >= 0) & (
+        slot_part[None, :] != jnp.asarray(p0_arr)[:, None]
+    )                                                     # (B, P*C)
+    lanes_in = (counts.sum() - counts[p0_arr]).astype(np.float64)
+    computed = counts[p0_arr].astype(np.float64) * D
+    dists = None
+    for si, ((kind, dt, rank), mirror) in enumerate(
+        zip(scan_stages, mirrors)
+    ):
+        thr_q = (jnp.sqrt(thr) + qerrs[si]) ** 2
+        if kind == "proj":
+            Qs = Qt @ mirror.components
+            thr_i, eps_i, d_tile = thr_q, 0.0, rank
+        else:
+            Qs = Qt
+            thr_i = thr_q if prune else jnp.full((B,), np.inf, jnp.float32)
+            eps_i, d_tile = eps0, 64
+        # host-synced union count -> pow2-bucketed compacted shape
+        union = np.asarray(jnp.any(alive, axis=0))
+        S = pow2_bucket(max(int(union.sum()), 1), PC)
+        nz = np.flatnonzero(union)
+        idx_np = np.full((S,), PC, np.int32)
+        idx_np[: nz.size] = nz
+        idx = jnp.asarray(idx_np)
+        sc = mirror.scale if mirror.quantized else None
+        off = mirror.offset if mirror.quantized else None
+        dists, alive = _cascade_batch_stage(
+            mirror.data, idx, alive, Qs, thr_i, sc, off, eps_i, d_tile,
+            use_pallas, mirror.packed, mirror.dim,
+        )
+        if meter:
+            surv_b = np.asarray(jnp.sum(alive, axis=1)).astype(np.float64)
+            # realized traffic: the compacted union columns are gathered
+            # once and shared by the whole batch — the batched path's
+            # bytes win over B per-query mirror walks
+            stage_bytes = float(S) * mirror.dim * mirror.bytes_per_value
+            if stats is not None:
+                computed += lanes_in * mirror.dim
+            if _metrics.enabled():
+                _metrics.counter(
+                    "repro_cascade_stage_survivors", float(surv_b.sum()),
+                    stage=str(si), stage_name=spec.cascade[si],
+                )
+                _metrics.counter(
+                    "repro_cascade_stage_bytes", stage_bytes,
+                    stage=str(si), stage_name=spec.cascade[si],
+                )
+                _metrics.counter(
+                    "repro_device_bytes_total", stage_bytes,
+                    executor="cascade-batch", component="scan",
+                    dtype=mirror.dtype,
+                )
+            lanes_in = surv_b
+    # exact per-query finish: rk widens to the survivor count so the
+    # re-rank covers every lane the keep tests spared (see cascade-scan)
+    n_alive_b = np.asarray(jnp.sum(alive, axis=1))
+    out_i, out_d = [], []
+    for b in range(B):
+        n_alive = int(n_alive_b[b])
+        rk_eff = rk
+        if n_alive > rk_eff:
+            rk_eff = min(1 << (n_alive - 1).bit_length(), PC)
+        ids_scan = store.ids.at[p0s[b]].set(-1)
+        res = _cascade_finish(
+            store.data, ids_scan, qts[b], dists[b], alive[b], rk_eff,
+            spec.k, starts[b],
+        )
+        computed[b] += float(rk_eff) * D
+        if _metrics.enabled():
+            _metrics.counter(
+                "repro_device_bytes_total", float(D * C * 4),
+                executor="cascade-batch", component="start", dtype="f32",
+            )
+            _metrics.counter(
+                "repro_device_bytes_total", float(rk_eff * D * 4),
+                executor="cascade-batch", component="rerank", dtype="f32",
+            )
+        out_i.append(np.asarray(res.ids))
+        out_d.append(np.asarray(res.dists))
+    if stats is not None:
+        total = float(counts.sum()) * D
+        stats.values_total += total * B
+        stats.values_computed += float(computed.sum())
+        stats.values_avoided += max(total * B - float(computed.sum()), 0.0)
+        stats.partitions_visited += P * B
+    with _trace.span("rerank", fused="in-kernel", rk=rk):
+        pass
+    return np.stack(out_i), np.stack(out_d)
+
+
+def _warm_cascade_menu(spec, store, pruner, B: int, use_pallas: bool) -> None:
+    """Pre-compile the cascade executors' data-dependent shape menus for
+    batch shape ``B``: every pow2 survivor-compaction width ``S`` the
+    batched stage gather can request, and every pow2-widened re-rank
+    ``rk_eff`` the finish can request.  One real warm batch only seeds the
+    shapes its own survivor counts happen to hit; a serving steady state
+    must mint no executables for ANY survivor profile, so the whole menu
+    compiles up front (it is log2(P*C)-bounded per stage)."""
+    scan_stages = [parse_cascade_stage(s) for s in spec.cascade][:-1]
+    mirrors = [
+        projection_mirror(store, rank, dt) if kind == "proj"
+        else device_mirror(store, dt)
+        for kind, dt, rank in scan_stages
+    ]
+    P, C, D = store.num_partitions, store.capacity, store.dim
+    PC = P * C
+    prune = pruner.name == "adsampling" and pruner.aux is not None
+    eps0 = float(pruner.aux["eps0"]) if prune else 2.1
+    menu = []
+    s = 1
+    while s < PC:
+        menu.append(s)
+        s *= 2
+    menu.append(PC)
+    qt0 = pruner.transform_query(jnp.zeros((D,), jnp.float32))
+    start = topk_from_batch(
+        pdx_distance(store.data[0], qt0, "l2"), store.ids[0], spec.k
+    )
+    if B > 1:  # the B=1 fallback never compacts batched stages
+        alive0 = jnp.zeros((B, PC), jnp.bool_)
+        thr0 = jnp.zeros((B,), jnp.float32)
+        for (kind, dt, rank), mirror in zip(scan_stages, mirrors):
+            Qs = jnp.zeros((B, rank if kind == "proj" else D), jnp.float32)
+            eps_i = 0.0 if kind == "proj" else eps0
+            d_tile = rank if kind == "proj" else 64
+            sc = mirror.scale if mirror.quantized else None
+            off = mirror.offset if mirror.quantized else None
+            for S in menu:
+                idx = jnp.full((S,), PC, jnp.int32)
+                _cascade_batch_stage(
+                    mirror.data, idx, alive0, Qs, thr0, sc, off, eps_i,
+                    d_tile, use_pallas, mirror.packed, mirror.dim,
+                )
+    rk = min(spec.rerank_mult * spec.k, PC)
+    rks = {rk}
+    p = 1
+    while p < PC:
+        if p > rk:
+            rks.add(p)
+        p *= 2
+    if PC > rk:
+        rks.add(PC)  # the widened cut caps at PC (PC need not be pow2)
+    if B > 1:
+        dd, aa = jnp.zeros((PC,), jnp.float32), jnp.zeros((PC,), jnp.bool_)
+    else:
+        dd, aa = jnp.zeros((P, C), jnp.float32), jnp.zeros((P, C), jnp.bool_)
+    for r in sorted(rks):
+        _cascade_finish(store.data, store.ids, qt0, dd, aa, r, spec.k, start)
 
 
 def _get_placement(store, n_shards: int, kind: str, *, ivf=None, axis="data"):
@@ -1461,22 +1727,103 @@ def _tiered_chunks(
     return chunks
 
 
+def _chunk_passes(
+    chunk_sel: np.ndarray, cnts: np.ndarray, region_of, region_slots: int,
+) -> list[tuple[list[int], dict | None]]:
+    """Pass schedule for one chunk's routed bucket union: a list of
+    ``(bucket_list, parts)`` upload requests, each fitting every cache
+    region.  The common case — demand fits — is one full pass.  A bucket
+    whose extent alone exceeds a region is cut into region-sized
+    sub-extents (``parts[b] = (part_i, n_parts)``, ceil-divided), and the
+    items pack greedily into sequential passes; the run loop scans each
+    pass and merges top-k, so a single query whose routed demand exceeds
+    the slot pool succeeds instead of raising."""
+    uniq: list[int] = []
+    for row in chunk_sel:
+        for x in row:
+            x = int(x)
+            if x >= 0 and x < len(cnts) and int(cnts[x]) > 0:
+                uniq.append(x)
+    uniq = list(dict.fromkeys(uniq))
+    demand: dict[int, int] = {}
+    for b in uniq:
+        r = region_of(b)
+        demand[r] = demand.get(r, 0) + int(cnts[b])
+    if all(d <= region_slots for d in demand.values()):
+        return [(uniq, None)]
+    items: list[tuple[int, tuple | None, int]] = []
+    for b in uniq:
+        c = int(cnts[b])
+        if c > region_slots:
+            n_parts = -(-c // region_slots)
+            per = -(-c // n_parts)
+            for pi in range(n_parts):
+                items.append((b, (pi, n_parts), min(per, c - pi * per)))
+        else:
+            items.append((b, None, c))
+    passes: list[tuple[list[int], dict | None]] = []
+    cur: list[int] = []
+    parts: dict[int, tuple] = {}
+    used: dict[int, int] = {}
+    for b, part, size in items:
+        r = region_of(b)
+        if cur and used.get(r, 0) + size > region_slots:
+            passes.append((cur, parts or None))
+            cur, parts, used = [], {}, {}
+        cur.append(b)
+        if part is not None:
+            parts[b] = part
+        used[r] = used.get(r, 0) + size
+    if cur:
+        passes.append((cur, parts or None))
+    return passes
+
+
+def _merge_topk_rows(
+    i1: np.ndarray, d1: np.ndarray, i2: np.ndarray, d2: np.ndarray, k: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Row-wise top-k merge of two (B, k) id/dist result blocks with id
+    dedup — later passes of a split chunk rescan still-resident buckets
+    (and leftover sub-extents), so the same vector can surface twice; the
+    exact re-rank makes duplicate distances identical, keep one."""
+    B = i1.shape[0]
+    out_i = np.full((B, k), -1, np.int64)
+    out_d = np.full((B, k), np.inf, np.float32)
+    for b in range(B):
+        ids = np.concatenate([i1[b], i2[b]])
+        ds = np.concatenate([d1[b], d2[b]]).astype(np.float32)
+        live = ids >= 0
+        ids, ds = ids[live], ds[live]
+        if ids.size == 0:
+            continue
+        order = np.lexsort((ds, ids))
+        ids, ds = ids[order], ds[order]
+        keep = np.ones(ids.size, bool)
+        keep[1:] = ids[1:] != ids[:-1]
+        ids, ds = ids[keep], ds[keep]
+        order = np.argsort(ds, kind="stable")[:k]
+        out_i[b, : order.size] = ids[order]
+        out_d[b, : order.size] = ds[order]
+    return out_i, out_d
+
+
 @dataclasses.dataclass
 class _TieredLaunch:
     """Host-side product of ``_prepare_tiered_host``: the routed set, the
-    chunk schedule, and the FIRST chunk's already-ensured pool snapshot —
-    capturing it at prepare time is the prefetch (uploads overlap the
-    previous batch's device scan through the serving handoff).  Later
-    chunks ensure+snapshot inside ``run``; functional pool updates keep
-    every captured snapshot consistent."""
+    chunk schedule with each chunk's pass schedule, and the FIRST pass's
+    in-flight upload ticket — ``issue``-ing it at prepare time is the
+    prefetch (the H2D copies overlap the previous batch's device scan
+    through the serving handoff, and ``run`` only pays the residual
+    ``wait``).  Later passes issue inside ``run``, one ahead of the scan;
+    functional pool updates keep every captured snapshot consistent."""
 
     cache: BucketCache
     Qt: jax.Array
     Qt_np: np.ndarray
     sel: np.ndarray
     chunks: list
-    first_arrays: tuple
-    first_slot_ids: np.ndarray
+    passes: list
+    ticket: object
     rk: int
     use_pallas: bool
 
@@ -1503,12 +1850,17 @@ def _prepare_tiered_host(store, pruner, Q, spec, *, ivf) -> _TieredLaunch:
         )
     _, cnts = cache._bucket_extent()
     chunks = _tiered_chunks(sel, cnts, cache._region_of, cache.region_slots)
-    with _trace.span("prefetch", buckets=int((sel[chunks[0]] >= 0).sum())):
-        cache.ensure(sel[chunks[0]])
+    passes = [
+        _chunk_passes(sel[chunk], cnts, cache._region_of, cache.region_slots)
+        for chunk in chunks
+    ]
+    blist, parts = passes[0][0]
+    with _trace.span("prefetch", buckets=len(blist)):
+        ticket = cache.issue(np.asarray(blist, np.int64), parts=parts)
     C = store.capacity
     return _TieredLaunch(
         cache=cache, Qt=Qt, Qt_np=np.asarray(Qt), sel=sel, chunks=chunks,
-        first_arrays=cache.arrays(), first_slot_ids=cache.slot_ids_host(),
+        passes=passes, ticket=ticket,
         rk=_tiered_rk(spec, cache, C), use_pallas=_resolve_pallas(spec),
     )
 
@@ -1534,21 +1886,54 @@ def _tiered_stats(stats, store, cache, sel, ivf) -> None:
     stats.partitions_visited += int(np.where(valid, cnts[safe], 0).sum())
 
 
+def _tiered_steps(launch: _TieredLaunch) -> list[tuple[int, int]]:
+    """Flattened (chunk, pass) schedule of a tiered launch."""
+    return [
+        (ci, pi)
+        for ci in range(len(launch.chunks))
+        for pi in range(len(launch.passes[ci]))
+    ]
+
+
+def _tiered_step_ready(cache, launch, ticket, ci, pi):
+    """Settle the step's prefetch ticket and hand back a consistent scan
+    snapshot.  The ticket normally covers exactly this pass; when a
+    concurrent batch's ``issue`` stole slots in between (the serving loop
+    prepares N+1 while N runs), re-admit synchronously — correctness never
+    rides on the overlap."""
+    cache.wait(ticket)
+    blist, parts = launch.passes[ci][pi]
+    if not cache.resident_ok(np.asarray(blist, np.int64), parts=parts):
+        cache.ensure(np.asarray(blist, np.int64), parts=parts)
+    return cache.snapshot()
+
+
+def _tiered_step_issue_next(cache, launch, steps, si):
+    """Start the NEXT step's uploads (host quantize + async H2D) while the
+    step just dispatched is still scanning on device."""
+    if si + 1 >= len(steps):
+        return None
+    nci, npi = steps[si + 1]
+    blist, parts = launch.passes[nci][npi]
+    return cache.issue(np.asarray(blist, np.int64), parts=parts)
+
+
 def _run_tiered_device(launch: _TieredLaunch, store, spec, *, ivf, stats):
-    """Device half: per chunk, (ensure for chunks > 0, whose uploads were
-    not prefetched) -> masked pool scan -> exact host re-rank; chunk
-    results concatenate back into batch order."""
+    """Device half: per (chunk, pass) step, settle the step's prefetch
+    ticket -> masked pool scan -> issue the NEXT step's uploads under the
+    scan -> exact host re-rank; multi-pass chunks (routed demand beyond
+    the slot pool) merge their per-pass top-k, chunk results concatenate
+    back into batch order."""
     cache, sel = launch.cache, launch.sel
     B = sel.shape[0]
     out_i = np.full((B, spec.k), -1, np.int64)
     out_d = np.full((B, spec.k), np.inf, np.float32)
     C = store.capacity
-    for ci, chunk in enumerate(launch.chunks):
-        if ci == 0:
-            arrays, slot_ids = launch.first_arrays, launch.first_slot_ids
-        else:
-            cache.ensure(sel[chunk])
-            arrays, slot_ids = cache.arrays(), cache.slot_ids_host()
+    steps = _tiered_steps(launch)
+    ticket = launch.ticket
+    for si, (ci, pi) in enumerate(steps):
+        chunk = launch.chunks[ci]
+        arrays, slot_ids = _tiered_step_ready(cache, launch, ticket, ci, pi)
         pool, ids_dev, slot_bucket, scale, offset = arrays
         sel_dev = jnp.asarray(sel[chunk], jnp.int32)
         cand = _tiered_pool_scan(
@@ -1556,14 +1941,19 @@ def _run_tiered_device(launch: _TieredLaunch, store, spec, *, ivf, stats):
             scale, offset, launch.rk, spec.metric, launch.use_pallas,
             cache.quantized, packed=cache.packed, dim=cache.dim,
         )
-        # snapshot-consistent id resolution: the chunk's own slot_ids copy
-        chunk_cache_view = _TieredSnapshot(slot_ids)
+        # the scan is in flight: overlap the next step's staging + copy
+        ticket = _tiered_step_issue_next(cache, launch, steps, si)
         ids_c, dists_c = _tiered_rerank(
-            store, chunk_cache_view, cand, launch.Qt_np[chunk], spec.k,
-            spec.metric,
+            store, _TieredSnapshot(slot_ids), cand, launch.Qt_np[chunk],
+            spec.k, spec.metric,
         )
-        out_i[chunk] = ids_c
-        out_d[chunk] = dists_c
+        if pi == 0:
+            out_i[chunk] = ids_c
+            out_d[chunk] = dists_c
+        else:
+            out_i[chunk], out_d[chunk] = _merge_topk_rows(
+                out_i[chunk], out_d[chunk], ids_c, dists_c, spec.k
+            )
         if _metrics.enabled():
             S = cache.capacity_slots
             _metrics.counter(
@@ -1571,6 +1961,7 @@ def _run_tiered_device(launch: _TieredLaunch, store, spec, *, ivf, stats):
                 float(S) * cache.dim * C * cache.bytes_per_value,
                 executor="tiered-scan", component="scan", dtype=cache.dtype,
             )
+    cache.wait(ticket)
     _tiered_stats(stats, store, cache, sel, ivf)
     return out_i, out_d
 
@@ -1699,11 +2090,16 @@ def _prepare_routed_tiered_host(store, pruner, Q, spec, *, ivf, mesh):
             ivf.route_batch(Qt, spec.nprobe, spec.metric, spec.route_dtype)
         )
     chunks = _tiered_chunks(sel, cnts, cache._region_of, cache.region_slots)
-    with _trace.span("prefetch", buckets=int((sel[chunks[0]] >= 0).sum())):
-        cache.ensure(sel[chunks[0]])
+    passes = [
+        _chunk_passes(sel[chunk], cnts, cache._region_of, cache.region_slots)
+        for chunk in chunks
+    ]
+    blist, parts = passes[0][0]
+    with _trace.span("prefetch", buckets=len(blist)):
+        ticket = cache.issue(np.asarray(blist, np.int64), parts=parts)
     return _TieredLaunch(
         cache=cache, Qt=Qt, Qt_np=np.asarray(Qt), sel=sel, chunks=chunks,
-        first_arrays=cache.arrays(), first_slot_ids=cache.slot_ids_host(),
+        passes=passes, ticket=ticket,
         rk=_tiered_rk(spec, cache, store.capacity),
         use_pallas=_resolve_pallas(spec),
     )
@@ -1720,24 +2116,29 @@ def _run_routed_tiered_device(launch: _TieredLaunch, store, spec, *, ivf,
         cache.packed, cache.dim, launch.use_pallas,
     )
     C = store.capacity
-    for ci, chunk in enumerate(launch.chunks):
-        if ci == 0:
-            arrays, slot_ids = launch.first_arrays, launch.first_slot_ids
-        else:
-            cache.ensure(sel[chunk])
-            arrays, slot_ids = cache.arrays(), cache.slot_ids_host()
+    steps = _tiered_steps(launch)
+    ticket = launch.ticket
+    for si, (ci, pi) in enumerate(steps):
+        chunk = launch.chunks[ci]
+        arrays, slot_ids = _tiered_step_ready(cache, launch, ticket, ci, pi)
         pool, ids_dev, slot_bucket, scale, offset = arrays
         sel_dev = jnp.asarray(sel[chunk], jnp.int32)
         cand = fn(
             pool, ids_dev, slot_bucket, sel_dev,
             launch.Qt[jnp.asarray(chunk)], scale, offset,
         )
+        ticket = _tiered_step_issue_next(cache, launch, steps, si)
         ids_c, dists_c = _tiered_rerank(
             store, _TieredSnapshot(slot_ids), cand, launch.Qt_np[chunk],
             spec.k, spec.metric,
         )
-        out_i[chunk] = ids_c
-        out_d[chunk] = dists_c
+        if pi == 0:
+            out_i[chunk] = ids_c
+            out_d[chunk] = dists_c
+        else:
+            out_i[chunk], out_d[chunk] = _merge_topk_rows(
+                out_i[chunk], out_d[chunk], ids_c, dists_c, spec.k
+            )
         if _metrics.enabled():
             from ..obs import meters as _meters
 
@@ -1748,6 +2149,7 @@ def _run_routed_tiered_device(launch: _TieredLaunch, store, spec, *, ivf,
                         * cache.bytes_per_value,
                 "all_gather": float(n_sh * len(chunk) * 2 * launch.rk * 4),
             })
+    cache.wait(ticket)
     _tiered_stats(stats, store, cache, sel, ivf)
     return out_i, out_d
 

@@ -34,6 +34,7 @@ __all__ = [
     "pdx_prune_scan_op",
     "pdx_prune_scan_multi_op",
     "pdx_prune_scan_multi_prefetch_op",
+    "batched_cascade_stage_op",
 ]
 
 # Padding a packed int4 tile must stay harmless after in-kernel unpacking:
@@ -218,7 +219,6 @@ def pdx_prune_scan_multi_prefetch_op(
     ids: jax.Array,
     q: jax.Array,
     thr: jax.Array,
-    order: jax.Array,
     scale: jax.Array | None = None,
     offset: jax.Array | None = None,
     eps0: float = 2.1,
@@ -226,39 +226,54 @@ def pdx_prune_scan_multi_prefetch_op(
     use_pallas: bool = True,
     packed: bool = False,
     dim: int | None = None,
-) -> tuple[jax.Array, jax.Array]:
-    """Prefetch-skip megakernel wrapper for the later cascade stages.
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Prefetch-skip megakernel wrapper for the later cascade stages ->
+    ``(dists (P, V) f32, alive (P, V) bool, streamed (P,) f32)``.
 
-    ``order`` is a (P,) int32 schedule: every partition that still has a
-    live lane (``ids >= 0`` anywhere) listed first, then ``order[0]``
-    repeated for the remaining slots.  The Pallas path indexes HBM through
-    it (dead partitions' tiles are never DMA'd — see
-    ``pdx_prune_scan_multi_prefetch_pallas``) and scatters the slot-ordered
-    outputs back to partition order; partitions missing from ``order``
-    report dist 0 / alive False, which matches the jnp twin because their
-    lanes are all masked dead.  The jnp twin (``use_pallas=False``) ignores
-    ``order`` — identical results, no traffic skip.
+    Builds the *(partition, d-tile)* pair schedule from ``ids`` itself:
+    partitions with any live lane (``ids >= 0``) are listed first,
+    partition-major over their d-tiles; tail slots carry partition -1 and
+    fetch nothing.  On the Pallas path an entry-dead partition's tiles are
+    never DMA'd AND a partition whose last lane dies at d-tile t stops
+    fetching at t (see ``pdx_prune_scan_multi_prefetch_pallas``); slot-
+    ordered outputs scatter back to partition order (dead partitions report
+    dist 0 / alive False / streamed 0).  ``streamed`` counts the d-tiles
+    each partition actually fetched — the realized-traffic meter.  The jnp
+    twin (``use_pallas=False``) computes identical dists/alive and the same
+    streamed model, with no actual traffic skip.
     """
     if not use_pallas:
         D = dim if packed else T.shape[1]
-        dists, alive = ref.pdx_prune_scan_multi_ref(
+        dists, alive, streamed = ref.pdx_prune_scan_multi_dskip_ref(
             T, ids, q, thr, d_tile=min(d_tile, D), eps0=eps0,
             scale=scale, offset=offset, packed=packed, dim=dim,
         )
-        return dists, alive != 0.0
+        return dists, alive != 0.0, streamed
     P, _, V = T.shape
     Tp, idp, qp, sp, op, dt, Dlog, quantized = _prep_multi(
         T, ids, q, scale, offset, d_tile, packed, dim
     )
-    out_d, out_a = pdx_prune_scan_multi_prefetch_pallas(
-        Tp, idp, qp, thr, sp, op, order, eps0, dt,
+    nd = -(-(2 * Tp.shape[1] if packed else Tp.shape[1]) // dt)
+    part_alive = jnp.any(idp >= 0, axis=1)
+    n_alive = jnp.sum(part_alive)
+    perm = jnp.argsort(~part_alive).astype(jnp.int32)  # stable: alive first
+    slot_real = jnp.arange(P) < n_alive                # (P,)
+    sched_p = jnp.where(slot_real, perm, -1)
+    order_p = jnp.repeat(sched_p, nd)                  # (P*nd,) pair schedule
+    order_t = jnp.tile(jnp.arange(nd, dtype=jnp.int32), P)
+    out_d, out_a, out_s = pdx_prune_scan_multi_prefetch_pallas(
+        Tp, idp, qp, thr, sp, op, order_p, order_t, eps0, dt,
         logical_dim=Dlog, quantized=quantized, packed=packed,
     )
-    # slot -> partition scatter; repeated tail slots write identical values
-    Vp = out_d.shape[1]
-    dists = jnp.zeros((P, Vp), jnp.float32).at[order].set(out_d)
-    alive = jnp.zeros((P, Vp), jnp.float32).at[order].set(out_a)
-    return dists[:, :V], alive[:, :V] != 0.0
+    # slot -> partition scatter through the (duplicate-free) permutation;
+    # tail slots write zeros into the partitions the schedule skipped
+    m = slot_real[:, None]
+    dists = jnp.zeros_like(out_d).at[perm].set(jnp.where(m, out_d, 0.0))
+    alive = jnp.zeros_like(out_a).at[perm].set(jnp.where(m, out_a, 0.0))
+    streamed = jnp.zeros((P,), jnp.float32).at[perm].set(
+        jnp.where(slot_real, out_s[:, 0], 0.0)
+    )
+    return dists[:, :V], alive[:, :V] != 0.0, streamed
 
 
 @functools.partial(
@@ -301,3 +316,56 @@ def batched_distance_quant_op(
         Tp, Qp, sp, op, metric, quantized, bt, dt, vt
     )
     return out[:B, :V]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps0", "d_tile", "use_pallas", "packed", "dim")
+)
+def batched_cascade_stage_op(
+    T: jax.Array,
+    alive: jax.Array,
+    Q: jax.Array,
+    thr: jax.Array,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    eps0: float = 2.1,
+    d_tile: int = 64,
+    use_pallas: bool = True,
+    packed: bool = False,
+    dim: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """MXU-batched cascade stage ladder: (Dp, S) compacted survivor columns
+    + (B, D) stage queries -> ((B, S) dists f32, (B, S) alive bool).
+
+    Each d-tile runs through the batched quantized MXU kernel
+    (``batched_distance_quant_op``) over the whole query batch at once,
+    accumulating per-(query, slot) partial distances with frozen
+    accumulators for dead slots; between tiles the ADSampling hypothesis
+    test fires exactly as the per-query megakernel's does —
+    ``acc * (D / d_seen) <= thr * (1 + eps0 / sqrt(d_seen))**2`` with
+    per-query thresholds.  ``alive`` carries the cross-stage survivor
+    bitmap in: slots dead on entry accumulate nothing and never revive.
+    ``packed`` int4 columns unpack to int8 levels once up front; per-tile
+    scale/offset slices ride into the kernel's in-register dequant."""
+    if packed:
+        T = _unpack_int4_levels(T, dim)
+    D = T.shape[0]
+    quantized = scale is not None
+    a = alive.astype(jnp.float32)
+    acc = jnp.zeros((Q.shape[0], T.shape[1]), jnp.float32)
+    d_seen = 0
+    while d_seen < D:
+        hi = min(d_seen + d_tile, D)
+        sc = scale[d_seen:hi] if quantized else None
+        off = offset[d_seen:hi] if quantized else None
+        contrib = batched_distance_quant_op(
+            T[d_seen:hi], Q[:, d_seen:hi], sc, off, metric="l2",
+            use_pallas=use_pallas,
+        )
+        acc = acc + contrib * a
+        d_seen = hi
+        d = jnp.float32(d_seen)
+        bound = thr[:, None] * (1.0 + eps0 / jnp.sqrt(d)) ** 2
+        keep = acc * (D / d) <= bound
+        a = a * keep.astype(jnp.float32)
+    return acc, a != 0.0

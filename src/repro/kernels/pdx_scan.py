@@ -299,9 +299,66 @@ def pdx_prune_scan_multi_pallas(
 
 
 # --------------------------------------------------------------------------
-# Prefetch-skip megakernel: scalar-prefetched partition order so tiles of
-# partitions the previous cascade stage fully pruned are NEVER fetched.
+# Prefetch-skip megakernel: scalar-prefetched (partition, d-tile) pair
+# schedule + in-kernel conditional DMA, so a partition's tiles stop leaving
+# HBM at the d-tile where its last lane dies — not just when the previous
+# cascade stage killed the whole partition.
 # --------------------------------------------------------------------------
+def _prune_scan_dskip_kernel(
+    order_p_ref, order_t_ref, q_ref, ids_ref, thr_ref, scale_ref,
+    offset_ref, x_any, o_ref, alive_ref, str_ref, tile, sem,
+    *, dim: int, d_tile: int, eps0: float, quantized: bool, packed: bool,
+    row_block: int,
+):
+    g = pl.program_id(0)
+    p = order_p_ref[g]
+    t = order_t_ref[g]
+    real = p >= 0
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        str_ref[...] = jnp.zeros_like(str_ref)
+        # tail slots (p < 0) start dead wholesale; real slots seed the
+        # keep-mask from the previous stage's ids (PAD/dead lanes < 0)
+        alive_ref[...] = jnp.where(
+            real, (ids_ref[...] >= 0).astype(alive_ref.dtype), 0.0
+        )
+
+    any_alive = jnp.sum(alive_ref[...]) > 0.0
+
+    # The HBM->VMEM fetch itself is conditional: once every lane of this
+    # partition is pruned, tiles t+1..T are never DMA'd.
+    @pl.when(any_alive)
+    def _fetch_and_compute():
+        dma = pltpu.make_async_copy(
+            x_any.at[p, pl.ds(t * row_block, row_block), :], tile, sem
+        )
+        dma.start()
+        dma.wait()
+        if packed:
+            xi = tile[...].astype(jnp.int32)                 # (dt/2, V)
+            lo = (xi & 0xF) - 8
+            hi = (xi >> 4) - 8
+            x = jnp.stack([lo, hi], axis=1).reshape(
+                2 * xi.shape[0], xi.shape[1]
+            ).astype(jnp.float32)
+        else:
+            x = tile[...].astype(jnp.float32)                # (dt, V)
+        if quantized:
+            x = x * scale_ref[...] + offset_ref[...]
+        q = q_ref[...].astype(jnp.float32)                   # (dt, 1)
+        d = x - q
+        contrib = jnp.sum(d * d, axis=0, keepdims=True)      # (1, V)
+        acc = o_ref[...] + contrib * alive_ref[...]
+        o_ref[...] = acc
+        str_ref[...] += 1.0
+        d_seen = jnp.minimum((t + 1) * d_tile, dim).astype(jnp.float32)
+        bound = thr_ref[0, 0] * (1.0 + eps0 / jnp.sqrt(d_seen)) ** 2
+        keep = (acc * (dim / d_seen) <= bound).astype(jnp.float32)
+        alive_ref[...] = alive_ref[...] * keep
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("eps0", "d_tile", "logical_dim", "quantized", "packed"),
@@ -313,26 +370,33 @@ def pdx_prune_scan_multi_prefetch_pallas(
     thr: jax.Array,
     scale: jax.Array,
     offset: jax.Array,
-    order: jax.Array,
+    order_p: jax.Array,
+    order_t: jax.Array,
     eps0: float = 2.1,
     d_tile: int = 64,
     logical_dim: int | None = None,
     quantized: bool = False,
     packed: bool = False,
-) -> tuple[jax.Array, jax.Array]:
+) -> tuple[jax.Array, jax.Array, jax.Array]:
     """``pdx_prune_scan_multi_pallas`` with a ``PrefetchScalarGridSpec``-driven
-    partition schedule: ``order`` is a (P,) int32 permutation-with-repeats
-    whose leading entries are the partitions still alive after the previous
-    cascade stage and whose tail repeats ``order[0]``.
+    *(partition, d-tile)* pair schedule and d-tile-granular traffic skip.
 
-    The grid still has P slots (grids are static), but the tile BlockSpec
-    indexes HBM through ``order``: a dead partition never appears, and the
-    repeated tail entry resolves to a block the pipeline just fetched, so
-    consecutive identical block indices elide the DMA.  This realizes the
-    bytes model's pruning factor in HBM traffic at partition granularity —
-    the mask alone only saved VPU work.  Outputs are in SLOT order; the
-    caller scatters them back with ``dists.at[order].set(out)`` (dead
-    partitions keep the caller's init values).
+    ``order_p``/``order_t`` are (P*nd,) int32 arrays enumerating the scan as
+    flat pairs, partition-major: slot ``s = g // nd`` runs partition
+    ``order_p[s*nd]`` (its leading entries are the partitions still alive
+    after the previous cascade stage; tail slots carry ``order_p = -1`` and
+    do nothing), and ``order_t[g] = g % nd`` walks that partition's d-tiles.
+    The tile array lives in ANY memory space and each (p, t) tile is fetched
+    with an explicit conditional DMA: an entry-dead partition fetches
+    nothing (partition-granular skip, as before), and a partition whose last
+    lane dies at tile t never fetches tiles t+1..T (the new d-tile-granular
+    skip — previously one surviving lane streamed the whole partition).
+
+    Returns SLOT-ordered ``(dists, alive, streamed)``; ``streamed[s, :]``
+    broadcasts the number of d-tiles slot ``s`` actually fetched, which the
+    caller meters as realized HBM traffic.  The caller scatters slots back
+    to partition order (dead partitions report dist 0 / alive 0 /
+    streamed 0).
     """
     P, Din, V = T.shape
     D = 2 * Din if packed else Din
@@ -341,44 +405,50 @@ def pdx_prune_scan_multi_prefetch_pallas(
         raise ValueError(f"packed scan needs an even d_tile, got {d_tile}")
     nd = pl.cdiv(D, d_tile)
     dim_for_test = logical_dim if logical_dim is not None else D
+    row_block = d_tile // 2 if packed else d_tile
     q2 = q.reshape(D, 1)
     thr2 = jnp.asarray(thr, jnp.float32).reshape(1, 1)
     scale2 = scale.reshape(D, 1)
     offset2 = offset.reshape(D, 1)
-    x_block = (1, d_tile // 2, V) if packed else (1, d_tile, V)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(P, nd),
+        num_scalar_prefetch=2,
+        grid=(P * nd,),
         in_specs=[
-            pl.BlockSpec((d_tile, 1), lambda p, i, order_ref: (i, 0)),
-            pl.BlockSpec(x_block, lambda p, i, order_ref: (order_ref[p], i, 0)),
-            pl.BlockSpec((1, V), lambda p, i, order_ref: (order_ref[p], 0)),
-            pl.BlockSpec((1, 1), lambda p, i, order_ref: (0, 0)),
-            pl.BlockSpec((d_tile, 1), lambda p, i, order_ref: (i, 0)),
-            pl.BlockSpec((d_tile, 1), lambda p, i, order_ref: (i, 0)),
+            pl.BlockSpec((d_tile, 1), lambda g, op, ot: (ot[g], 0)),
+            pl.BlockSpec(
+                (1, V), lambda g, op, ot: (jnp.maximum(op[g], 0), 0)
+            ),
+            pl.BlockSpec((1, 1), lambda g, op, ot: (0, 0)),
+            pl.BlockSpec((d_tile, 1), lambda g, op, ot: (ot[g], 0)),
+            pl.BlockSpec((d_tile, 1), lambda g, op, ot: (ot[g], 0)),
+            pl.BlockSpec(memory_space=pl.ANY),  # tiles: manual DMA only
         ],
         out_specs=[
-            pl.BlockSpec((1, V), lambda p, i, order_ref: (p, 0)),
-            pl.BlockSpec((1, V), lambda p, i, order_ref: (p, 0)),
+            pl.BlockSpec((1, V), lambda g, op, ot: (g // nd, 0)),
+            pl.BlockSpec((1, V), lambda g, op, ot: (g // nd, 0)),
+            pl.BlockSpec((1, V), lambda g, op, ot: (g // nd, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((row_block, V), T.dtype),
+            pltpu.SemaphoreType.DMA(()),
         ],
     )
-
-    def kernel(order_ref, q_ref, x_ref, ids_ref, thr_ref, scale_ref,
-               offset_ref, o_ref, alive_ref):
-        _prune_scan_multi_kernel(
-            q_ref, x_ref, ids_ref, thr_ref, scale_ref, offset_ref,
-            o_ref, alive_ref,
-            dim=dim_for_test, d_tile=d_tile, eps0=eps0,
-            quantized=quantized, packed=packed,
-        )
-
-    dists, alive = pl.pallas_call(
+    kernel = functools.partial(
+        _prune_scan_dskip_kernel,
+        dim=dim_for_test, d_tile=d_tile, eps0=eps0,
+        quantized=quantized, packed=packed, row_block=row_block,
+    )
+    dists, alive, streamed = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((P, V), jnp.float32),
             jax.ShapeDtypeStruct((P, V), jnp.float32),
+            jax.ShapeDtypeStruct((P, V), jnp.float32),
         ],
         interpret=_interpret(),
-    )(order.astype(jnp.int32), q2, T, ids, thr2, scale2, offset2)
-    return dists, alive
+    )(
+        order_p.astype(jnp.int32), order_t.astype(jnp.int32),
+        q2, ids, thr2, scale2, offset2, T,
+    )
+    return dists, alive, streamed

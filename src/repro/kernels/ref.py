@@ -16,6 +16,7 @@ __all__ = [
     "batched_distance_quant_ref",
     "pdx_prune_scan_ref",
     "pdx_prune_scan_multi_ref",
+    "pdx_prune_scan_multi_dskip_ref",
     "dequantize_ref",
 ]
 
@@ -172,3 +173,42 @@ def pdx_prune_scan_multi_ref(
         keep = acc * (D / d) <= bound
         alive = alive * keep.astype(jnp.float32)
     return acc, alive
+
+
+def pdx_prune_scan_multi_dskip_ref(
+    T: jax.Array,
+    ids: jax.Array,
+    q: jax.Array,
+    thr: jax.Array,
+    *,
+    d_tile: int,
+    eps0: float,
+    scale: jax.Array | None = None,
+    offset: jax.Array | None = None,
+    packed: bool = False,
+    dim: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the d-tile-granular prefetch-skip megakernel: identical
+    dists/alive to ``pdx_prune_scan_multi_ref``, plus a per-partition
+    ``streamed`` (P,) count of d-tiles the skipping kernel would actually
+    fetch — a tile is streamed iff any of the partition's lanes is alive
+    when the tile is reached (the hardware path's conditional DMA)."""
+    T32 = dequantize_ref(T, scale, offset, dim_axis=1, packed=packed, dim=dim)
+    P, D, V = T32.shape
+    q32 = q.astype(jnp.float32)
+    acc = jnp.zeros((P, V), jnp.float32)
+    alive = (ids >= 0).astype(jnp.float32)
+    streamed = jnp.zeros((P,), jnp.float32)
+    d_seen = 0
+    while d_seen < D:
+        hi = min(d_seen + d_tile, D)
+        streamed = streamed + jnp.any(alive > 0, axis=1).astype(jnp.float32)
+        blk = T32[:, d_seen:hi, :] - q32[None, d_seen:hi, None]
+        contrib = jnp.sum(blk * blk, axis=1)
+        acc = acc + contrib * alive
+        d_seen = hi
+        d = jnp.float32(d_seen)
+        bound = thr * (1.0 + eps0 / jnp.sqrt(d)) ** 2
+        keep = acc * (D / d) <= bound
+        alive = alive * keep.astype(jnp.float32)
+    return acc, alive, streamed

@@ -49,6 +49,7 @@ __all__ = [
     "routed_batch_bytes",
     "broadcast_batch_bytes",
     "record_device_bytes",
+    "cache_upload_wait",
 ]
 
 
@@ -243,6 +244,23 @@ def broadcast_batch_bytes(
         "broadcast": float(n_shards * B * D * 4),
         "all_gather": float(n_shards * B * 2 * k * 4),
     }
+
+
+def cache_upload_wait(wait_us: float, total_us: float) -> None:
+    """Record one async bucket-cache upload completion: the
+    ``repro_cache_upload_wait_us`` histogram holds how long the host
+    actually blocked on the in-flight H2D copies at ``BucketCache.wait``,
+    and the ``repro_cache_upload_overlap_ratio`` gauge the fraction of the
+    issue->complete window hidden behind compute (1.0 = the copy finished
+    entirely under the overlapped scan, 0.0 = fully synchronous)."""
+    if not metrics.enabled():
+        return
+    metrics.observe("repro_cache_upload_wait_us", float(wait_us))
+    if total_us > 0:
+        metrics.gauge(
+            "repro_cache_upload_overlap_ratio",
+            max(0.0, 1.0 - float(wait_us) / float(total_us)),
+        )
 
 
 def record_device_bytes(executor: str, dtype: str, components: dict) -> None:

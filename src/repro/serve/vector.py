@@ -286,22 +286,25 @@ class VectorServer:
     def metrics(self) -> dict:
         return self.engine.metrics()
 
-    def warmup(self, buckets=None) -> dict:
+    def warmup(self, buckets=None, specs=None) -> dict:
         """Pre-compile every shape bucket (and the shed-nprobe variants, if
         shedding is configured), then snapshot the compile counter for
-        ``jit_compiles_since_warmup``.  Returns {bucket: executor}."""
+        ``jit_compiles_since_warmup``.  ``specs`` adds extra SearchSpecs to
+        warm beyond the server default — e.g. a cascade spec (whose pow2
+        survivor/re-rank shape menus compile exhaustively) or a tiered
+        spec clients are known to send.  Returns {bucket: executor}."""
         if buckets is None:
             buckets = []
             b = 1
             while b <= self.max_batch:
                 buckets.append(b)
                 b *= 2
-        specs = [self.spec]
+        all_specs = [self.spec] + list(specs or ())
         if self.shed_depth is not None and self.engine.ivf is not None:
-            specs.append(self.spec.replace(nprobe=self.shed_nprobe))
+            all_specs.append(self.spec.replace(nprobe=self.shed_nprobe))
         out = {}
         with self._store_lock:
-            for sp in specs:
+            for sp in all_specs:
                 out = warm_shapes(
                     sp, self.engine.store, self.engine.pruner, buckets,
                     ivf=self.engine.ivf, mesh=self.engine.mesh,

@@ -123,8 +123,9 @@ def test_cascade_planner_dispatch():
     p = plan_search(spec, store, 1)
     assert p.executor == "cascade-scan"
     assert "proj8:int8" in p.reason and "cascade" in p.reason
-    p = plan_search(spec, store, 4)  # batches loop through the same executor
-    assert p.executor == "cascade-scan"
+    p = plan_search(spec, store, 4)  # batches go MXU-native
+    assert p.executor == "cascade-batch"
+    assert "proj8:int8" in p.reason
     # no cascade -> the single-level dispatch is untouched
     assert plan_search(SearchSpec(k=5), store, 1).executor == "adaptive"
 
@@ -140,17 +141,18 @@ CASCADES = [
 
 @pytest.mark.parametrize("cascade", CASCADES, ids=lambda c: "→".join(c))
 def test_cascade_exact_and_kernel_parity_on_nonaligned_store(cascade):
-    """cascade-scan vs brute-force ground truth at non-aligned D (50) with
-    PAD lanes (1900 % 256 != 0): recall@k == 1.0 after the f32 re-rank on
-    BOTH kernel bodies, and the Pallas(interpret) ids match the jnp twin
-    exactly (same survivors -> same re-rank candidates)."""
+    """cascade-batch (B=4 dispatch) vs brute-force ground truth at
+    non-aligned D (50) with PAD lanes (1900 % 256 != 0): recall@k == 1.0
+    after the f32 re-rank on BOTH kernel bodies, and the Pallas(interpret)
+    ids match the jnp twin exactly (same survivors -> same re-rank
+    candidates)."""
     X, Q = make_dataset(1900, 50, "clustered", n_queries=4, seed=7)
     gt_ids, gt_d = ground_truth(X, Q, k=5)
     eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=256)
     base = SearchSpec(k=5, cascade=cascade)
 
     res_j = eng.search(Q, base.replace(kernel="jnp"))
-    assert res_j.plan.executor == "cascade-scan", res_j.plan
+    assert res_j.plan.executor == "cascade-batch", res_j.plan
     assert recall_at_k(res_j.ids, gt_ids) == 1.0, (cascade, res_j.ids)
     np.testing.assert_allclose(  # re-ranked distances are exact f32
         np.sort(res_j.dists, axis=1), np.sort(gt_d, axis=1),
@@ -158,6 +160,27 @@ def test_cascade_exact_and_kernel_parity_on_nonaligned_store(cascade):
     )
     res_p = eng.search(Q, base.replace(kernel="pallas"))
     np.testing.assert_array_equal(res_p.ids, res_j.ids)
+
+
+@pytest.mark.parametrize("kernel", ["jnp", "pallas"])
+def test_cascade_batch_matches_per_query_bitwise(kernel):
+    """Forcing the per-query host-loop executor on the same engine and
+    queries returns bitwise-identical ids and distances to the batched
+    executor: the batch path only restructures the stage ladder (shared
+    bitmap, compacted gather), never the survivor set or the exact f32
+    re-rank."""
+    X, Q = make_dataset(1900, 50, "clustered", n_queries=6, seed=11)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=256)
+    for cascade in [("int8", "f32"), ("proj8:int8", "int4", "f32")]:
+        base = SearchSpec(k=5, cascade=cascade, kernel=kernel)
+        res_b = eng.search(Q, base)
+        assert res_b.plan.executor == "cascade-batch", res_b.plan
+        res_s = eng.search(Q, base.replace(executor="cascade-scan"))
+        assert res_s.plan.executor == "cascade-scan", res_s.plan
+        np.testing.assert_array_equal(res_b.ids, res_s.ids)
+        np.testing.assert_array_equal(
+            np.asarray(res_b.dists), np.asarray(res_s.dists)
+        )
 
 
 def test_cascade_on_ivf_store_with_quantized_routing():
@@ -173,7 +196,7 @@ def test_cascade_on_ivf_store_with_quantized_routing():
         spec = SearchSpec(k=5, cascade=("proj8:int8", "int4", "f32"),
                           kernel="jnp", route_dtype=rdt)
         res = eng.search(Q, spec)
-        assert res.plan.executor == "cascade-scan", res.plan
+        assert res.plan.executor == "cascade-batch", res.plan
         assert recall_at_k(res.ids, gt_ids) == 1.0, rdt
 
 

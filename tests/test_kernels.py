@@ -209,3 +209,50 @@ def test_batched_distance_quant_kernel(metric, B, D, V, use_pallas, rng):
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(want), rtol=3e-2, atol=5e-1
     )
+
+
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_prune_scan_prefetch_dtile_skip(use_pallas, rng):
+    """The prefetch-skip wrapper returns (dists, alive, streamed) matching
+    the d-skip oracle on both bodies; entry-dead partitions stream zero
+    tiles, partitions whose last lane dies mid-scan stop at that tile, and
+    the realized d-tile byte model never exceeds (and here strictly
+    undercuts) the partition-granular model."""
+    from repro.kernels.ops import pdx_prune_scan_multi_prefetch_op
+
+    P, D, V = 5, 200, 130
+    T = rng.standard_normal((P, D, V)).astype(np.float32)
+    # partition 0 is near the query (survives), the rest drift further out
+    # so whole partitions and individual lanes die at varying tiles
+    q = T[0, :, 3] + rng.standard_normal(D).astype(np.float32) * 0.01
+    for p in range(1, P):
+        T[p] += p * 0.8
+    ids = rng.integers(0, 10_000, (P, V)).astype(np.int32)
+    ids[:, -7:] = -1
+    ids[4] = -1  # entry-dead partition: must stream nothing
+    full = np.asarray(ref.pdx_distance_ref(jnp.asarray(T[0]), jnp.asarray(q)))
+    thr = jnp.float32(np.partition(full, 10)[10])
+    got_d, got_a, got_s = pdx_prune_scan_multi_prefetch_op(
+        jnp.asarray(T), jnp.asarray(ids), jnp.asarray(q), thr,
+        use_pallas=use_pallas,
+    )
+    want_d, want_a, want_s = ref.pdx_prune_scan_multi_dskip_ref(
+        jnp.asarray(T), jnp.asarray(ids), jnp.asarray(q), thr,
+        d_tile=64, eps0=2.1,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got_d)[np.asarray(got_a)],
+        np.asarray(want_d)[np.asarray(got_a)], rtol=1e-4, atol=1e-4,
+    )
+    np.testing.assert_array_equal(np.asarray(got_a), np.asarray(want_a) != 0)
+    np.testing.assert_array_equal(np.asarray(got_s), np.asarray(want_s))
+    s = np.asarray(got_s)
+    assert s[4] == 0.0
+    n_tiles = -(-D // 64)
+    dtile_bytes = np.minimum(s * 64, D).sum() * V * 4
+    part_bytes = (s > 0).sum() * D * V * 4
+    assert dtile_bytes <= part_bytes
+    # the drifted partitions die mid-scan: the d-tile model must realize
+    # a strict saving over partition-granular skip on this data
+    assert (s[(s > 0)] < n_tiles).any()
+    assert dtile_bytes < part_bytes

@@ -157,9 +157,17 @@ def test_disabled_mode_is_noop():
     assert res.trace is None
     res = eng.search(Q, SearchSpec(k=3, cascade=("int8", "f32"),
                                    kernel="jnp"))
-    assert res.plan.executor == "cascade-scan" and res.trace is None
+    assert res.plan.executor == "cascade-batch" and res.trace is None
     assert reg.dump_json() == before
     assert trace.get_tracer().last() is None
+
+    # the async upload meters too: both the wait histogram and the overlap
+    # gauge must leave the registry untouched when metrics are disabled
+    from repro.obs.meters import cache_upload_wait
+
+    cache_upload_wait(12.5, 100.0)
+    cache_upload_wait(0.0, 0.0)
+    assert reg.dump_json() == before
 
 
 # ------------------------------------------------------------ engine telemetry
@@ -259,8 +267,11 @@ def test_cascade_stage_meters(obs):
     eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=128)
     cascade = ("proj8:int8", "int4", "f32")
     stats = SearchStats()
-    res = eng.search(Q, SearchSpec(k=5, cascade=cascade, kernel="jnp"),
-                     stats=stats)
+    res = eng.search(
+        Q, SearchSpec(k=5, cascade=cascade, kernel="jnp",
+                      executor="cascade-scan"),  # per-query meters under test
+        stats=stats,
+    )
     assert res.plan.executor == "cascade-scan", res.plan
 
     reg = metrics.get_registry()
@@ -281,6 +292,16 @@ def test_cascade_stage_meters(obs):
     P, C, D = (eng.store.num_partitions, eng.store.capacity, eng.store.dim)
     assert byts[0] == pytest.approx(len(Q) * P * 8 * C * 1)
     assert 0 < byts[1] <= len(Q) * P * D * C * 0.5
+    # the realized d-tile meter never exceeds the partition-granular model
+    # (an entering partition billed for its full stage mirror); stage 0's
+    # single proj tile makes them equal there by construction
+    pmodel = [
+        reg.get("repro_cascade_stage_bytes_partition_model", stage=str(si),
+                stage_name=cascade[si])
+        for si in range(2)
+    ]
+    assert byts[0] == pytest.approx(pmodel[0])
+    assert 0 < byts[1] <= pmodel[1]
     # the device-bytes account carries the same scan traffic per dtype,
     # plus the exact f32 START and re-rank components
     assert reg.get("repro_device_bytes_total", executor="cascade-scan",
@@ -300,6 +321,32 @@ def test_cascade_stage_meters(obs):
     assert stats.values_avoided == max(
         stats.values_total - stats.values_computed, 0.0
     )
+
+
+def test_cascade_batch_meters_amortize_bytes(obs):
+    """The batched cascade pays each stage's compacted-union gather ONCE
+    per batch: its scan-bytes account must undercut B per-query mirror
+    walks, and stage-0 bytes equal the pow2-padded union width exactly."""
+    X, Q = make_dataset(2048, 32, "normal", n_queries=4, seed=6)
+    eng = VectorSearchEngine.build(X, pruner="adsampling", capacity=128)
+    cascade = ("proj8:int8", "int4", "f32")
+    res = eng.search(Q, SearchSpec(k=5, cascade=cascade, kernel="jnp"))
+    assert res.plan.executor == "cascade-batch", res.plan
+    reg = metrics.get_registry()
+    P, C = eng.store.num_partitions, eng.store.capacity
+    from repro.core.plan import pow2_bucket
+
+    # every slot outside the per-query START partition enters stage 0; the
+    # batch's union is all live slots minus the intersection of the START
+    # partitions, pow2-padded — with distinct starts that is all P*C slots
+    b0 = reg.get("repro_cascade_stage_bytes", stage="0",
+                 stage_name=cascade[0])
+    assert b0 == pytest.approx(pow2_bucket(P * C, P * C) * 8 * 1)
+    assert b0 <= len(Q) * P * 8 * C  # never worse than B per-query walks
+    assert reg.get("repro_device_bytes_total", executor="cascade-batch",
+                   component="scan", dtype="int8") == b0
+    assert reg.get("repro_device_bytes_total", executor="cascade-batch",
+                   component="rerank", dtype="f32") > 0
 
 
 def test_cache_and_mutation_metrics(obs):

@@ -192,6 +192,24 @@ def test_server_single_query_smallest_bucket_no_recompile():
         assert srv.jit_compiles_since_warmup() == 0
 
 
+def test_server_cascade_warmup_zero_recompiles():
+    """warmup() with a cascade spec compiles the executors' data-dependent
+    pow2 shape menus (survivor compaction S, widened re-rank rk_eff)
+    exhaustively — a served cascade workload whose survivor counts land on
+    shapes the warm batch itself never hit must still mint nothing."""
+    eng, X = _vec_engine(n=1024, dim=32)
+    spec = eng.spec.replace(
+        k=5, cascade=("int8", "f32"), kernel="jnp",
+    )
+    with VectorServer(eng, spec=spec, max_batch=8) as srv:
+        srv.warmup()
+        futs = [srv.submit(X[i]) for i in range(16)]
+        for i, f in enumerate(futs):
+            ids, _ = f.result()
+            assert ids[0] == i
+        assert srv.jit_compiles_since_warmup() == 0
+
+
 def test_server_matches_engine_results():
     eng, X = _vec_engine()
     spec = eng.spec.replace(k=10, executor="batch-matmul")

@@ -76,12 +76,25 @@ def test_tiered_eviction_readmission_parity_small_capacity():
     assert _recall(got8.ids, ref.ids) >= 0.95
 
 
-def test_tiered_capacity_floor_raises():
-    """One query's routed buckets must fit the cache at once — below that
-    floor ensure() refuses rather than silently dropping buckets."""
+def test_tiered_oversized_demand_splits_instead_of_raising():
+    """A slot pool smaller than ONE query's routed demand — even smaller
+    than a single bucket's extent — no longer fails the query: the run
+    loop cuts oversized extents into region-sized sub-extents, scans them
+    in sequential passes, and merges top-k.  Results stay exact (f32)."""
     eng, X, Q = _engine()
+    ref = eng.search(Q, SearchSpec(k=10, nprobe=8))
+    res = eng.search(Q, SearchSpec(k=10, nprobe=8, hbm_slots=4))
+    assert res.plan.executor == "tiered-scan"
+    assert _recall(res.ids, ref.ids) == 1.0
+    np.testing.assert_allclose(
+        np.sort(np.asarray(res.dists), axis=1),
+        np.sort(np.asarray(ref.dists), axis=1), rtol=1e-5,
+    )
+    # direct cache misuse (no parts split requested) still refuses loudly
+    cache = next(iter(eng.store._tiered_cache.values()))
+    big = int(np.argmax(np.asarray(eng.ivf.part_counts)))
     with pytest.raises(ValueError, match="hbm_slots"):
-        eng.search(Q, SearchSpec(k=10, nprobe=8, hbm_slots=4))
+        cache.ensure(np.array([big]))
 
 
 def test_tiered_generation_invalidation_on_repack():
@@ -118,6 +131,85 @@ def test_bucket_cache_lru_evicts_unpinned_only():
     assert st["misses"] == 1
     st2 = bc.ensure(np.array([2]))
     assert st2 == {"hits": 1, "misses": 0, "evicted": 0, "uploaded_slots": 0}
+
+
+# ------------------------------------------------------------- async uploads
+def test_host_quantize_matches_device_quantizers_bitwise():
+    """``issue`` stages uploads by quantizing on the HOST (so the H2D copy
+    moves 1-2 bytes/dim, not f32); NumPy's rint/clip/sub/div must reproduce
+    the jitted device quantizers bit for bit or eviction/readmission could
+    flip candidate sets."""
+    import jax.numpy as jnp
+    from repro.core.layout import (
+        _quantize_extent_int4, _quantize_extent_int8,
+    )
+
+    X, _ = _clustered(3000, 17, 8, seed=5)  # odd D: int4 pads a nibble
+    ivf = build_ivf(X, 8, capacity=64)
+    for dtype, dev_fn in (("int8", _quantize_extent_int8),
+                          ("int4", _quantize_extent_int4)):
+        bc = BucketCache(ivf.store, capacity_slots=32, dtype=dtype,
+                         part_offsets=ivf.part_offsets,
+                         part_counts=ivf.part_counts)
+        bc._revalidate()
+        data, _, _ = bc._masters()
+        ext = np.asarray(data[:7], np.float32)
+        host = bc._host_quantize(ext)
+        dev = np.asarray(dev_fn(
+            jnp.asarray(ext), jnp.asarray(bc._scale_np),
+            jnp.asarray(bc._offset_np),
+        ))
+        np.testing.assert_array_equal(host, dev)
+
+
+def test_async_issue_wait_parity_with_sync_ensure():
+    """The split prefetch (issue -> overlapped work -> wait) must leave the
+    cache in exactly the state one synchronous ensure produces: same slot
+    assignment, bitwise-equal pool tiles and id table, for every pool
+    dtype AND every staging strategy (worker host-quantize, async device
+    quantize, legacy blocking f32 upload); depth-1 discipline auto-drains
+    the previous ticket."""
+    X, _ = _clustered(2000, 16, 8, seed=3)
+    ivf = build_ivf(X, 8, capacity=64)
+    cap = int(np.asarray(ivf.part_counts).max() * 3 + 1)
+    for dtype in ("f32", "bf16", "int8", "int4"):
+        mk = lambda: BucketCache(ivf.store, capacity_slots=cap, dtype=dtype,
+                                 part_offsets=ivf.part_offsets,
+                                 part_counts=ivf.part_counts)
+        sync, asy, dev, leg = mk(), mk(), mk(), mk()
+        asy.stage_on_host = True    # worker staging even on 1-core CI
+        dev.stage_on_host = False   # async fused device quantize
+        leg.sync_uploads = True     # legacy blocking f32 + device quantize
+        sync.ensure(np.array([0, 1, 2]))
+        dev.ensure(np.array([0, 1, 2]))
+        leg.ensure(np.array([0, 1, 2]))
+        t1 = asy.issue(np.array([0, 1]))
+        t2 = asy.issue(np.array([2]))   # depth-1: drains t1 first
+        assert t1.done and not t2.done
+        st = asy.wait(t2)
+        assert st["misses"] == 1
+        assert asy.wait(t2) == st       # idempotent settle
+        ps, _, sbs, _, _ = sync.arrays()
+        pa, _, sba, _, _ = asy.arrays()
+        assert np.asarray(ps).tobytes() == np.asarray(pa).tobytes(), dtype
+        for other in (dev, leg):
+            po, _, _, _, _ = other.arrays()
+            assert np.asarray(ps).tobytes() == np.asarray(po).tobytes(), (
+                dtype, other.stage_on_host, other.sync_uploads)
+        np.testing.assert_array_equal(np.asarray(sbs), np.asarray(sba))
+        np.testing.assert_array_equal(sync.slot_ids_host(),
+                                      asy.slot_ids_host())
+        # arrays() on a cache with an undrained ticket settles it first
+        t3 = asy.issue(np.array([3]))
+        _, ids_dev, _, _, _ = asy.arrays()
+        assert t3.done
+        slots = asy._resident[0][3]
+        off = int(np.asarray(ivf.part_offsets)[3])
+        cnt = int(np.asarray(ivf.part_counts)[3])
+        np.testing.assert_array_equal(
+            asy.slot_ids_host()[slots],
+            np.asarray(ivf.store.ids)[off: off + cnt],
+        )
 
 
 # -------------------------------------------------------- two-level routing
@@ -257,6 +349,13 @@ def test_tiered_cache_gauges_recorded_when_enabled():
         assert "repro_tiered_cache_events_total" in flat
         assert "repro_tiered_prefetch_bytes_total" in flat
         assert "hit" in flat and "miss" in flat
+        # the async upload split meters its settle: the wait histogram
+        # records every non-empty upload batch, and the overlap gauge is a
+        # valid ratio (the warm second batch uploads nothing — no samples)
+        assert "repro_cache_upload_wait_us" in flat
+        reg = _metrics.get_registry()
+        ratio = reg.get("repro_cache_upload_overlap_ratio")
+        assert 0.0 <= ratio <= 1.0
         del ev
     finally:
         _metrics.set_enabled(False)
